@@ -1,0 +1,125 @@
+"""Fig 14/16 analog — Flight/IDEBench workload: per-visualization sequences of
+interaction queries that progressively add selections/group-bys.
+
+Compares Naive, Factorized (cold store), Tre+Offline (only the dashboard
+CJTs), and Treant (online think-time calibration between interactions).
+``--case-study`` prints the per-message runtimes for the 2nd interaction of
+the 2nd visualization (the paper's Fig 16).
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import CJTEngine, MessageStore, Query, Treant, jt_from_catalog
+from repro.core import semiring as sr
+from repro.relational import schema
+from repro.relational.relation import mask_in, mask_range
+
+from .baselines import NaiveExecutor, cold_engine
+from .common import emit, time_fn, timed_interact
+
+
+def workload(cat):
+    """5 visualizations; each: dashboard query + 2 progressive interactions."""
+    d = cat.domains()
+    q = Query.make(cat, ring="sum", measure=("Flights", "dep_delay"))
+    vizzes = {
+        "v1_delay_by_carrier": q.with_group_by("carrier_group"),
+        "v2_delay_by_state": q.with_group_by("airport_state"),
+        "v3_delay_by_month": q.with_group_by("month"),
+        "v4_count_by_dow": Query.make(cat, ring="sum").with_group_by("dow"),
+        "v5_total": q,
+    }
+    seqs = {}
+    for name, q0 in vizzes.items():
+        q1 = q0.with_predicate(mask_in(d["carrier_group"], [0, 1], attr="carrier_group"))
+        if name == "v2_delay_by_state":
+            q2 = q1.with_predicate(mask_in(d["airport_size"], [2, 3], attr="airport_size"))
+        elif name == "v3_delay_by_month":
+            q2 = q1.with_predicate(mask_range(d["delay_bucket"], 3, 10, attr="delay_bucket"))
+        else:
+            q2 = q1.with_group_by(*(q1.group_by + ("dow",)))
+        seqs[name] = [q0, q1, q2]
+    return seqs
+
+
+def run(scale: float = 1.0, case_study: bool = False, think_budget: int | None = None):
+    cat = schema.flight(n_flights=int(300_000 * scale))
+    jt = jt_from_catalog(cat)
+    naive = NaiveExecutor(cat, "Flights")
+    seqs = workload(cat)
+
+    treant = Treant(cat, ring=sr.SUM, jt=jt)
+    offline = Treant(cat, ring=sr.SUM, jt=jt)  # no online calibration
+    t_off, _ = time_fn(
+        lambda: [treant.register_dashboard(v, qs[0]) for v, qs in seqs.items()],
+        repeats=1, warmup=0,
+    )
+    for v, qs in seqs.items():
+        offline.register_dashboard(v, qs[0])
+    emit("flight/CalibrateOffline", t_off, "5 visualizations")
+
+    for viz, qs in seqs.items():
+        for i, q in enumerate(qs):
+            t_n, _ = time_fn(naive.execute, q, repeats=1, warmup=0)
+            def factorized():
+                eng = cold_engine(cat, sr.SUM, jt)
+                f, _ = eng.execute(q)
+                return f.field
+            t_f, _ = time_fn(factorized, repeats=1, warmup=1)
+            t_o, _ = timed_interact(offline, "u", viz, q)
+            t_t, res = timed_interact(treant, "u", viz, q)
+            emit(f"flight/{viz}/q{i}/naive", t_n)
+            emit(f"flight/{viz}/q{i}/factorized", t_f)
+            emit(f"flight/{viz}/q{i}/tre_offline", t_o)
+            emit(f"flight/{viz}/q{i}/treant", t_t,
+                 f"steiner={res.steiner_size} computed={res.stats.messages_computed} "
+                 f"reused={res.stats.messages_reused}")
+            # think-time calibration of the latest interaction query
+            t_cal, n_cal = time_fn(
+                lambda: treant.think_time("u", viz, budget_messages=think_budget),
+                repeats=1, warmup=0,
+            )
+            emit(f"flight/{viz}/q{i}/calibrate_online", t_cal, f"messages={n_cal}")
+    st = treant.cache_stats()
+    emit("flight/store_bytes", st["bytes"] / 1e12, f"messages={st['messages']}")
+
+    if case_study:
+        _case_study(cat, jt, seqs)
+
+
+def _case_study(cat, jt, seqs):
+    """Fig 16: per-message timings for v2's 2nd interaction."""
+    viz = "v2_delay_by_state"
+    q0, q1, q2 = seqs[viz]
+    for label, warm_queries in [
+        ("factorized", []), ("tre_offline", [q0]), ("treant", [q0, q1]),
+    ]:
+        eng = CJTEngine(jt, cat, sr.SUM, store=MessageStore())
+        for qw in warm_queries:
+            eng.calibrate(qw)
+        eng.store.reset_stats()
+        import time as _t
+        placement = eng.place_predicates(q2)
+        root = eng.choose_root(q2, placement)
+        edges = jt.traversal_to_root(root)
+        for (u, v) in edges:
+            t0 = _t.perf_counter()
+            eng.message(q2, u, v, placement)
+            dt = _t.perf_counter() - t0
+            if dt > 1e-4:
+                emit(f"flight/case16/{label}/msg:{u.split(':')[1]}->{v.split(':')[1]}", dt)
+        t0 = _t.perf_counter()
+        eng.absorb(q2, root, placement)
+        emit(f"flight/case16/{label}/absorb:{root.split(':')[1]}", _t.perf_counter() - t0)
+
+
+def main():
+    run(scale=1.0, case_study=True)
+
+
+if __name__ == "__main__":
+    main()

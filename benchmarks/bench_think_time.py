@@ -1,0 +1,48 @@
+"""Fig 15 analog — online-calibration sensitivity.
+
+Latency of the 2nd interaction query as a function of the think-time
+calibration budget (in messages) granted after the 1st: the stepped curve —
+each completed sharable message knocks a chunk off the next query's Steiner
+tree.
+"""
+
+from __future__ import annotations
+
+from repro.core import Treant
+from repro.core import semiring as sr
+from repro.relational import schema
+
+from .bench_flight import workload
+from .common import emit, time_fn
+
+
+def run(scale: float = 0.33):
+    cat = schema.flight(n_flights=int(300_000 * scale))
+    seqs = workload(cat)
+    # pre-warm XLA jit caches so budget=0 isn't charged for compiles
+    warm = Treant(cat, ring=sr.SUM)
+    for viz in seqs:
+        warm.register_dashboard(viz, seqs[viz][0])
+        warm.interact("w", viz, seqs[viz][1])
+        warm.think_time("w", viz)
+        warm.interact("w", viz, seqs[viz][2])
+
+    for viz in ("v1_delay_by_carrier", "v2_delay_by_state", "v3_delay_by_month"):
+        q0, q1, q2 = seqs[viz]
+        budgets = [0, 1, 2, 4, 6, 8]
+        for budget in budgets:
+            treant = Treant(cat, ring=sr.SUM)
+            treant.register_dashboard(viz, q0)
+            treant.interact("u", viz, q1)
+            done = treant.think_time("u", viz, budget_messages=budget) if budget else 0
+            t, res = time_fn(lambda: treant.interact("u", viz, q2), repeats=1, warmup=0)
+            emit(f"think_time/{viz}/budget{budget}", t,
+                 f"calibrated={done} reused={res.stats.messages_reused}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Fig 19/20 analog — TPC-H-style dashboard on the mini TPC-H schema.
+
+Parameterized dashboard queries in the spirit of the paper's rewrites
+(Appendix E): Q3' (revenue by orderdate/shippriority, filtered by
+mktsegment + dates), Q10' (revenue by custkey bucket, filtered by
+returnflag + orderdate).  Interactions vary one parameter value.
+
+Reports Naive / Factorized / Treant latency per parameter (Fig 19),
+speedup vs the annotated bag's row count (Fig 20a), and the message-store
+overhead vs base data size (Fig 20b).  Calib-R/Calib-W map to calibration
+compute vs message materialization bytes (we hold messages in memory; bytes
+are reported instead of Redshift write time).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Query, Treant, jt_from_catalog
+from repro.core import semiring as sr
+from repro.relational import schema
+from repro.relational.relation import mask_in
+
+from .baselines import NaiveExecutor, cold_engine
+from .common import emit, time_fn, timed_interact
+
+
+PARAMS = [
+    # (label, attr, values for the dashboard query, alternate values)
+    ("segment", "mktsegment", [0], [1]),
+    ("orderdate", "orderdate_b", list(range(0, 12)), list(range(12, 24))),
+    ("shipdate", "shipdate_b", list(range(0, 12)), list(range(6, 18))),
+    ("returnflag", "returnflag", [2], [0]),
+    ("ptype", "ptype", [3], [7]),
+]
+
+
+def run(scale: float = 1.0):
+    cat = schema.tpch(n_lineitem=int(300_000 * scale))
+    jt = jt_from_catalog(cat)
+    naive = NaiveExecutor(cat, "Lineitem")
+    d = cat.domains()
+
+    base = Query.make(cat, ring="sum", measure=("Lineitem", "revenue"))
+    q3 = base.with_group_by("orderdate_b", "shippriority").with_predicate(
+        mask_in(d["mktsegment"], [0], attr="mktsegment"))
+    treant = Treant(cat, ring=sr.SUM, jt=jt)
+
+    t_calib, _ = time_fn(lambda: treant.register_dashboard("q3", q3), repeats=1, warmup=0)
+    emit("tpch/q3/Calib-R", t_calib)
+    emit("tpch/q3/Calib-W_bytes", treant.cache_stats()["bytes"] / 1e12,
+         f"{treant.cache_stats()['messages']} messages")
+
+    rows_of = {
+        "mktsegment": cat.get("Customer").num_rows,
+        "orderdate_b": cat.get("Orders").num_rows,
+        "shipdate_b": cat.get("Lineitem").num_rows,
+        "returnflag": cat.get("Lineitem").num_rows,
+        "ptype": cat.get("Lineitem").num_rows,
+    }
+    for label, attr, vals0, vals1 in PARAMS:
+        q = q3.with_predicate(mask_in(d[attr], vals1, attr=attr))
+        t_n, _ = time_fn(naive.execute, q, repeats=1, warmup=0)
+        def factorized():
+            eng = cold_engine(cat, sr.SUM, jt)
+            f, _ = eng.execute(q)
+            return f.field
+        t_f, _ = time_fn(factorized, repeats=1, warmup=1)
+        t_t, res = timed_interact(treant, "u", "q3", q)
+        emit(f"tpch/q3/{label}/naive", t_n)
+        emit(f"tpch/q3/{label}/factorized", t_f)
+        emit(f"tpch/q3/{label}/treant", t_t,
+             f"speedup={t_n / max(t_t, 1e-9):.0f}x bag_rows={rows_of[attr]}")
+        treant.think_time("u", "q3", budget_messages=None)
+    st = treant.cache_stats()
+    base_bytes = sum(
+        cat.get(n).num_rows * (len(cat.get(n).attrs) * 4 + 4) for n in cat.names()
+    )
+    emit("tpch/store_overhead", st["bytes"] / 1e12,
+         f"store={st['bytes']/1e6:.1f}MB base={base_bytes/1e6:.1f}MB "
+         f"ratio={st['bytes']/base_bytes:.2f}")
+
+
+def main():
+    run(scale=2.0)
+
+
+if __name__ == "__main__":
+    main()

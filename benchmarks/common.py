@@ -1,0 +1,52 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def block(x):
+    return jax.block_until_ready(x) if hasattr(x, "block_until_ready") or isinstance(
+        x, (list, tuple, dict)
+    ) else x
+
+
+def time_fn(fn, *args, repeats: int = 3, warmup: int = 1, **kw) -> tuple[float, object]:
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out) if out is not None else None
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out) if out is not None else None
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    """Print one `name,us_per_call,derived` CSV row (brief format)."""
+    ROWS.append((name, seconds * 1e6, derived))
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def timed_interact(treant, session: str, viz: str, q):
+    """Time one Treant interaction with XLA jit caches warm but the message
+    cache in its pre-interaction state (the paper warms caches before timing,
+    §5.2).  Runs once on a store snapshot (warming compiles), restores, then
+    times the real run."""
+    snap = treant.store.snapshot()
+    cur = {k: (v.dashboard_query, v.current) for k, v in treant._sessions.items()}
+    treant.interact(session, viz, q)       # warm XLA jit cache
+    treant.store.restore(snap)
+    for k, (dq, c) in cur.items():
+        treant._sessions[k].current = c
+    t0 = time.perf_counter()
+    res = treant.interact(session, viz, q)
+    return time.perf_counter() - t0, res

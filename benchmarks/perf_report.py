@@ -1,0 +1,66 @@
+"""§Perf hillclimb report: baseline vs variant roofline terms.
+
+Reads baselines from artifacts/dryrun and variants from artifacts/hillclimb,
+derives the three roofline terms for each, and prints before → after per
+variant with the delta on each term.  Appended to EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .roofline import CHIPS, HBM_BW, ICI_BW, PEAK_FLOPS, model_flops
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def terms(cell: dict) -> dict | None:
+    if cell.get("status") != "ok":
+        return None
+    if "analysis" in cell:
+        ex = cell["analysis"]["extrapolated"]
+        flops, bytes_, wire = ex["flops"], ex["bytes"], ex["wire_bytes"]
+    else:  # treant cells: production program IS the full program (no scans)
+        flops = cell["cost_raw"]["flops"]
+        bytes_ = cell["cost_raw"]["bytes_accessed"]
+        wire = cell["collectives_schedule"]["wire_bytes"]
+    return {
+        "compute": flops / PEAK_FLOPS,
+        "memory": bytes_ / HBM_BW,
+        "collective": wire / ICI_BW,
+        "flops": flops, "bytes": bytes_, "wire": wire,
+    }
+
+
+def main():
+    base_cache: dict[str, dict] = {}
+    for var_path in sorted((ART / "hillclimb").glob("*.json")):
+        var = json.loads(var_path.read_text())
+        arch, shape, mesh = var["arch"], var["shape"], var["mesh"]
+        tag = var_path.stem.split("__")[-1]
+        base_name = f"{arch}__{shape}__{mesh}.json"
+        if base_name not in base_cache:
+            bp = ART / "dryrun" / base_name
+            if not bp.exists():
+                bp = ART / "dryrun" / f"{arch}__chain__{mesh}.json"
+            base_cache[base_name] = json.loads(bp.read_text())
+        base = base_cache[base_name]
+        tb, tv = terms(base), terms(var)
+        if not tb or not tv:
+            print(f"{arch} × {shape} [{tag}]: variant status={var.get('status')}")
+            continue
+        scale_b = scale_v = 1.0
+        if arch == "treant_dashboard":
+            scale_v = 1.0 / max(var.get("n_measures", 1), 1)  # per-measure terms
+        print(f"\n## {arch} × {shape} [{tag}]")
+        for t in ("compute", "memory", "collective"):
+            b, v = tb[t] * scale_b, tv[t] * scale_v
+            delta = (v - b) / b * 100 if b else float("nan")
+            print(f"  {t:10s}: {b:.3e} s → {v:.3e} s  ({delta:+.1f}%)")
+        dom = max(("compute", "memory", "collective"), key=lambda t: tb[t] * scale_b)
+        print(f"  dominant-at-baseline: {dom}")
+
+
+if __name__ == "__main__":
+    main()

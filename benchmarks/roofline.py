@@ -1,0 +1,158 @@
+"""Roofline derivation from the dry-run artifacts (brief: §ROOFLINE ANALYSIS).
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  Terms per (arch × shape), single-pod mesh (256 chips):
+
+  compute    = HLO_FLOPs_per_device            / 197e12
+  memory     = HLO_bytes_per_device            / 819e9
+  collective = wire_bytes_per_device           / 50e9
+
+HLO flops/bytes come from the *analysis* compiles (unrolled 1/2-unit
+differencing — trip-count exact, see DESIGN.md §8); collective bytes from the
+parsed per-device SPMD program (ring-model wire bytes; the raw operand-byte
+sum per the brief's formula is also recorded in the artifacts).  MODEL_FLOPS
+is 6·N(active)·tokens for training, 2·N·tokens for prefill/decode — the
+MODEL/HLO ratio exposes remat and masked-attention waste.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = {"single": 256, "multi": 512}
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+OUT = Path(__file__).resolve().parents[1] / "artifacts" / "roofline.md"
+
+
+def model_flops(arch: str, shape: str) -> float:
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    n = cfg.n_active_params()
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * n * tokens
+    if sh.kind == "prefill":
+        return 2.0 * n * sh.global_batch * sh.seq_len
+    return 2.0 * n * sh.global_batch  # decode: one token per sequence
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    cells = []
+    for p in sorted(ART.glob(f"*__{mesh}.json")):
+        d = json.loads(p.read_text())
+        cells.append(d)
+    return cells
+
+
+def derive(cell: dict) -> dict | None:
+    if cell.get("status") != "ok" or "analysis" not in cell:
+        return None
+    ex = cell["analysis"]["extrapolated"]
+    chips = CHIPS[cell["mesh"]]
+    flops = ex["flops"]            # per-device (SPMD program)
+    bytes_ = ex["bytes"]
+    wire = ex["wire_bytes"]
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_x = wire / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x), key=lambda kv: kv[1])
+    mf = model_flops(cell["arch"], cell["shape"]) / chips
+    bound = max(t_c, t_m, t_x)
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+        "dominant": dom[0],
+        "model_flops_per_chip": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+        "mem_gib": cell["memory"]["peak_per_device_bytes"] / 2**30,
+    }
+
+
+def lever(r: dict) -> str:
+    """One sentence: what would move the dominant term down (brief req.)."""
+    arch, shape, dom = r["arch"], r["shape"], r["dominant"]
+    if dom == "collective":
+        if "train" in shape:
+            return ("overlap FSDP weight gathers with compute (collective matmul) "
+                    "and cut gather repeats by lowering grad-accum steps")
+        if "moe" in arch or arch.startswith(("dbrx", "granite")):
+            return "replace one-hot dispatch with sorted ragged all-to-all"
+        return "ring/collective-permute attention over seq shards to overlap ICI with MXU"
+    if dom == "memory":
+        if "decode" in shape:
+            return "KV-cache quantization (int8) and grouped-head cache reads"
+        return "fuse norm/rope/residual chains; widen per-step arithmetic intensity (multi-query fusion)"
+    if arch == "deepseek-coder-33b":
+        return "context-parallel attention (attn_seq_shard=1, measured −87.6% §Perf/B)"
+    return "exact causal-divide attention (attn_mode=divide, measured −47.6% §Perf/A)"
+
+
+def render(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "MODEL/HLO | roofline frac | mem GiB | lever on dominant term |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3e} | {r['t_memory']:.3e} "
+            f"| {r['t_collective']:.3e} | {r['dominant']} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2f} | {r['mem_gib']:.1f} | {lever(r)} |\n"
+        )
+    return hdr + body
+
+
+def dryrun_table() -> str:
+    """§Dry-run summary across BOTH meshes: every cell's compile + memory +
+    collective schedule (artifacts/dryrun_summary.md)."""
+    out = ("| arch | shape | mesh | status | peak GiB/chip | compile s | "
+           "collectives (count) |\n|---|---|---|---|---|---|---|\n")
+    for mesh in ("single", "multi"):
+        for c in load_cells(mesh):
+            if c.get("status") == "skipped":
+                out += (f"| {c['arch']} | {c['shape']} | {mesh} | SKIP "
+                        f"(full-attn @500k) | — | — | — |\n")
+                continue
+            if c.get("status") != "ok":
+                out += f"| {c['arch']} | {c['shape']} | {mesh} | ERROR | — | — | — |\n"
+                continue
+            mem = c["memory"].get("peak_per_device_bytes", 0) / 2**30
+            coll = c.get("collectives_schedule", {}).get("per_op", {})
+            cs = " ".join(f"{k.replace('all-','a')}:{v['count']}" for k, v in sorted(coll.items()))
+            out += (f"| {c['arch']} | {c['shape']} | {mesh} | ok | {mem:.1f} "
+                    f"| {c.get('compile_s', 0):.0f} | {cs} |\n")
+    return out
+
+
+def main():
+    dt = dryrun_table()
+    (OUT.parent / "dryrun_summary.md").parent.mkdir(parents=True, exist_ok=True)
+    (OUT.parent / "dryrun_summary.md").write_text(dt)
+    rows = [d for c in load_cells("single") if (d := derive(c))]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    txt = render(rows)
+    print(txt)
+    skipped = [c for c in load_cells("single") if c.get("status") == "skipped"]
+    for c in skipped:
+        print(f"SKIP {c['arch']} × {c['shape']}: {c['reason'][:80]}")
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text(txt)
+    # csv for EXPERIMENTS
+    import csv
+    with open(OUT.with_suffix(".csv"), "w", newline="") as f:
+        if rows:
+            w = csv.DictWriter(f, fieldnames=list(rows[0]))
+            w.writeheader()
+            w.writerows(rows)
+
+
+if __name__ == "__main__":
+    main()

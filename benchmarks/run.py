@@ -1,0 +1,59 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Scales are reduced for the
+1-vCPU container; relative speedups (the paper's claims) are scale-stable.
+
+  python -m benchmarks.run              # all
+  python -m benchmarks.run dashboard    # one suite
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+SUITES = [
+    ("chain", "bench_chain", "Fig 23: JT vs No-JT on chain joins"),
+    ("dashboard", "bench_dashboard", "Fig 13: Salesforce dashboard"),
+    ("flight", "bench_flight", "Fig 14/16: Flight/IDEBench workload"),
+    ("think_time", "bench_think_time", "Fig 15: calibration sensitivity"),
+    ("ml_aug", "bench_ml_augmentation", "Fig 18: factorized-ML augmentation"),
+    ("tpch", "bench_tpch", "Fig 19/20: TPC-H dashboard"),
+    ("empty_bag", "bench_empty_bag", "Fig 21: empty-bag optimization"),
+    ("cube", "bench_cube", "Fig 24/25: data cubes over CJTs"),
+]
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    failures = []
+    print("name,us_per_call,derived")
+    for key, module, desc in SUITES:
+        if want and key not in want:
+            continue
+        print(f"# === {key}: {desc} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{module}", fromlist=["main"])
+            mod.main()
+        except Exception:
+            failures.append(key)
+            traceback.print_exc()
+        print(f"# === {key} done in {time.time() - t0:.1f}s ===", flush=True)
+    # roofline summary (requires dry-run artifacts; skipped gracefully if absent)
+    if not want or "roofline" in want:
+        try:
+            from . import roofline
+            print("# === roofline (from dry-run artifacts) ===")
+            roofline.main()
+        except Exception:
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""A simulated multi-user dashboard session over the Flight schema, with
+think-time calibration between interactions (paper §4.2.1, Example 14) and a
+live Naive-vs-Treant latency comparison.
+
+    PYTHONPATH=src python examples/dashboard_session.py
+"""
+
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.baselines import NaiveExecutor  # noqa: E402
+from repro.core import Query, Treant, jt_from_catalog  # noqa: E402
+from repro.core import semiring as sr  # noqa: E402
+from repro.relational import schema  # noqa: E402
+from repro.relational.relation import mask_in  # noqa: E402
+
+
+def main():
+    cat = schema.flight(n_flights=100_000)
+    jt = jt_from_catalog(cat)
+    treant = Treant(cat, ring=sr.SUM, jt=jt)
+    naive = NaiveExecutor(cat, "Flights")
+    d = cat.domains()
+
+    q0 = Query.make(cat, ring="sum", measure=("Flights", "dep_delay"),
+                    group_by=("airport_state",))
+    t0 = time.perf_counter()
+    treant.register_dashboard("delay_map", q0)
+    print(f"[offline] calibrated dashboard in {time.perf_counter()-t0:.2f}s")
+
+    session = [
+        ("filter carriers 0-1", q0.with_predicate(
+            mask_in(d["carrier_group"], [0, 1], attr="carrier_group"))),
+        ("... and big airports", q0.with_predicate(
+            mask_in(d["carrier_group"], [0, 1], attr="carrier_group"))
+            .with_predicate(mask_in(d["airport_size"], [2, 3], attr="airport_size"))),
+        ("... break out by month", q0.with_predicate(
+            mask_in(d["carrier_group"], [0, 1], attr="carrier_group"))
+            .with_predicate(mask_in(d["airport_size"], [2, 3], attr="airport_size"))
+            .add_group_by("month")),
+    ]
+    for label, q in session:
+        t0 = time.perf_counter()
+        r_naive = naive.execute(q)
+        t_naive = time.perf_counter() - t0
+        res = treant.interact("anna", "delay_map", q)
+        ok = np.allclose(np.asarray(res.factor.field).ravel().sum(),
+                         np.asarray(r_naive).sum(), rtol=1e-3)
+        print(f"[online] {label:24s} naive={t_naive*1e3:7.1f}ms "
+              f"treant={res.latency_s*1e3:6.1f}ms "
+              f"({t_naive/max(res.latency_s,1e-9):5.0f}x) match={ok}")
+        # user thinks; Treant calibrates the current query in the background
+        n = treant.think_time("anna", "delay_map", budget_seconds=2.0)
+        print(f"         think-time: {n} messages calibrated")
+    print("[cache]", treant.cache_stats())
+
+
+if __name__ == "__main__":
+    main()

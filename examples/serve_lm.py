@@ -1,0 +1,19 @@
+"""Batched serving example: prefill + autoregressive decode with donated
+caches, on a reduced zamba2 (hybrid SSM) config — the O(1)-state decode path
+that long_500k exercises at scale.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    serve_main([
+        "--arch", "zamba2-1.2b", "--batch", "4",
+        "--prompt-len", "64", "--gen", "32",
+    ])
+
+
+if __name__ == "__main__":
+    main()

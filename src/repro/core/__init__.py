@@ -1,0 +1,14 @@
+# The paper's primary contribution: Calibrated Junction Hypertrees (CJT) and
+# the Treant dashboard accelerator, re-hosted as TPU-native JAX.
+from . import semiring  # noqa: F401
+from .factor import Factor, contract, brute_force_join_aggregate, ones_factor  # noqa: F401
+from .hypertree import (  # noqa: F401
+    JTree, build_join_tree, jt_from_catalog, insert_empty_bag, attach_relation,
+    is_acyclic, CyclicSchemaError,
+)
+from .query import Query  # noqa: F401
+from .calibration import CJTEngine, MessageStore, ExecStats  # noqa: F401
+from .treant import Treant, InteractionResult  # noqa: F401
+from . import steiner  # noqa: F401
+from .ml import FactorizedLinearRegression, FeatureSpec, FitResult  # noqa: F401
+from .cube import build_cube, naive_cube_cost, CubeReport  # noqa: F401

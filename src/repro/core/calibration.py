@@ -1,0 +1,504 @@
+"""CJT message passing, calibration, and signature-keyed message reuse.
+
+This is the algorithmic core of the paper (§3):
+
+- ``CJTEngine.message`` computes Y(u→v) recursively: the ⊗-product of the
+  bag's (annotated) relations with all incoming messages except from v,
+  ⊕-marginalized to ``separator(u,v) ∪ (γ ∩ subtree_attrs(u))`` — upward
+  message passing with group-by carry (§3.3.1).
+- Every message is keyed by its **Proposition 2 signature**: a structural
+  hash of the annotated subtree behind the edge.  The :class:`MessageStore`
+  is therefore simultaneously (a) the CJT materialization Y, (b) the
+  cross-query/cross-session message cache of §4.2.2, and (c) the partial
+  calibration state — a cache hit *is* message reuse, and the set of misses
+  *is* the Steiner tree of §3.4.2.
+- ``calibrate`` = upward + downward passes (Algorithm 1); the iterator form
+  is preemptible for think-time calibration (§4.2.1).
+- Σ compensation (§3.4.2) appears as ``MessageStore`` widening: a cached
+  message carrying extra γ attrs is narrowed by ⊕-marginalization instead of
+  recomputed.
+
+Bags holding a single sparse relation use the factorized sparse path
+(gather incoming messages at row codes, ⊗ rowwise, segment-⊕ — the DBMS
+hash-join/aggregate re-expressed for the TPU, see kernels/segment_aggregate);
+empty bags and densified dimension bags use dense factor contraction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Callable, Iterable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.relational.relation import Catalog, Predicate, Relation, lift_rows
+from . import semiring as sr
+from .factor import Factor, contract, ones_factor
+from .hypertree import JTree
+from .query import Query
+
+
+def _h(*parts: str) -> str:
+    return hashlib.sha1("|".join(parts).encode()).hexdigest()[:20]
+
+
+def factor_nbytes(f: Factor) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize for l in jax.tree_util.tree_leaves(f.field))
+
+
+# ---------------------------------------------------------------------------
+# Message store — the materialized Y + the paper's message-level cache
+# ---------------------------------------------------------------------------
+
+class MessageStore:
+    """LRU message cache keyed by Prop-2 signatures, with pinning (§4.2.2)."""
+
+    def __init__(self, max_bytes: int | None = None):
+        self.max_bytes = max_bytes
+        self._data: OrderedDict[str, Factor] = OrderedDict()
+        self._pinned: set[str] = set()
+        # (edge, base_sig) -> {γ tuple -> full sig}: Σ-compensation index
+        self._widen: dict[str, dict[tuple[str, ...], str]] = {}
+        self.hits = 0
+        self.misses = 0
+        self.widen_hits = 0
+        self.nbytes = 0
+
+    @staticmethod
+    def full_sig(base_sig: str, gamma: tuple[str, ...]) -> str:
+        return f"{base_sig}|g={','.join(gamma)}"
+
+    def get(self, base_sig: str, gamma: tuple[str, ...]) -> Factor | None:
+        sig = self.full_sig(base_sig, gamma)
+        f = self._data.get(sig)
+        if f is not None:
+            self._data.move_to_end(sig)
+            self.hits += 1
+            return f
+        # Σ compensation: narrow a cached wider-γ message by marginalization
+        for g2, sig2 in self._widen.get(base_sig, {}).items():
+            if set(gamma) <= set(g2) and sig2 in self._data:
+                wide = self._data[sig2]
+                narrowed = wide.marginalize(set(g2) - set(gamma))
+                self.put(base_sig, gamma, narrowed)
+                self.widen_hits += 1
+                return narrowed
+        self.misses += 1
+        return None
+
+    def contains(self, base_sig: str, gamma: tuple[str, ...]) -> bool:
+        if self.full_sig(base_sig, gamma) in self._data:
+            return True
+        return any(set(gamma) <= set(g2) for g2 in self._widen.get(base_sig, {}))
+
+    def put(self, base_sig: str, gamma: tuple[str, ...], f: Factor, pin: bool = False):
+        sig = self.full_sig(base_sig, gamma)
+        if sig not in self._data:
+            self.nbytes += factor_nbytes(f)
+        self._data[sig] = f
+        self._data.move_to_end(sig)
+        self._widen.setdefault(base_sig, {})[gamma] = sig
+        if pin:
+            self._pinned.add(sig)
+        self._evict()
+
+    def pin(self, base_sig: str, gamma: tuple[str, ...]):
+        self._pinned.add(self.full_sig(base_sig, gamma))
+
+    def unpin_all(self):
+        self._pinned.clear()
+
+    def _evict(self):
+        if self.max_bytes is None:
+            return
+        for sig in list(self._data):
+            if self.nbytes <= self.max_bytes:
+                break
+            if sig in self._pinned:
+                continue
+            f = self._data.pop(sig)
+            self.nbytes -= factor_nbytes(f)
+
+    def __len__(self):
+        return len(self._data)
+
+    def reset_stats(self):
+        self.hits = self.misses = self.widen_hits = 0
+
+    def snapshot(self):
+        """Cheap state snapshot (factors are immutable) — used by benchmarks
+        to warm XLA's jit cache without polluting the message cache."""
+        return (
+            OrderedDict(self._data),
+            {k: dict(v) for k, v in self._widen.items()},
+            set(self._pinned), self.nbytes,
+            (self.hits, self.misses, self.widen_hits),
+        )
+
+    def restore(self, snap):
+        self._data, self._widen, self._pinned, self.nbytes, stats = (
+            OrderedDict(snap[0]), {k: dict(v) for k, v in snap[1].items()},
+            set(snap[2]), snap[3], snap[4],
+        )
+        self.hits, self.misses, self.widen_hits = stats
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+LiftFn = Callable[[Relation], sr.Field]
+
+
+@dataclasses.dataclass
+class ExecStats:
+    messages_computed: int = 0
+    messages_reused: int = 0
+    rows_scanned: int = 0
+    recomputed_edges: list = dataclasses.field(default_factory=list)
+
+
+class CJTEngine:
+    """Query execution and calibration over one JT (one dashboard join graph)."""
+
+    def __init__(
+        self,
+        jt: JTree,
+        catalog: Catalog,
+        ring: sr.Semiring,
+        lifts: Mapping[str, LiftFn] | None = None,
+        store: MessageStore | None = None,
+        dense_rows_threshold: int = 0,
+    ):
+        self.jt = jt
+        self.catalog = catalog
+        self.ring = ring
+        self.lifts = dict(lifts or {})
+        self.store = store if store is not None else MessageStore()
+        # relations with ≤ threshold rows are densified (dense contraction
+        # path); bigger ones use the sparse segment path
+        self.dense_rows_threshold = dense_rows_threshold
+        self._sig_memo: dict[tuple[str, str, str], str] = {}
+
+    # -- annotation placement (§3.3, §3.4.2 shrinking) ------------------------
+    def place_predicates(self, q: Query) -> dict[str, tuple[Predicate, ...]]:
+        """Deterministically place each σ on the cheapest bag containing its attr.
+
+        Cheapest = fewest underlying rows; this realizes the paper's shrinking
+        heuristic (annotations migrate off large fact bags onto dimension
+        bags) while keeping placement a pure function of the query, which the
+        Prop-2 signatures require.
+        """
+        placed: dict[str, list[Predicate]] = {}
+        for p in q.predicates:
+            cands = self.jt.bags_with_attr(p.attr)
+            if not cands:
+                raise KeyError(f"predicate attr {p.attr} not in any bag")
+            cands = sorted(cands, key=lambda b: (self._bag_rows(q, b), b))
+            placed.setdefault(cands[0], []).append(p)
+        return {b: tuple(sorted(ps, key=lambda p: p.digest)) for b, ps in placed.items()}
+
+    def _bag_rows(self, q: Query, bag: str) -> int:
+        rels = [r for r in self.jt.relations_of(bag) if r not in q.removed]
+        if not rels:
+            return 1
+        return sum(self.catalog.get(r, q.version_of(r)).num_rows for r in rels)
+
+    # -- Proposition 2 signatures ---------------------------------------------
+    def bag_state_digest(self, q: Query, bag: str, placement) -> str:
+        rels = [r for r in self.jt.relations_of(bag) if r not in q.removed]
+        rel_part = ";".join(f"{r}@{q.version_of(r)}" for r in sorted(rels))
+        pred_part = ";".join(p.digest for p in placement.get(bag, ()))
+        meas = ""
+        if q.measure and q.measure[0] in rels:
+            meas = f"{q.measure[0]}.{q.measure[1]}"
+        return _h("bag", bag, rel_part, pred_part, meas, q.ring_name, q.lift_tag)
+
+    def subtree_sig(self, q: Query, u: str, v: str, placement) -> str:
+        """Structural hash of the annotated subtree rooted at u, cut at (u,v)."""
+        key = (q.digest, u, v)
+        hit = self._sig_memo.get(key)
+        if hit is not None:
+            return hit
+        child_sigs = sorted(
+            self.subtree_sig(q, i, u, placement) for i in self.jt.neighbors(u) if i != v
+        )
+        sig = _h("sub", self.bag_state_digest(q, u, placement), *child_sigs,
+                 ",".join(self.jt.separator(u, v)) if v else "")
+        self._sig_memo[key] = sig
+        return sig
+
+    def gamma_carry(self, q: Query, u: str, v: str) -> tuple[str, ...]:
+        """γ attrs that must survive the u→v message beyond the separator.
+
+        Separator attrs are kept by every message regardless of γ, so they
+        are excluded from the carry — a query grouping by separator attrs
+        then reuses base-calibration messages verbatim (this is what makes
+        the Fig 5b empty-bag view free to query).
+        """
+        sub = self.jt.subtree_attrs(u, v)
+        sep = set(self.jt.separator(u, v))
+        return tuple(sorted((set(q.group_by) & sub) - sep))
+
+    def edge_sig(self, q: Query, u: str, v: str, placement) -> str:
+        """Message identity (Prop. 2): depends on u's annotated subtree and the
+        separator, NOT on v's identity — so an augmentation bag (§4.3) attached
+        anywhere with the same join key reuses the host's outgoing message."""
+        sep = ",".join(self.jt.separator(u, v))
+        return _h("edge", u, sep, self.subtree_sig(q, u, v, placement))
+
+    # -- message passing (§3.3.1) ---------------------------------------------
+    def message(self, q: Query, u: str, v: str, placement=None, stats: ExecStats | None = None) -> Factor:
+        placement = self.place_predicates(q) if placement is None else placement
+        base = self.edge_sig(q, u, v, placement)
+        gamma = self.gamma_carry(q, u, v)
+        cached = self.store.get(base, gamma)
+        if cached is not None:
+            if stats:
+                stats.messages_reused += 1
+            return cached
+        incoming = [
+            self.message(q, i, u, placement, stats) for i in self.jt.neighbors(u) if i != v
+        ]
+        sep = self.jt.separator(u, v)
+        out_attrs = tuple(dict.fromkeys(sep + gamma))
+        f = self._bag_contract(q, u, incoming, out_attrs, placement, stats)
+        self.store.put(base, gamma, f)
+        if stats:
+            stats.messages_computed += 1
+            stats.recomputed_edges.append((u, v))
+        return f
+
+    def absorb(self, q: Query, root: str, placement=None, stats=None, keep=None) -> Factor:
+        """Absorption at root (§3.3.1) then projection to γ (or ``keep``)."""
+        placement = self.place_predicates(q) if placement is None else placement
+        incoming = [self.message(q, i, root, placement, stats) for i in self.jt.neighbors(root)]
+        keep = tuple(keep) if keep is not None else q.group_by
+        avail = set(self.jt.subtree_attrs(root, None))
+        out_attrs = tuple(a for a in dict.fromkeys(keep) if a in avail)
+        return self._bag_contract(q, root, incoming, out_attrs, placement, stats)
+
+    # -- bag-local contraction -------------------------------------------------
+    def _bag_contract(
+        self, q: Query, bag: str, incoming: list[Factor], out_attrs: tuple[str, ...],
+        placement, stats=None,
+    ) -> Factor:
+        rel_names = [r for r in self.jt.relations_of(bag) if r not in q.removed]
+        preds = placement.get(bag, ())
+        rels = [self.catalog.get(r, q.version_of(r)) for r in rel_names]
+        if stats:
+            stats.rows_scanned += sum(r.num_rows for r in rels)
+        sparse_rels = [r for r in rels if r.num_rows > self.dense_rows_threshold]
+        if len(sparse_rels) == 1 and len(rels) == 1:
+            return self._sparse_bag(q, rels[0], incoming, preds, out_attrs)
+        return self._dense_bag(q, rels, incoming, preds, out_attrs)
+
+    def _lift(self, q: Query, rel: Relation) -> sr.Field:
+        if rel.name in self.lifts:
+            return self.lifts[rel.name](rel)
+        measure = None
+        if q.measure and q.measure[0] == rel.name:
+            measure = q.measure[1]
+        return lift_rows(rel, self.ring, measure)
+
+    def _dense_bag(self, q, rels, incoming, preds, out_attrs) -> Factor:
+        ring = self.ring
+        factors = [r.to_factor(ring, q.measure[1] if q.measure and q.measure[0] == r.name else None)
+                   if r.name not in self.lifts else self._dense_lifted(q, r)
+                   for r in rels]
+        factors += list(incoming)
+        if not factors:
+            return Factor((), ring.ones(()), ring)
+        avail = {a for f in factors for a in f.attrs}
+        for p in preds:
+            if p.attr not in avail:  # pragma: no cover — placement guarantees
+                raise KeyError(f"σ({p.attr}) not available in bag")
+            mask = jnp.asarray(p.mask)
+            # apply on the first factor containing the attr (masking is
+            # idempotent but once suffices)
+            for i, f in enumerate(factors):
+                if p.attr in f.attrs:
+                    factors[i] = f.select(p.attr, mask)
+                    break
+        out = tuple(a for a in out_attrs if a in avail)
+        return contract(factors, out, ring)
+
+    def _dense_lifted(self, q, rel: Relation) -> Factor:
+        rows = self._lift(q, rel)
+        idx, total = rel.flat_codes(rel.attrs)
+        field = self.ring.segment_reduce(rows, jnp.asarray(idx), total)
+        shape = tuple(rel.domains[a] for a in rel.attrs)
+        field = jax.tree_util.tree_map(lambda l: l.reshape(shape + l.shape[1:]), field)
+        return Factor(tuple(rel.attrs), field, self.ring)
+
+    def _sparse_bag(self, q, rel: Relation, incoming, preds, out_attrs) -> Factor:
+        """Factorized sparse path: gather ⊗ rowwise, segment-⊕ to out_attrs."""
+        ring = self.ring
+        vals = self._lift(q, rel)  # leaves: (N, *trailing)
+        n = rel.num_rows
+        carried: list[str] = []
+        carried_dims: list[int] = []
+
+        def expand_field(field, have: list[str], want: list[str], trailing):
+            """Insert size-1 axes so leaves become (N, *want_dims, *trailing)."""
+            leaves, treedef = jax.tree_util.tree_flatten(field)
+            out = []
+            for leaf, t in zip(leaves, trailing):
+                cur = list(leaf.shape)
+                new_shape = [cur[0]]
+                hi = 1
+                for a in want:
+                    if a in have:
+                        new_shape.append(cur[hi]); hi += 1
+                    else:
+                        new_shape.append(1)
+                new_shape += cur[hi:] if t else cur[hi:]
+                out.append(leaf.reshape(new_shape))
+            return jax.tree_util.tree_unflatten(treedef, out)
+
+        for m in incoming:
+            shared = [a for a in m.attrs if a in rel.attrs]
+            extra = [a for a in m.attrs if a not in rel.attrs]
+            mp = m.project_to(tuple(shared + extra))
+            # flatten shared dims, gather rows
+            dims = [rel.domains[a] for a in shared]
+            idx = np.zeros((n,), np.int64)
+            if shared:
+                idx = np.ravel_multi_index(
+                    tuple(rel.codes[a].astype(np.int64) for a in shared), dims
+                )
+            idxj = jnp.asarray(idx)
+
+            def gather(leaf, t):
+                lead = leaf.reshape((int(np.prod(dims)) if shared else 1,) + leaf.shape[len(shared):])
+                return jnp.take(lead, idxj, axis=0) if shared else jnp.broadcast_to(
+                    lead, (n,) + lead.shape[1:]
+                )
+
+            leaves, treedef = jax.tree_util.tree_flatten(mp.field)
+            g = jax.tree_util.tree_unflatten(
+                treedef, [gather(l, t) for l, t in zip(leaves, ring.trailing)]
+            )
+            want = carried + [a for a in extra if a not in carried]
+            vals = ring.mul(
+                expand_field(vals, carried, want, ring.trailing),
+                expand_field(g, extra, want, ring.trailing),
+            )
+            carried = want
+            carried_dims = [self.jt.domains[a] for a in carried]
+
+        # σ: row masks (predicates always reference bag-local attrs)
+        if preds:
+            row_mask = np.ones((n,), bool)
+            for p in preds:
+                row_mask &= p.mask[rel.codes[p.attr]]
+            rm = jnp.asarray(row_mask)
+            zeros = ring.zeros((n,) + tuple(carried_dims))
+            leaves, treedef = jax.tree_util.tree_flatten(vals)
+            zleaves = jax.tree_util.tree_leaves(zeros)
+            out = []
+            for leaf, z, t in zip(leaves, zleaves, ring.trailing):
+                m = rm.reshape((n,) + (1,) * (leaf.ndim - 1))
+                out.append(jnp.where(m, leaf, z))
+            vals = jax.tree_util.tree_unflatten(treedef, out)
+
+        local_out = [a for a in out_attrs if a in rel.attrs]
+        carried_out = [a for a in out_attrs if a not in rel.attrs]
+        assert set(carried_out) <= set(carried), (
+            f"carried attrs {carried_out} not available (have {carried})"
+        )
+        idx, total = rel.flat_codes(local_out)
+        field = ring.segment_reduce(vals, jnp.asarray(idx), total)
+        # (total, *carried_dims, *trailing) → (*local_doms, *carried, *trailing)
+        shape = tuple(rel.domains[a] for a in local_out)
+        field = jax.tree_util.tree_map(
+            lambda l: l.reshape(shape + l.shape[1:]), field
+        )
+        f = Factor(tuple(local_out) + tuple(carried), field, ring)
+        return f.project_to(out_attrs)
+
+    # -- root choice (§3.3.3) ---------------------------------------------------
+    def estimate_edge_cost(self, q: Query, u: str, v: str, placement) -> float:
+        base = self.edge_sig(q, u, v, placement)
+        gamma = self.gamma_carry(q, u, v)
+        if self.store.contains(base, gamma):
+            return 0.0
+        out_attrs = tuple(dict.fromkeys(self.jt.separator(u, v) + gamma))
+        out_size = float(np.prod([self.jt.domains[a] for a in out_attrs])) if out_attrs else 1.0
+        return self._bag_rows(q, u) + out_size
+
+    def choose_root(self, q: Query, placement=None) -> str:
+        placement = self.place_predicates(q) if placement is None else placement
+        best, best_cost = None, None
+        for root in sorted(self.jt.bags):
+            cost = sum(
+                self.estimate_edge_cost(q, a, b, placement)
+                for a, b in self.jt.traversal_to_root(root)
+            )
+            cost += self._bag_rows(q, root)
+            if best_cost is None or cost < best_cost:
+                best, best_cost = root, cost
+        return best
+
+    # -- public API ---------------------------------------------------------------
+    def execute(self, q: Query, root: str | None = None) -> tuple[Factor, ExecStats]:
+        stats = ExecStats()
+        placement = self.place_predicates(q)
+        root = root or self.choose_root(q, placement)
+        f = self.absorb(q, root, placement, stats)
+        return f.project_to(q.group_by), stats
+
+    def calibrate(self, q: Query, root: str | None = None, pin: bool = False) -> ExecStats:
+        stats = ExecStats()
+        for _ in self.calibrate_iter(q, root=root, pin=pin, stats=stats):
+            pass
+        return stats
+
+    def calibrate_iter(
+        self, q: Query, root: str | None = None, pin: bool = False, stats=None
+    ) -> Iterable[tuple[str, str]]:
+        """Algorithm 1: upward then downward passes; yields after each edge.
+
+        Preemptible: abandoning the iterator keeps all already-materialized
+        messages in the store (think-time calibration, §4.2.1).
+        """
+        placement = self.place_predicates(q)
+        root = root or self.choose_root(q, placement)
+        upward = self.jt.traversal_to_root(root)
+        downward = [(v, u) for (u, v) in reversed(upward)]
+        for (u, v) in upward + downward:
+            if pin:
+                # pin BEFORE materializing so a tight LRU can't evict the
+                # message between put() and pin()
+                base = self.edge_sig(q, u, v, placement)
+                self.store.pin(base, self.gamma_carry(q, u, v))
+            self.message(q, u, v, placement, stats)
+            yield (u, v)
+
+    def is_calibrated(self, q: Query) -> bool:
+        placement = self.place_predicates(q)
+        for u, v in self.jt.directed_edges():
+            base = self.edge_sig(q, u, v, placement)
+            if not self.store.contains(base, self.gamma_carry(q, u, v)):
+                return False
+        return True
+
+    def check_calibration(self, q: Query) -> bool:
+        """Definitional check (§3.4.1): adjacent absorptions agree on separators."""
+        placement = self.place_predicates(q)
+        for u, v in self.jt.directed_edges():
+            if u > v:
+                continue
+            sep = self.jt.separator(u, v)
+            au = self.absorb(q, u, placement, keep=sep).project_to(sep)
+            av = self.absorb(q, v, placement, keep=sep).project_to(sep)
+            lu = jax.tree_util.tree_leaves(au.field)
+            lv = jax.tree_util.tree_leaves(av.field)
+            for x, y in zip(lu, lv):
+                if not np.allclose(np.asarray(x, np.float64), np.asarray(y, np.float64), rtol=1e-4, atol=1e-5):
+                    return False
+        return True

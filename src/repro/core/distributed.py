@@ -1,0 +1,169 @@
+"""Distributed CJT message passing with shard_map (multi-pod posture).
+
+The paper runs message passing as SQL against a DBMS cluster; on a TPU pod
+the natural mapping is domain sharding: each factor/message is sharded along
+one attribute's domain, and
+
+  - **forward** (upward) messages marginalize the *sharded* attribute →
+    local partial contraction + ``psum_scatter`` (a reduce-scatter per edge);
+  - **backward** (downward/calibration) messages marginalize the *replicated*
+    attribute → ``all_gather`` + local contraction.
+
+So a full calibration pass over a chain of r factors costs exactly r-1
+reduce-scatters + r-1 all-gathers over the mesh axis — the collective
+schedule reported in EXPERIMENTS.md §Dry-run for the ``treant_dashboard``
+config.  Messages stay sharded end-to-end; nothing materializes the join.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def calibrate_chain_reference(factors: list[jax.Array]) -> tuple[list, list]:
+    """Single-device oracle: forward/backward messages of a chain CJT.
+
+    factors[i]: (d_i, d_{i+1}) arithmetic-ring factor between A_i and A_{i+1}.
+    Returns (fwd, bwd): fwd[i] over A_{i+1} (message bag_i→bag_{i+1}),
+    bwd[i] over A_{i+1} (message bag_{i+1}→bag_i).
+    """
+    r = len(factors)
+    fwd, bwd = [None] * (r - 1), [None] * (r - 1)
+    m = jnp.ones((factors[0].shape[0],), factors[0].dtype)
+    for i in range(r - 1):
+        m = m @ factors[i]              # Σ_{A_i} F_i ⊗ m   → over A_{i+1}
+        fwd[i] = m
+    m = jnp.ones((factors[-1].shape[1],), factors[0].dtype)
+    for i in range(r - 2, -1, -1):
+        m = factors[i + 1] @ m          # Σ_{A_{i+2}} F_{i+1} ⊗ m → over A_{i+1}
+        bwd[i] = m
+    return fwd, bwd
+
+
+def chain_absorptions_reference(factors, fwd, bwd):
+    """Absorption at every bag: the calibrated per-bag views."""
+    r = len(factors)
+    out = []
+    for i in range(r):
+        f = factors[i]
+        if i > 0:
+            f = f * fwd[i - 1][:, None]
+        if i < r - 1:
+            f = f * bwd[i][None, :]
+        out.append(f)
+    return out
+
+
+def make_chain_calibrate(mesh: Mesh, axis: str, r: int, d: int, dtype=jnp.float32):
+    """Build a jitted sharded calibration fn for a chain of r (d,d) factors.
+
+    Sharding: factor i is (A_i sharded, A_{i+1} replicated); every message is
+    sharded along its own attribute.
+    """
+    n = mesh.shape[axis]
+    assert d % n == 0, f"domain {d} not divisible by mesh axis {n}"
+
+    def _local(factors):
+        # factors: list of local blocks (d/n, d)
+        fwd = []
+        m = jnp.ones((d // n,), dtype)
+        for i in range(r - 1):
+            partial_msg = m @ factors[i]                       # (d,) partial over local A_i rows
+            m = jax.lax.psum_scatter(
+                partial_msg, axis, scatter_dimension=0, tiled=True
+            )                                                   # (d/n,) over A_{i+1}
+            fwd.append(m)
+        bwd = []
+        m = jnp.ones((d // n,), dtype)
+        for i in range(r - 2, -1, -1):
+            full = jax.lax.all_gather(m, axis, tiled=True)      # (d,) over A_{i+2}
+            m = factors[i + 1] @ full                           # (d/n,) over A_{i+1}
+            bwd.append(m)
+        bwd = bwd[::-1]
+        # total-count absorption at bag 0 (scalar sanity output)
+        full_b = jax.lax.all_gather(bwd[0], axis, tiled=True) if r > 1 else None
+        f0 = factors[0]
+        total_local = (
+            jnp.sum(f0 @ full_b) if full_b is not None else jnp.sum(f0)
+        )
+        total = jax.lax.psum(total_local, axis)
+        return fwd, bwd, total
+
+    shard = shard_spec = P(axis, None)
+    msg_spec = P(axis)
+    fn = jax.shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=([shard_spec] * r,),
+        out_specs=([msg_spec] * (r - 1), [msg_spec] * (r - 1), P()),
+    )
+    return jax.jit(fn)
+
+
+def make_chain_calibrate_multi(mesh: Mesh, axis: str, r: int, d: int,
+                               n_measures: int, dtype=jnp.float32):
+    """Beyond-paper: fuse V measure semirings into ONE calibration pass.
+
+    The paper materializes messages per aggregate (one SPJA query each).
+    Stacking the V annotation columns turns every message matvec into a
+    (d/n, d)×(d, V) matmul: factors are read from HBM once instead of V
+    times (memory term ÷V) and the MXU gets a real contraction.  Messages
+    and collectives carry (d/n, V) blocks.
+
+    Factor annotations: (d/n, d) structural counts shared by all measures;
+    per-measure leaf annotations enter at bag 0 as a (d/n, V) block.
+    """
+    n = mesh.shape[axis]
+    assert d % n == 0
+
+    def _local(factors, leaf_vals):
+        fwd = []
+        m = leaf_vals                                        # (d/n, V)
+        for i in range(r - 1):
+            partial_msg = jnp.einsum("kv,kd->dv", m, factors[i])
+            m = jax.lax.psum_scatter(partial_msg, axis, scatter_dimension=0, tiled=True)
+            fwd.append(m)                                    # (d/n, V)
+        bwd = []
+        m = jnp.ones((d // n, n_measures), dtype)
+        for i in range(r - 2, -1, -1):
+            full = jax.lax.all_gather(m, axis, tiled=True)   # (d, V)
+            m = factors[i + 1] @ full                        # (d/n, V)
+            bwd.append(m)
+        bwd = bwd[::-1]
+        # absorption at the last bag: ⊕ over its own factor too
+        total_local = jnp.einsum("kv,k->v", fwd[-1], factors[-1].sum(axis=1))
+        totals = jax.lax.psum(total_local, axis)
+        return fwd, bwd, totals
+
+    msg_spec = P(axis, None)
+    fn = jax.shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=([P(axis, None)] * r, P(axis, None)),
+        out_specs=([msg_spec] * (r - 1), [msg_spec] * (r - 1), P()),
+    )
+    return jax.jit(fn)
+
+
+def chain_multi_specs(mesh: Mesh, axis: str, r: int, d: int, n_measures: int,
+                      dtype=jnp.float32):
+    sh = NamedSharding(mesh, P(axis, None))
+    factors = [jax.ShapeDtypeStruct((d, d), dtype, sharding=sh) for _ in range(r)]
+    leaf = jax.ShapeDtypeStruct((d, n_measures), dtype, sharding=sh)
+    return factors, leaf
+
+
+def place_chain_factors(mesh: Mesh, axis: str, factors_np: list[np.ndarray]):
+    sh = NamedSharding(mesh, P(axis, None))
+    return [jax.device_put(jnp.asarray(f), sh) for f in factors_np]
+
+
+def chain_factor_specs(mesh: Mesh, axis: str, r: int, d: int, dtype=jnp.float32):
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    sh = NamedSharding(mesh, P(axis, None))
+    return [jax.ShapeDtypeStruct((d, d), dtype, sharding=sh) for _ in range(r)]

@@ -1,0 +1,282 @@
+"""Commutative semirings over JAX pytrees.
+
+The paper (§2) annotates tuples with elements of a commutative semiring
+(D, ⊕, ⊗, 0, 1); joins multiply annotations, group-bys add them.  Here a
+semiring *element field* is a pytree of arrays sharing leading "domain"
+dimensions (one per categorical attribute).  Scalar rings (COUNT/SUM) use a
+single array; compound rings (AVG/VAR/covariance) use tuples of arrays with
+trailing statistic dimensions.
+
+Every ring implements:
+  zeros/ones(shape)       identity fields for ⊕ / ⊗
+  mul(a, b)               pointwise ⊗ of aligned fields
+  add_reduce(a, axes)     ⊕-marginalization over domain axes
+  add(a, b)               pointwise ⊕ (used for incremental updates)
+  lift(...)               raw column(s) → element field
+  trailing_ndims(leaf_i)  number of non-domain trailing dims per leaf
+
+The (ℝ, +, ×) rings additionally expose an einsum fast path used by
+``factor.contract`` so that hot contractions lower to MXU matmuls (and to the
+``semiring_contract`` Pallas kernel on TPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Field = Any  # pytree of arrays with shared leading domain dims
+
+
+def _tree_map(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """A commutative semiring over array pytrees."""
+
+    name: str
+    dtype: jnp.dtype
+    # pointwise ops on aligned fields
+    _mul: Callable[[Field, Field], Field]
+    _add: Callable[[Field, Field], Field]
+    _reduce: Callable[[Field, tuple[int, ...]], Field]
+    _zeros: Callable[[tuple[int, ...]], Field]
+    _ones: Callable[[tuple[int, ...]], Field]
+    # trailing (non-domain) dims for each leaf of the field pytree, in
+    # tree-flatten order.  Scalar rings: (0,).
+    trailing: tuple[int, ...] = (0,)
+    # True iff (⊕,⊗) == (+,×): enables the einsum/MXU fast path.
+    is_arithmetic: bool = False
+    # ⊕-segment-reduction over the leading (row) axis; None → segment_sum
+    # per leaf (valid whenever ⊕ is +).
+    _segment: Callable[[Field, jax.Array, int], Field] | None = None
+
+    # -- public API ---------------------------------------------------------
+    def mul(self, a: Field, b: Field) -> Field:
+        return self._mul(a, b)
+
+    def add(self, a: Field, b: Field) -> Field:
+        return self._add(a, b)
+
+    def add_reduce(self, a: Field, axes: Sequence[int]) -> Field:
+        axes = tuple(axes)
+        if not axes:
+            return a
+        return self._reduce(a, axes)
+
+    def segment_reduce(self, values: Field, segment_ids: jax.Array, num_segments: int) -> Field:
+        """⊕-aggregate per-row fields into ``num_segments`` dense groups.
+
+        This is the TPU-native replacement for DBMS hash aggregation: rows of
+        a sparse annotated relation collapse into a dense factor over the
+        group attrs (accelerated by the ``segment_aggregate`` Pallas kernel).
+        """
+        if self._segment is not None:
+            return self._segment(values, segment_ids, num_segments)
+        return _tree_map(
+            lambda v: jax.ops.segment_sum(v, segment_ids, num_segments), values
+        )
+
+    def zeros(self, shape: tuple[int, ...]) -> Field:
+        return self._zeros(tuple(shape))
+
+    def ones(self, shape: tuple[int, ...]) -> Field:
+        return self._ones(tuple(shape))
+
+    def leaves(self, a: Field) -> list[jax.Array]:
+        return jax.tree_util.tree_leaves(a)
+
+    def domain_shape(self, a: Field) -> tuple[int, ...]:
+        leaf = self.leaves(a)[0]
+        t = self.trailing[0]
+        return leaf.shape[: leaf.ndim - t] if t else leaf.shape
+
+    def expand_field(self, a: Field, src_axes: tuple[int, ...], out_shape: tuple[int, ...]) -> Field:
+        """Broadcast field with domain dims at positions src_axes into out_shape.
+
+        Domain dims are first transposed into target order (reshape alone
+        would silently scramble out-of-order attrs).
+        """
+        order = sorted(range(len(src_axes)), key=lambda i: src_axes[i])
+        leaves, treedef = jax.tree_util.tree_flatten(a)
+        out = []
+        for leaf, t in zip(leaves, self.trailing):
+            dom_nd = leaf.ndim - t
+            leaf = jnp.transpose(
+                leaf, tuple(order) + tuple(range(dom_nd, leaf.ndim))
+            )
+            perm_shape = [1] * len(out_shape) + list(leaf.shape[dom_nd:])
+            for pos, i in enumerate(order):
+                perm_shape[src_axes[i]] = leaf.shape[pos]
+            reshaped = leaf.reshape(perm_shape)
+            out.append(jnp.broadcast_to(reshaped, tuple(out_shape) + leaf.shape[dom_nd:]))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Scalar arithmetic rings: COUNT / SUM  (ℝ or ℕ, +, ×, 0, 1)
+# ---------------------------------------------------------------------------
+
+def _arith(name: str, dtype) -> Semiring:
+    return Semiring(
+        name=name,
+        dtype=dtype,
+        _mul=lambda a, b: a * b,
+        _add=lambda a, b: a + b,
+        _reduce=lambda a, axes: jnp.sum(a, axis=axes),
+        _zeros=lambda s: jnp.zeros(s, dtype),
+        _ones=lambda s: jnp.ones(s, dtype),
+        trailing=(0,),
+        is_arithmetic=True,
+    )
+
+
+COUNT = _arith("count", jnp.float32)   # float for MXU; exact for moderate ints
+SUM = _arith("sum", jnp.float32)
+COUNT_I64 = _arith("count_i64", jnp.int64)  # exact variant for property tests
+
+
+# ---------------------------------------------------------------------------
+# Tropical rings: MIN / MAX aggregates  (ℝ∪{±∞}, min/max, +, ∞/-∞, 0)
+# ---------------------------------------------------------------------------
+
+def _tropical(name: str, reducer, zero_val) -> Semiring:
+    dtype = jnp.float32
+    seg = jax.ops.segment_min if reducer is jnp.minimum else jax.ops.segment_max
+    return Semiring(
+        name=name,
+        dtype=dtype,
+        _mul=lambda a, b: a + b,
+        _add=lambda a, b: reducer(a, b),
+        _reduce=lambda a, axes: (jnp.min if reducer is jnp.minimum else jnp.max)(a, axis=axes),
+        _zeros=lambda s: jnp.full(s, zero_val, dtype),
+        _ones=lambda s: jnp.zeros(s, dtype),
+        trailing=(0,),
+        is_arithmetic=False,
+        _segment=lambda v, ids, n: seg(v, ids, n),
+    )
+
+
+TROPICAL_MIN = _tropical("tropical_min", jnp.minimum, jnp.inf)
+TROPICAL_MAX = _tropical("tropical_max", jnp.maximum, -jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Boolean ring (∨, ∧): Yannakakis semi-join reductions
+# ---------------------------------------------------------------------------
+
+BOOL = Semiring(
+    name="bool",
+    dtype=jnp.bool_,
+    _mul=lambda a, b: jnp.logical_and(a, b),
+    _add=lambda a, b: jnp.logical_or(a, b),
+    _reduce=lambda a, axes: jnp.any(a, axis=axes),
+    _zeros=lambda s: jnp.zeros(s, jnp.bool_),
+    _ones=lambda s: jnp.ones(s, jnp.bool_),
+    trailing=(0,),
+    is_arithmetic=False,
+    _segment=lambda v, ids, n: jax.ops.segment_sum(v.astype(jnp.int32), ids, n) > 0,
+)
+
+
+# ---------------------------------------------------------------------------
+# AVG / VARIANCE ring: elements (c, s, s2); var = s2/c - (s/c)^2  (paper §2)
+# ---------------------------------------------------------------------------
+
+def _moments_mul(a, b):
+    (c1, s1, q1), (c2, s2, q2) = a, b
+    return (c1 * c2, c1 * s2 + c2 * s1, c1 * q2 + c2 * q1 + 2.0 * s1 * s2)
+
+
+MOMENTS = Semiring(
+    name="moments",
+    dtype=jnp.float32,
+    _mul=_moments_mul,
+    _add=lambda a, b: _tree_map(jnp.add, a, b),
+    _reduce=lambda a, axes: _tree_map(lambda x: jnp.sum(x, axis=axes), a),
+    _zeros=lambda s: tuple(jnp.zeros(s, jnp.float32) for _ in range(3)),
+    _ones=lambda s: (jnp.ones(s, jnp.float32), jnp.zeros(s, jnp.float32), jnp.zeros(s, jnp.float32)),
+    trailing=(0, 0, 0),
+    is_arithmetic=False,
+)
+
+
+def moments_lift(value: jax.Array, count: jax.Array | None = None) -> Field:
+    """Lift a measure column: element (cnt, Σx, Σx²)."""
+    c = jnp.ones_like(value) if count is None else count
+    return (c, value, value * value)
+
+
+def moments_finalize(field: Field) -> dict[str, jax.Array]:
+    c, s, q = field
+    mean = s / jnp.maximum(c, 1.0)
+    var = q / jnp.maximum(c, 1.0) - mean * mean
+    return {"count": c, "sum": s, "mean": mean, "var": var}
+
+
+# ---------------------------------------------------------------------------
+# Covariance (linear-regression) ring — Schleich et al. [69], paper §4.3.
+# Element: (c, s ∈ ℝ^k, Q ∈ ℝ^{k×k}) over a global feature index space of
+# size k.  ⊗: (c1c2, c1·s2 + c2·s1, c1·Q2 + c2·Q1 + s1 s2ᵀ + s2 s1ᵀ); ⊕: +.
+# Training solves the normal equations on the fully-marginalized element.
+# ---------------------------------------------------------------------------
+
+def make_covariance_ring(k: int) -> Semiring:
+    def mul(a, b):
+        (c1, s1, q1), (c2, s2, q2) = a, b
+        c = c1 * c2
+        s = c1[..., None] * s2 + c2[..., None] * s1
+        outer = s1[..., :, None] * s2[..., None, :]
+        q = (
+            c1[..., None, None] * q2
+            + c2[..., None, None] * q1
+            + outer
+            + jnp.swapaxes(outer, -1, -2)
+        )
+        return (c, s, q)
+
+    return Semiring(
+        name=f"covariance[{k}]",
+        dtype=jnp.float32,
+        _mul=mul,
+        _add=lambda a, b: _tree_map(jnp.add, a, b),
+        _reduce=lambda a, axes: _tree_map(lambda x: jnp.sum(x, axis=axes), a),
+        _zeros=lambda s: (
+            jnp.zeros(s, jnp.float32),
+            jnp.zeros(s + (k,), jnp.float32),
+            jnp.zeros(s + (k, k), jnp.float32),
+        ),
+        _ones=lambda s: (
+            jnp.ones(s, jnp.float32),
+            jnp.zeros(s + (k,), jnp.float32),
+            jnp.zeros(s + (k, k), jnp.float32),
+        ),
+        trailing=(0, 1, 2),
+        is_arithmetic=False,
+    )
+
+
+def covariance_lift(k: int, feature_ids: Sequence[int], columns: Sequence[jax.Array]) -> Field:
+    """Lift local feature columns (each (N,)) into the k-dim covariance ring."""
+    n = columns[0].shape[0] if columns else 0
+    c = jnp.ones((n,), jnp.float32)
+    s = jnp.zeros((n, k), jnp.float32)
+    for fid, col in zip(feature_ids, columns):
+        s = s.at[:, fid].set(col.astype(jnp.float32))
+    q = s[:, :, None] * s[:, None, :]
+    return (c, s, q)
+
+
+REGISTRY: dict[str, Semiring] = {
+    r.name: r for r in (COUNT, SUM, COUNT_I64, TROPICAL_MIN, TROPICAL_MAX, BOOL, MOMENTS)
+}
+
+
+def get(name: str) -> Semiring:
+    return REGISTRY[name]

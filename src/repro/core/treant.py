@@ -1,0 +1,137 @@
+"""Treant middleware (paper §4): dashboards, sessions, think-time calibration.
+
+Treant sits between dashboards and the relational layer.  Offline it
+registers *dashboard queries* (one per visualization) and calibrates their
+CJTs (pinned in the message store).  Online it executes *interaction queries*
+against the most-recent CJT of the same (session, visualization), then — in
+the user's think-time — calibrates the latest interaction query in a
+preemptible background pass so the *next* interaction is cheap (§4.2.1,
+Example 14).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Mapping
+
+from repro.relational.relation import Catalog
+from . import semiring as sr
+from .calibration import CJTEngine, ExecStats, MessageStore
+from .factor import Factor
+from .hypertree import JTree, jt_from_catalog
+from .query import Query
+from . import steiner
+
+
+@dataclasses.dataclass
+class InteractionResult:
+    factor: Factor
+    stats: ExecStats
+    latency_s: float
+    steiner_size: int
+
+
+@dataclasses.dataclass
+class _VizState:
+    dashboard_query: Query
+    current: Query            # latest executed query (dashboard or interaction)
+
+
+class Treant:
+    """Dashboard accelerator managing CJTs over one join graph."""
+
+    def __init__(
+        self,
+        catalog: Catalog,
+        ring: sr.Semiring = sr.SUM,
+        jt: JTree | None = None,
+        lifts: Mapping[str, Callable] | None = None,
+        max_cache_bytes: int | None = None,
+        dense_rows_threshold: int = 0,
+    ):
+        self.catalog = catalog
+        self.jt = jt or jt_from_catalog(catalog)
+        self.store = MessageStore(max_bytes=max_cache_bytes)
+        self.engine = CJTEngine(
+            self.jt, catalog, ring, lifts=lifts, store=self.store,
+            dense_rows_threshold=dense_rows_threshold,
+        )
+        # (session, viz) -> state; viz -> dashboard query
+        self._dashboards: dict[str, Query] = {}
+        self._sessions: dict[tuple[str, str], _VizState] = {}
+        self._calibrator = None  # (generator, query digest)
+
+    # -- offline stage (§4.1.1) ------------------------------------------------
+    def register_dashboard(self, viz: str, query: Query) -> ExecStats:
+        """Store the dashboard query and calibrate its CJT offline (pinned)."""
+        self._dashboards[viz] = query
+        return self.engine.calibrate(query, pin=True)
+
+    # -- online stage (§4.1.2) ---------------------------------------------------
+    def _state(self, session: str, viz: str) -> _VizState:
+        key = (session, viz)
+        if key not in self._sessions:
+            q0 = self._dashboards[viz]
+            self._sessions[key] = _VizState(dashboard_query=q0, current=q0)
+        return self._sessions[key]
+
+    def interact(self, session: str, viz: str, query: Query) -> InteractionResult:
+        """Execute an interaction query using the latest CJT for this viz."""
+        st = self._state(session, viz)
+        pln = steiner.plan(self.engine, st.current, query)
+        t0 = time.perf_counter()
+        factor, stats = self.engine.execute(query)
+        dt = time.perf_counter() - t0
+        # the new query preempts any in-flight background calibration
+        self._calibrator = None
+        st.current = query
+        return InteractionResult(factor, stats, dt, pln.size)
+
+    def read(self, session: str, viz: str) -> InteractionResult:
+        st = self._state(session, viz)
+        t0 = time.perf_counter()
+        factor, stats = self.engine.execute(st.current)
+        return InteractionResult(factor, stats, time.perf_counter() - t0, 0)
+
+    # -- think-time calibration (§4.2.1) -------------------------------------------
+    def think_time(
+        self,
+        session: str,
+        viz: str,
+        budget_messages: int | None = None,
+        budget_seconds: float | None = None,
+    ) -> int:
+        """Calibrate the current interaction query in the background.
+
+        Preemptible: stops when the budget is exhausted; every message
+        materialized so far stays in the store and is immediately reusable
+        (Fig 15's stepped latency curve comes exactly from this).
+        Returns the number of edges processed.
+        """
+        st = self._state(session, viz)
+        q = st.current
+        if self._calibrator is None or self._calibrator[1] != q.digest:
+            self._calibrator = (self.engine.calibrate_iter(q), q.digest)
+        gen, _ = self._calibrator
+        done = 0
+        t0 = time.perf_counter()
+        for _ in gen:
+            done += 1
+            if budget_messages is not None and done >= budget_messages:
+                break
+            if budget_seconds is not None and time.perf_counter() - t0 >= budget_seconds:
+                break
+        else:
+            self._calibrator = None  # fully calibrated
+        return done
+
+    # -- introspection ---------------------------------------------------------------
+    def cache_stats(self) -> dict:
+        return {
+            "messages": len(self.store),
+            "bytes": self.store.nbytes,
+            "hits": self.store.hits,
+            "misses": self.store.misses,
+            "widen_hits": self.store.widen_hits,
+        }

@@ -1,0 +1,1 @@
+from .pipeline import TokenPipeline, StragglerMonitor, synth_batch  # noqa: F401

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: sparse → dense segment aggregation (one-hot matmul).
+
+The leaf step of every CJT message over a fact table: N dictionary-encoded
+rows with per-row annotation vectors collapse into a dense (G, V) factor.
+TPUs have no efficient random scatter, so the DBMS hash-aggregate is
+re-thought for the MXU: each (TN rows × TG groups) tile builds the one-hot
+membership matrix ``codes[n] == group_ids[g]`` and contracts it with the
+value slab — turning data-dependent scatter into dense matmul.
+
+  out[g, v] ⊕= Σ_n  1[codes[n] == g] · values[n, v]      (⊕ ∈ {sum, min, max})
+
+Grid: (G/TG, N/TN) with rows innermost (accumulation), so each output tile
+stays resident in VMEM across the row stream.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TN = 512
+DEFAULT_TG = 128
+
+
+def _kernel(codes_ref, vals_ref, o_ref, *, op: str, tg: int):
+    if op == "sum":
+        init = 0.0
+    elif op == "min":
+        init = jnp.inf
+    else:
+        init = -jnp.inf
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, init)
+
+    codes = codes_ref[...]                       # (TN,)
+    vals = vals_ref[...].astype(jnp.float32)     # (TN, V)
+    g0 = pl.program_id(0) * tg
+    gids = g0 + jax.lax.broadcasted_iota(jnp.int32, (codes.shape[0], tg), 1)
+    onehot = (codes[:, None] == gids)            # (TN, TG) bool
+    if op == "sum":
+        o_ref[...] += jnp.dot(
+            onehot.astype(jnp.float32).T, vals, preferred_element_type=jnp.float32
+        )
+    else:
+        big = jnp.where(onehot[:, :, None], vals[:, None, :], init)  # (TN, TG, V)
+        red = jnp.min(big, axis=0) if op == "min" else jnp.max(big, axis=0)
+        cur = o_ref[...]
+        o_ref[...] = jnp.minimum(cur, red) if op == "min" else jnp.maximum(cur, red)
+
+
+def segment_aggregate(
+    codes: jax.Array,      # (N,) int32 group ids in [0, G)
+    values: jax.Array,     # (N, V) row annotations
+    num_segments: int,
+    op: str = "sum",
+    tn: int = DEFAULT_TN,
+    tg: int = DEFAULT_TG,
+    interpret: bool = True,
+) -> jax.Array:
+    n, v = values.shape
+    g = num_segments
+    tn = min(tn, n)
+    tg = min(tg, g)
+    assert n % tn == 0 and g % tg == 0, (n, g, tn, tg)
+    grid = (g // tg, n // tn)
+    return pl.pallas_call(
+        functools.partial(_kernel, op=op, tg=tg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn,), lambda i, k: (k,)),
+            pl.BlockSpec((tn, v), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((tg, v), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, v), jnp.float32),
+        interpret=interpret,
+    )(codes, values)

@@ -1,0 +1,40 @@
+"""Jit'd wrapper for segment_aggregate with row/group padding."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import segment_aggregate, DEFAULT_TG, DEFAULT_TN
+from .ref import segment_aggregate_ref
+
+
+@partial(jax.jit, static_argnames=("num_segments", "op", "interpret"))
+def aggregate_op(codes, values, num_segments: int, op: str = "sum", interpret: bool = True):
+    n = codes.shape[0]
+    squeeze = values.ndim == 1
+    if squeeze:
+        values = values[:, None]
+    v = values.shape[1]
+    tn = min(DEFAULT_TN, max(8, n))
+    tg = min(DEFAULT_TG, max(8, num_segments))
+    pad_n = (-n) % tn
+    pad_g = (-num_segments) % tg
+    if pad_n:
+        # padded rows carry the ⊕-identity so they are no-ops in any group
+        ident = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf}[op]
+        codes = jnp.concatenate([codes, jnp.full((pad_n,), num_segments + pad_g - 1, codes.dtype)])
+        values = jnp.concatenate([values, jnp.full((pad_n, v), ident, values.dtype)])
+    out = segment_aggregate(
+        codes, values, num_segments + pad_g, op=op, tn=tn, tg=tg, interpret=interpret
+    )[:num_segments]
+    return out[:, 0] if squeeze else out
+
+
+def aggregate(codes, values, num_segments, op="sum", use_kernel=True):
+    if use_kernel:
+        return aggregate_op(codes, values, num_segments, op=op,
+                            interpret=jax.default_backend() != "tpu")
+    return segment_aggregate_ref(codes, values, num_segments, op)

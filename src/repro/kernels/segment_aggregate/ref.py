@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for segment_aggregate."""
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_aggregate_ref(codes, values, num_segments, op="sum"):
+    values = values.astype(jnp.float32)
+    if op == "sum":
+        return jax.ops.segment_sum(values, codes, num_segments)
+    if op == "min":
+        return jax.ops.segment_min(values, codes, num_segments)
+    return jax.ops.segment_max(values, codes, num_segments)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for semiring_contract."""
+
+import jax.numpy as jnp
+
+
+def semiring_contract_ref(m, r, mask=None):
+    m = m.astype(jnp.float32)
+    if mask is not None:
+        m = m * mask.astype(jnp.float32)[None, :]
+    return m @ r.astype(jnp.float32)

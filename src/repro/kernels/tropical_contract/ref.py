@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for tropical_contract."""
+
+import jax.numpy as jnp
+
+
+def tropical_contract_ref(m, r, is_min=True):
+    slab = m.astype(jnp.float32)[:, :, None] + r.astype(jnp.float32)[None, :, :]
+    return jnp.min(slab, axis=1) if is_min else jnp.max(slab, axis=1)

@@ -1,0 +1,558 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax-importing import: jax locks the device count on init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+meshes, record memory/cost/collective artifacts for the roofline analysis.
+
+Methodology notes (see DESIGN.md §8):
+  - The *production* compile (scanned layers, chunked attention) proves the
+    sharding is coherent, yields ``memory_analysis()`` and the collective
+    schedule. XLA's HloCostAnalysis visits while-loop bodies ONCE, so its
+    flops/bytes on scanned programs undercount by the trip count.
+  - The *analysis* compiles therefore rebuild the same cell at 1 and 2 layer
+    units with every scan unrolled (``cfg.unroll_scans``) and chunk-free
+    attention/loss (identical matmul FLOPs, no loops).  Costs are affine in
+    the unit count, so ``total = c1 + (c2 - c1)·(units - 1)`` is exact.
+  - Collective bytes are parsed from the compiled per-device HLO; we report
+    both the raw operand-byte sum (the brief's formula) and a ring-model
+    wire-byte estimate per device.
+
+Usage:
+  python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all            # every cell, both meshes
+  python -m repro.launch.dryrun --cell treant    # the paper's own workload
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[^\]]*\]\S*)\s+"
+    r"(all-reduce-start|all-gather-start|all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute-start|collective-permute)\("
+)
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device collective byte totals from a compiled SPMD module."""
+    per_op: dict[str, dict] = {}
+    operand_bytes = 0.0
+    wire_bytes = 0.0
+    for m in _COLL_RE.finditer(hlo_text):
+        result_t, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        r = _shape_bytes(result_t)
+        # group size
+        tail = hlo_text[m.end(): m.end() + 2000]
+        g = None
+        mi = _IOTA_GROUPS_RE.search(tail)
+        if mi:
+            g = int(mi.group(2))
+        else:
+            ml = _LIST_GROUPS_RE.search(tail)
+            if ml:
+                g = len([x for x in ml.group(1).split(",") if x.strip()])
+        if not g or g < 1:
+            g = 2
+        if op == "all-gather":
+            operand = r / g
+            wire = r * (g - 1) / g
+        elif op == "reduce-scatter":
+            operand = r * g
+            wire = r * (g - 1)
+        elif op == "all-reduce":
+            operand = r
+            wire = 2 * r * (g - 1) / g
+        elif op == "all-to-all":
+            operand = r
+            wire = r * (g - 1) / g
+        else:  # collective-permute
+            operand = r
+            wire = r
+        operand_bytes += operand
+        wire_bytes += wire
+        d = per_op.setdefault(op, {"count": 0, "operand_bytes": 0.0, "wire_bytes": 0.0})
+        d["count"] += 1
+        d["operand_bytes"] += operand
+        d["wire_bytes"] += wire
+    return {
+        "per_op": per_op,
+        "operand_bytes": operand_bytes,
+        "wire_bytes": wire_bytes,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+def arch_overrides(name: str, shape_name: str) -> dict:
+    """Per-cell production-compile knobs (memory dials; see EXPERIMENTS.md)."""
+    out: dict = {}
+    if name == "nemotron-4-340b" and shape_name == "train_4k":
+        out["scan_groups"] = 12      # √L nested remat
+    if name == "llama-3.2-vision-90b" and shape_name == "prefill_32k":
+        out["attn_q_chunk"] = 1024
+    return out
+
+
+def train_accum(name: str, shape_name: str) -> int:
+    """Microbatch accumulation per arch: the HBM dial that brings every
+    train cell under the 16 GiB/chip budget (EXPERIMENTS.md §Dry-run)."""
+    if shape_name != "train_4k":
+        return 1
+    return {
+        "nemotron-4-340b": 8,
+        "llama-3.2-vision-90b": 8,
+        "deepseek-coder-33b": 4,
+        "dbrx-132b": 4,
+        "nemotron-4-15b": 2,
+        "stablelm-12b": 2,
+        "rwkv6-7b": 2,
+        "zamba2-1.2b": 2,
+    }.get(name, 1)
+
+
+def unit_layers(cfg, k: int) -> int:
+    """Layer count for k pattern units (differencing grid)."""
+    if cfg.pattern == "vlm":
+        return k * cfg.cross_every
+    if cfg.pattern == "zamba":
+        ng, per, tail = _zamba_layout(cfg)
+        return k * per + tail
+    return k
+
+
+def n_units(cfg) -> int:
+    if cfg.pattern == "vlm":
+        return cfg.n_layers // cfg.cross_every
+    if cfg.pattern == "zamba":
+        ng, per, tail = _zamba_layout(cfg)
+        return ng
+    return cfg.n_layers
+
+
+def _zamba_layout(cfg):
+    per = cfg.shared_attn_every
+    ng = cfg.n_layers // per
+    return ng, per, cfg.n_layers - ng * per
+
+
+def analysis_cfg(cfg, k_units: int, shape, grid: str = "flops"):
+    """Two analysis grids (DESIGN.md §8):
+
+    - ``flops``: every loop unrolled/vectorized, attention chunk-free —
+      trip-count-exact FLOPs (identical matmul work to production).
+    - ``bytes``: production attention chunking (flash loop bodies counted
+      once = the scores-stay-in-VMEM traffic model) with layer/moe/loss
+      loops unrolled — realistic bytes + collective schedule, free of the
+      chunk-free grid's giant-score-tensor resharding artifacts.
+    """
+    seq = shape.seq_len if shape.kind != "decode" else 1
+    over = dict(
+        n_layers=unit_layers(cfg, k_units),
+        unroll_scans=True,
+        scan_groups=None,
+    )
+    if grid == "flops":
+        over.update(
+            attn_q_chunk=max(seq, 16),
+            attn_kv_chunk=max(seq, 16),
+            loss_chunk=max(seq, 16),
+        )
+        if cfg.attn_mode != "divide":
+            # divide-mode keeps its recursion depth (it determines the FLOPs);
+            # its flash sub-blocks are already single-iteration at q_chunk=S
+            over["attn_min_block"] = max(seq, 16)
+    return dataclasses.replace(cfg, **over)
+
+
+def skip_reason(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return (
+            "full-attention arch: 500k-context decode requires sub-quadratic "
+            "attention (brief: skip for pure full-attention archs)"
+        )
+    return None
+
+
+def input_specs(arch: str, shape_name: str = "train_4k", mesh=None):
+    """ShapeDtypeStruct stand-ins for every model input of a cell (the brief's
+    §MULTI-POD DRY-RUN contract): weak-type-correct, shardable, no allocation.
+    For training that's {tokens, labels}; embeddings/vision stubs for the
+    [audio]/[vlm] archs; decode shapes add the KV/state cache skeletons."""
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+    from repro.launch.mesh import make_production_mesh
+    from repro.runtime.sharding import batch_specs, make_rules
+    from repro.runtime.step import abstract_caches
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = mesh or make_production_mesh()
+    rules = make_rules(mesh, shape)
+    out = batch_specs(cfg, shape, rules, "bfloat16")
+    if shape.kind == "decode":
+        out["caches"] = abstract_caches(cfg, shape, rules)
+    return out
+
+
+def lower_cell(cfg, shape, mesh, rules, accum: int):
+    """Build SDS inputs and lower the appropriate step. Returns (lowered, meta)."""
+    import jax.numpy as jnp
+    import jax
+
+    from repro.optim.adamw import AdamWConfig
+    from repro.runtime.sharding import batch_specs, tree_abstract
+    from repro.runtime.step import (
+        abstract_caches, abstract_train_state, make_decode_step,
+        make_prefill_step, make_train_step,
+    )
+    from repro.models.lm import param_specs
+
+    meta = {"accum": accum}
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        params, opt = abstract_train_state(cfg, opt_cfg, rules)
+        batch = batch_specs(cfg, shape, rules, "bfloat16")
+        step = make_train_step(cfg, opt_cfg, rules, accum=accum)
+        lowered = step.lower(params, opt, batch)
+    elif shape.kind == "prefill":
+        params = tree_abstract(param_specs(cfg), rules, "bfloat16")
+        batch = batch_specs(cfg, shape, rules, "bfloat16")
+        step = make_prefill_step(cfg, rules, shape)
+        lowered = step.lower(params, batch)
+    else:  # decode
+        params = tree_abstract(param_specs(cfg), rules, "bfloat16")
+        batch = batch_specs(cfg, shape, rules, "bfloat16")
+        caches = abstract_caches(cfg, shape, rules)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        step = make_decode_step(cfg, rules)
+        lowered = step.lower(params, batch, caches, pos)
+    return lowered, meta
+
+
+def parse_overrides(sets) -> dict:
+    """--set key=value perf-variant overrides (nested: moe.group=64)."""
+    out: dict = {}
+    for kv in sets or []:
+        key, val = kv.split("=", 1)
+        try:
+            val = int(val)
+        except ValueError:
+            try:
+                val = float(val)
+            except ValueError:
+                pass
+        out[key] = val
+    return out
+
+
+def apply_overrides(cfg, overrides: dict):
+    moe_over = {k.split(".", 1)[1]: v for k, v in overrides.items() if k.startswith("moe.")}
+    flat = {k: v for k, v in overrides.items() if "." not in k}
+    if moe_over and cfg.moe is not None:
+        flat["moe"] = dataclasses.replace(cfg.moe, **moe_over)
+    return dataclasses.replace(cfg, **flat)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, analysis: bool = True,
+             overrides: dict | None = None) -> dict:
+    import jax
+    from repro.configs import get_config, SHAPES
+    from repro.launch.mesh import make_production_mesh
+    from repro.runtime.sharding import make_rules
+
+    cfg0 = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "timestamp": time.time(),
+    }
+    reason = skip_reason(cfg0, shape)
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    rules = make_rules(mesh, shape)
+    cfg = dataclasses.replace(cfg0, **arch_overrides(arch, shape_name))
+    accum = train_accum(arch, shape_name)
+    overrides = dict(overrides or {})
+    if overrides:
+        accum = int(overrides.pop("accum", accum))
+        cfg = apply_overrides(cfg, overrides)
+        rec["overrides"] = {**overrides, "accum": accum}
+
+    t0 = time.time()
+    lowered, meta = lower_cell(cfg, shape, mesh, rules, accum)
+    rec["lower_s"] = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = time.time() - t0
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "peak_per_device_bytes": (
+            mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+        ),
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["cost_raw"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+    }
+    rec["collectives_schedule"] = parse_collectives(compiled.as_text())
+    rec["meta"] = meta
+    rec["status"] = "ok"
+
+    if analysis and mesh_kind == "single":
+        # the roofline table is single-pod; multi-pod cells only need the
+        # production compile (sharding proof + memory + schedule)
+        rec["analysis"] = run_analysis(cfg, shape, mesh, rules)
+    return rec
+
+
+def run_analysis(cfg, shape, mesh, rules) -> dict:
+    """1/2-unit differencing on both analysis grids; flops from the chunk-free
+    grid, bytes + collectives from the production-chunked grid."""
+    units = n_units(cfg)
+    out: dict = {"units": units}
+    costs: dict = {}
+    for grid, keys in (("flops", ("flops",)),
+                       ("bytes", ("bytes", "operand_bytes", "wire_bytes"))):
+        for k in (1, 2):
+            acfg = analysis_cfg(cfg, k, shape, grid=grid)
+            lowered, _ = lower_cell(acfg, shape, mesh, rules, accum=1)
+            compiled = lowered.compile()
+            ca = compiled.cost_analysis() or {}
+            coll = parse_collectives(compiled.as_text())
+            c = costs.setdefault(k, {})
+            vals = {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes": float(ca.get("bytes accessed", 0.0)),
+                "operand_bytes": coll["operand_bytes"],
+                "wire_bytes": coll["wire_bytes"],
+            }
+            for key in keys:
+                c[key] = vals[key]
+    out["unit_costs"] = costs
+    extr = {}
+    for key in ("flops", "bytes", "operand_bytes", "wire_bytes"):
+        c1, c2 = costs[1][key], costs[2][key]
+        per_unit = c2 - c1
+        extr[key] = c1 + per_unit * (units - 1)
+        extr[f"{key}_per_unit"] = per_unit
+    out["extrapolated"] = extr
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The paper's own workload: distributed CJT calibration on the mesh
+# ---------------------------------------------------------------------------
+
+def run_treant_cell(mesh_kind: str, n_measures: int = 1) -> dict:
+    import jax
+    from repro.core.distributed import (
+        chain_factor_specs, chain_multi_specs, make_chain_calibrate,
+        make_chain_calibrate_multi,
+    )
+    from repro.launch.mesh import make_production_mesh
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    axis = "data"
+    r, d = 8, 65536  # 8-relation chain (Appendix D.3 shape), 64k domains
+    rec = {"arch": "treant_dashboard", "shape": f"chain_r{r}_d{d}", "mesh": mesh_kind,
+           "n_measures": n_measures}
+    if n_measures > 1:
+        fn = make_chain_calibrate_multi(mesh, axis, r, d, n_measures)
+        factors, leaf = chain_multi_specs(mesh, axis, r, d, n_measures)
+        specs = (factors, leaf)
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t0
+        mem = compiled.memory_analysis()
+        rec["memory"] = {"argument_bytes": mem.argument_size_in_bytes,
+                         "temp_bytes": mem.temp_size_in_bytes}
+        ca = compiled.cost_analysis() or {}
+        rec["cost_raw"] = {"flops": float(ca.get("flops", 0.0)),
+                           "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+        rec["collectives_schedule"] = parse_collectives(compiled.as_text())
+        rec["status"] = "ok"
+        return rec
+    fn = make_chain_calibrate(mesh, axis, r, d)
+    specs = chain_factor_specs(mesh, axis, r, d)
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(specs)
+    compiled = lowered.compile()
+    rec["compile_s"] = time.time() - t0
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["cost_raw"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+    }
+    rec["collectives_schedule"] = parse_collectives(compiled.as_text())
+    rec["status"] = "ok"
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def cell_path(arch: str, shape: str, mesh: str) -> Path:
+    return ARTIFACTS / f"{arch}__{shape}__{mesh}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--cell", default=None, help="'treant' for the CJT workload")
+    ap.add_argument("--no-analysis", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--set", action="append", default=[],
+                    help="perf-variant override key=value (e.g. attn_mode=divide)")
+    ap.add_argument("--tag", default=None,
+                    help="write to artifacts/hillclimb/<cell>__<tag>.json")
+    args = ap.parse_args()
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from repro.configs import ALL_ARCHS
+        from repro.configs.base import SHAPES
+        cells = [
+            (a, s, m)
+            for a in ALL_ARCHS
+            for s in SHAPES
+            for m in ("single", "multi")
+        ] + [("treant_dashboard", "chain", m) for m in ("single", "multi")]
+        failures = 0
+        for a, s, m in cells:
+            out = cell_path(a, s, m)
+            if out.exists() and not args.force:
+                try:
+                    prev = json.loads(out.read_text()).get("status")
+                except Exception:
+                    prev = None
+                if prev in ("ok", "skipped"):
+                    print(f"[skip-existing] {out.name}")
+                    continue
+                out.unlink()
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--mesh", m, "--timeout", str(args.timeout),
+            ]
+            cmd += ["--cell", "treant"] if a == "treant_dashboard" else ["--arch", a, "--shape", s]
+            if args.no_analysis:
+                cmd.append("--no-analysis")
+            print(f"[run] {a} × {s} × {m}", flush=True)
+            repo = ARTIFACTS.parents[1]
+            env = dict(os.environ, PYTHONPATH=str(repo / "src"))
+            env.pop("XLA_FLAGS", None)  # each child sets its own 512-device flag
+            try:
+                r = subprocess.run(cmd, timeout=args.timeout, cwd=str(repo), env=env)
+                if r.returncode != 0:
+                    failures += 1
+                    _write_fail(out, a, s, m, f"exit={r.returncode}")
+            except subprocess.TimeoutExpired:
+                failures += 1
+                _write_fail(out, a, s, m, f"timeout>{args.timeout}s")
+        print(f"done; failures={failures}")
+        sys.exit(1 if failures else 0)
+
+    if args.cell == "treant":
+        over = parse_overrides(getattr(args, "set"))
+        rec = run_treant_cell(args.mesh, n_measures=int(over.get("measures", 1)))
+        out = cell_path("treant_dashboard", "chain", args.mesh)
+        if args.tag:
+            out = ARTIFACTS.parent / "hillclimb" / f"treant_dashboard__chain__{args.mesh}__{args.tag}.json"
+            out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(rec, indent=2))
+        print(json.dumps(rec, indent=2)[:1500])
+        return
+    else:
+        try:
+            rec = run_cell(args.arch, args.shape, args.mesh,
+                           analysis=not args.no_analysis,
+                           overrides=parse_overrides(getattr(args, "set")))
+        except Exception:
+            rec = {
+                "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+                "status": "error", "traceback": traceback.format_exc(),
+            }
+            out = cell_path(args.arch, args.shape, args.mesh)
+            out.write_text(json.dumps(rec, indent=2))
+            print(rec["traceback"], file=sys.stderr)
+            sys.exit(1)
+        out = cell_path(args.arch, args.shape, args.mesh)
+    if args.tag:
+        out = ARTIFACTS.parent / "hillclimb" / f"{args.arch}__{args.shape}__{args.mesh}__{args.tag}.json"
+        out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=2))
+    print(json.dumps({k: v for k, v in rec.items() if k not in ("traceback",)}, indent=2)[:2000])
+
+
+def _write_fail(out: Path, a, s, m, why):
+    if not out.exists():
+        out.write_text(json.dumps(
+            {"arch": a, "shape": s, "mesh": m, "status": "error", "reason": why}
+        ))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Assigned-architecture model zoo: pure-JAX, scan-over-layers decoders."""
+
+from .lm import LM, abstract_params, init_params, param_specs  # noqa: F401

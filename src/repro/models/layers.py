@@ -1,0 +1,450 @@
+"""Transformer building blocks: norms, RoPE, GQA attention (chunked-causal
+flash for train/prefill, cache attention for decode), MLP variants, MoE.
+
+All functions are pure; parameters are dicts of arrays built by
+``lm.param_specs``.  Activation sharding constraints are injected by the
+runtime via ``cfg.act_rules`` (a mapping logical-axis → PartitionSpec entry),
+so the same code lowers for 1 CPU device and for the 512-chip mesh.
+
+Attention compute modes (see EXPERIMENTS.md §Perf):
+  - ``full_masked``  — chunked online-softmax attention over all kv chunks
+    with a causal mask (baseline; does ~2× the useful FLOPs).
+  - ``divide``       — recursive causal decomposition: causal(S) =
+    causal(S/2) ⊕ full(S/2×S/2) ⊕ causal(S/2); exact same result, ~half the
+    FLOPs, static shapes (the TPU-native replacement for ragged causal
+    kernels).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def with_sharding(x, spec):
+    """Apply a sharding constraint if a PartitionSpec is provided."""
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Norms / RoPE
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-5):
+    # mean-of-squares with fp32 accumulation, without materializing an fp32
+    # copy of the residual stream (a multi-GiB buffer at 18k d_model)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def rope_freqs(dh: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, dh); positions: (..., S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, dh/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention — flash (chunked online-softmax) with a custom VJP so neither the
+# score matrices nor per-chunk softmax residuals are ever saved: forward keeps
+# only (q, k, v, o, lse); backward re-streams (nq × nk) blocks, accumulating
+# dk/dv in-place.  This is the memory-term workhorse of EXPERIMENTS.md §Perf.
+# ---------------------------------------------------------------------------
+
+from functools import partial as _partial
+
+
+def _expand_kv(x, g):
+    return jnp.repeat(x, g, axis=2) if g > 1 else x
+
+
+def _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk, q_off, k_off):
+    b, sq, h, dh = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = 1.0 / np.sqrt(dh)
+    qc_n = max(sq // min(q_chunk, sq), 1)
+    kc_n = max(sk // min(kv_chunk, sk), 1)
+    qc, kc = sq // qc_n, sk // kc_n
+    qs = (q * scale).astype(jnp.float32).reshape(b, qc_n, qc, h, dh).transpose(1, 0, 2, 3, 4)
+    ks = k.astype(jnp.float32).reshape(b, kc_n, kc, kh, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.astype(jnp.float32).reshape(b, kc_n, kc, kh, dh).transpose(1, 0, 2, 3, 4)
+
+    def q_body(_, qin):
+        qb, qi = qin
+        qpos = q_off + qi * qc + jnp.arange(qc)
+
+        def kv_body(carry, kin):
+            o, m, l = carry
+            kb, vb, kj = kin
+            kb = _expand_kv(kb, g)
+            vb = _expand_kv(vb, g)
+            s = jnp.einsum("bqhd,bthd->bhqt", qb, kb)
+            if causal:
+                kpos = k_off + kj * kc + jnp.arange(kc)
+                s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1).transpose(0, 2, 1))
+            p = jnp.exp(s - m_new.transpose(0, 2, 1)[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1).transpose(0, 2, 1)
+            o_new = o * corr[..., None] + jnp.einsum("bhqt,bthd->bqhd", p, vb)
+            return (o_new, m_new, l_new), None
+
+        o0 = jnp.zeros((b, qc, h, dh), jnp.float32)
+        m0 = jnp.full((b, qc, h), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, qc, h), jnp.float32)
+        (o, m, l), _ = jax.lax.scan(
+            kv_body, (o0, m0, l0), (ks, vs, jnp.arange(kc_n)))
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (o / jnp.maximum(l, 1e-30)[..., None], lse)
+
+    _, (o, lse) = jax.lax.scan(q_body, None, (qs, jnp.arange(qc_n)))
+    o = o.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dh)
+    lse = lse.transpose(1, 0, 2, 3).reshape(b, sq, h)
+    return o.astype(q.dtype), lse
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, q_chunk=512, kv_chunk=512, q_off=0, k_off=0):
+    """Memory-O(S·d) exact attention. Returns (o, lse); lse enables merging
+    partial attentions (the causal-divide decomposition)."""
+    return _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk, q_off, k_off)
+
+
+def _flash_fwd(q, k, v, causal, q_chunk, kv_chunk, q_off, k_off):
+    o, lse = _flash_fwd_impl(q, k, v, causal, q_chunk, kv_chunk, q_off, k_off)
+    return (o, lse), (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, q_chunk, kv_chunk, q_off, k_off, res, ct):
+    q, k, v, o, lse = res
+    do, dlse = ct
+    b, sq, h, dh = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = 1.0 / np.sqrt(dh)
+    qc_n = max(sq // min(q_chunk, sq), 1)
+    kc_n = max(sk // min(kv_chunk, sk), 1)
+    qc, kc = sq // qc_n, sk // kc_n
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)  # (B,Sq,H)
+
+    def chunked(x, n, c):
+        return x.reshape(b, n, c, *x.shape[2:]).transpose(1, 0, 2, *range(3, x.ndim + 1))
+
+    qs = chunked(q.astype(jnp.float32), qc_n, qc)
+    dos = chunked(do.astype(jnp.float32), qc_n, qc)
+    lses = chunked(lse, qc_n, qc)
+    deltas = chunked(delta, qc_n, qc)
+    dlses = chunked(dlse.astype(jnp.float32), qc_n, qc) if dlse is not None else None
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+
+    def q_body(carry, qin):
+        dk_acc, dv_acc = carry
+        if dlses is None:
+            qb, dob, lseb, delb, qi = qin
+            dlb = None
+        else:
+            qb, dob, lseb, delb, dlb, qi = qin
+        qpos = q_off + qi * qc + jnp.arange(qc)
+
+        def kv_body(inner, kj):
+            dk_a, dv_a, dq_b = inner
+            kb = jax.lax.dynamic_slice_in_dim(k32, kj * kc, kc, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v32, kj * kc, kc, axis=1)
+            kbe = _expand_kv(kb, g)
+            vbe = _expand_kv(vb, g)
+            s = jnp.einsum("bqhd,bthd->bhqt", qb * scale, kbe)
+            if causal:
+                kpos = k_off + kj * kc + jnp.arange(kc)
+                s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None], s, NEG_INF)
+            p = jnp.exp(s - lseb.transpose(0, 2, 1)[..., None])       # (B,H,qc,kc)
+            dv_blk = jnp.einsum("bhqt,bqhd->bthd", p, dob)            # (B,kc,H,dh)
+            dp = jnp.einsum("bqhd,bthd->bhqt", dob, vbe)
+            ds = p * (dp - delb.transpose(0, 2, 1)[..., None])
+            if dlb is not None:
+                ds = ds + p * dlb.transpose(0, 2, 1)[..., None]
+            dq_b = dq_b + jnp.einsum("bhqt,bthd->bqhd", ds, kbe) * scale
+            dk_blk = jnp.einsum("bhqt,bqhd->bthd", ds, qb) * scale    # (B,kc,H,dh)
+            # GQA: fold the head-group dim back onto kv heads
+            dk_blk = dk_blk.reshape(b, kc, kh, g, dh).sum(3)
+            dv_blk = dv_blk.reshape(b, kc, kh, g, dh).sum(3)
+            dk_a = jax.lax.dynamic_update_slice_in_dim(
+                dk_a, jax.lax.dynamic_slice_in_dim(dk_a, kj * kc, kc, 1) + dk_blk, kj * kc, 1)
+            dv_a = jax.lax.dynamic_update_slice_in_dim(
+                dv_a, jax.lax.dynamic_slice_in_dim(dv_a, kj * kc, kc, 1) + dv_blk, kj * kc, 1)
+            return (dk_a, dv_a, dq_b), None
+
+        dq0 = jnp.zeros((b, qc, h, dh), jnp.float32)
+        (dk_acc, dv_acc, dqb), _ = jax.lax.scan(
+            kv_body, (dk_acc, dv_acc, dq0), jnp.arange(kc_n))
+        return (dk_acc, dv_acc), dqb
+
+    dk0 = jnp.zeros((b, sk, kh, dh), jnp.float32)
+    dv0 = jnp.zeros((b, sk, kh, dh), jnp.float32)
+    xs = (qs, dos, lses, deltas, jnp.arange(qc_n)) if dlses is None else (
+        qs, dos, lses, deltas, dlses, jnp.arange(qc_n))
+    (dk, dv), dqs = jax.lax.scan(q_body, (dk0, dv0), xs)
+    dq = dqs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dh)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _merge_attn(a, b):
+    """Merge two normalized partial attentions via their lse."""
+    o_a, lse_a = a
+    o_b, lse_b = b
+    lse = jnp.logaddexp(lse_a, lse_b)
+    wa = jnp.exp(lse_a - lse)[..., None]
+    wb = jnp.exp(lse_b - lse)[..., None]
+    return o_a * wa + o_b * wb, lse
+
+
+def _causal_divide(q, k, v, q_off, k_off, min_block, q_chunk, kv_chunk):
+    """Exact causal attention in ~half the FLOPs: causal(S) = causal(S/2) ⊕
+    full(upper·lower) ⊕ causal(S/2), recursively (static shapes)."""
+    s = q.shape[1]
+    if s <= min_block:
+        return flash_attention(q, k, v, True, q_chunk, kv_chunk, q_off, k_off)
+    half = s // 2
+    a1 = _causal_divide(q[:, :half], k[:, :half], v[:, :half],
+                        q_off, k_off, min_block, q_chunk, kv_chunk)
+    a2d = _causal_divide(q[:, half:], k[:, half:], v[:, half:],
+                         q_off + half, k_off + half, min_block, q_chunk, kv_chunk)
+    a2f = flash_attention(q[:, half:], k[:, :half], v[:, :half],
+                          False, q_chunk, kv_chunk, q_off + half, k_off)
+    a2 = _merge_attn(a2d, a2f)
+    return tuple(jnp.concatenate([x1, x2], axis=1) for x1, x2 in zip(a1, a2))
+
+
+def causal_attention(q, k, v, *, mode: str = "full_masked", q_chunk: int = 512,
+                     kv_chunk: int = 512, min_block: int = 1024, offset: int = 0):
+    """Causal self attention. q (B,S,H,dh), k/v (B,S,K,dh) → (B,S,H,dh)."""
+    s = q.shape[1]
+    if mode == "divide" and s > min_block:
+        o, _ = _causal_divide(q, k, v, offset, offset, min_block, q_chunk, kv_chunk)
+    else:
+        o, _ = flash_attention(q, k, v, True, q_chunk, kv_chunk, offset, offset)
+    return o.astype(q.dtype)
+
+
+def cross_attention(q, k, v, *, kv_chunk: int = 512):
+    """Full (non-causal) attention against precomputed kv (VLM image tokens)."""
+    o, _ = flash_attention(q, k, v, False, 512, kv_chunk, 0, 0)
+    return o.astype(q.dtype)
+
+
+def decode_attention(q, cache_k, cache_v, valid_upto=None):
+    """One-token attention against a full KV cache.
+
+    q: (B, H, dh); cache_k/v: (B, T, K, dh).  Uses a grouped einsum so the
+    cache is never head-expanded (it can be tens of GB at 32k–500k context).
+    ``valid_upto`` (inclusive position) masks unwritten cache slots.
+    """
+    b, h, dh = q.shape
+    t, kh = cache_k.shape[1], cache_k.shape[2]
+    g = h // kh
+    scale = 1.0 / np.sqrt(dh)
+    qg = (q * scale).reshape(b, kh, g, dh)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, cache_k.astype(jnp.float32))
+    if valid_upto is not None:
+        mask = jnp.arange(t) <= valid_upto
+        s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, cache_v.astype(jnp.float32))
+    return o.reshape(b, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + modes)
+# ---------------------------------------------------------------------------
+
+def attention_block(x, p, cfg, *, cache=None, pos_offset=0, acts=None):
+    """Self-attention with GQA + RoPE.
+
+    train/prefill: cache is None → returns (y, (k, v)) so callers can build a
+    prefill cache.  decode: cache = (k, v, cur_index is implicit: full cache).
+    """
+    b, s, d = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    acts = acts or {}
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, kh, dh)
+    v = (x @ p["wv"]).reshape(b, s, kh, dh)
+    pos = pos_offset + jnp.arange(s)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    q = with_sharding(q, acts.get("qkv"))
+    k = with_sharding(k, acts.get("kv"))
+    v = with_sharding(v, acts.get("kv"))
+    if cache is not None:
+        ck, cv = cache
+        o = decode_attention(q[:, 0], ck, cv)[:, None]
+    else:
+        o = causal_attention(
+            q, k, v, mode=cfg.attn_mode, q_chunk=cfg.attn_q_chunk,
+            kv_chunk=cfg.attn_kv_chunk, min_block=cfg.attn_min_block,
+        )
+    o = with_sharding(o, acts.get("qkv"))
+    y = o.reshape(b, s, h * dh) @ p["wo"]
+    return y, (k, v)
+
+
+def cross_attention_block(x, p, cfg, kv=None, vision=None, acts=None):
+    """Cross-attention against vision tokens (llama-3.2-vision style).
+
+    ``kv`` (cached projected vision K/V) or ``vision`` (embeddings) must be
+    given; returns (y, (k, v)).
+    """
+    b, s, d = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    acts = acts or {}
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    if kv is None:
+        t = vision.shape[1]
+        k = (vision @ p["wk"]).reshape(b, t, kh, dh)
+        v = (vision @ p["wv"]).reshape(b, t, kh, dh)
+    else:
+        k, v = kv
+    q = with_sharding(q, acts.get("qkv"))
+    if s == 1:
+        o = decode_attention(q[:, 0], k, v)[:, None]
+    else:
+        o = cross_attention(q, k, v, kv_chunk=cfg.attn_kv_chunk)
+    y = o.reshape(b, s, h * dh) @ p["wo"]
+    return y, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_block(x, p, cfg, acts=None):
+    acts = acts or {}
+    if cfg.mlp == "swiglu":
+        hdn = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    elif cfg.mlp == "squared_relu":        # nemotron-4
+        hdn = jnp.square(jax.nn.relu(x @ p["w1"]))
+    elif cfg.mlp == "gelu":
+        hdn = jax.nn.gelu(x @ p["w1"])
+    else:  # pragma: no cover
+        raise ValueError(cfg.mlp)
+    hdn = with_sharding(hdn, acts.get("ff"))
+    return hdn @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (dropping, grouped one-hot dispatch — MXU friendly)
+# ---------------------------------------------------------------------------
+
+def _moe_groups(xt, p, cfg, acts, g: int, cap: int):
+    """Dispatch + expert compute + combine for a slab of token groups.
+
+    xt: (ng, g, d).  Returns (y (ng, g, d), aux scalar).
+    """
+    moe = cfg.moe
+    e, k = moe.n_experts, moe.top_k
+    ng = xt.shape[0]
+    logits = jnp.einsum("ngd,de->nge", xt, p["router"]).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)                      # (ng, g, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)       # (ng, g, k, e)
+    # buffer position per (token, choice): fp32 cumsum (exact for these
+    # counts); the big (g,e,cap) tensors are bf16 to halve the working set.
+    flat = onehot.transpose(0, 2, 1, 3).reshape(ng, k * xt.shape[1], e)
+    pos = jnp.cumsum(flat, axis=1) - flat
+    pos = pos.reshape(ng, k, xt.shape[1], e).transpose(0, 2, 1, 3)
+    in_cap = (pos < cap) & (onehot > 0)
+    slot = jnp.where(in_cap, pos, 0).astype(jnp.int32)
+    slot_oh = jax.nn.one_hot(slot, cap, dtype=xt.dtype) * in_cap[..., None].astype(xt.dtype)
+    dispatch = slot_oh.sum(axis=2)                            # (ng,g,e,cap)
+    combine = jnp.einsum("ngkec,ngk->ngec", slot_oh, topv.astype(xt.dtype))
+
+    xin = jnp.einsum("ngec,ngd->necd", dispatch, xt)           # (ng,e,cap,d)
+    xin = with_sharding(xin, acts.get("expert_in"))
+    if cfg.mlp == "swiglu":
+        hdn = jax.nn.silu(jnp.einsum("necd,edf->necf", xin, p["w1"]))
+        hdn = hdn * jnp.einsum("necd,edf->necf", xin, p["w3"])
+    else:
+        hdn = jnp.square(jax.nn.relu(jnp.einsum("necd,edf->necf", xin, p["w1"])))
+    hdn = with_sharding(hdn, acts.get("expert_ff"))
+    out = jnp.einsum("necf,efd->necd", hdn, p["w2"])
+    y = jnp.einsum("ngec,necd->ngd", combine, out)
+    aux = _load_balance_loss(gates, onehot)
+    return y, aux
+
+
+def moe_block(x, p, cfg, acts=None):
+    """Top-k MoE with capacity-bounded one-hot dispatch.
+
+    Tokens are processed in groups of ``cfg.moe.group`` so the dispatch
+    einsum's cost stays a few % of expert FLOPs (tokens×E×C×d with
+    C = group·k·cf/E).  Groups are streamed through a *checkpointed scan*
+    in slabs so only one slab's (g,e,cap)/(e,cap,d)/(e,cap,f) tensors are
+    ever live — without it the dbrx-132b train cell holds >100 GiB of
+    dispatch intermediates per device (see EXPERIMENTS.md §Dry-run).
+    Expert weights are sharded over the ``expert`` logical axis; GSPMD turns
+    the dispatch/combine einsums into the classical EP all-to-all.
+    """
+    moe = cfg.moe
+    acts = acts or {}
+    b, s, d = x.shape
+    e, k = moe.n_experts, moe.top_k
+    g = min(moe.group, b * s)
+    tokens = x.reshape(-1, d)
+    n = tokens.shape[0]
+    assert n % g == 0, (n, g)
+    ng = n // g
+    cap = min(int(np.ceil(g * k * moe.capacity_factor / e)), g)
+    xt = tokens.reshape(ng, g, d)
+
+    steps = min(16, ng)
+    while ng % steps:
+        steps -= 1
+    if steps <= 1:
+        y, aux = _moe_groups(xt, p, cfg, acts, g, cap)
+        return y.reshape(b, s, d).astype(x.dtype), aux
+
+    xc = xt.reshape(steps, ng // steps, g, d)
+
+    def body(_, slab):
+        y, aux = _moe_groups(slab, p, cfg, acts, g, cap)
+        return None, (y, aux)
+
+    body = jax.checkpoint(body)
+    _, (ys, auxs) = jax.lax.scan(
+        body, None, xc, unroll=True if cfg.unroll_scans else 1
+    )
+    y = ys.reshape(ng, g, d)
+    return y.reshape(b, s, d).astype(x.dtype), jnp.mean(auxs)
+
+
+def _load_balance_loss(gates, onehot):
+    # Switch-style auxiliary load-balance loss
+    e = gates.shape[-1]
+    frac_tokens = jnp.mean(onehot.sum(2), axis=(0, 1))   # (e,)
+    frac_gates = jnp.mean(gates, axis=(0, 1))
+    return e * jnp.sum(frac_tokens * frac_gates) / onehot.shape[2]

@@ -1,0 +1,664 @@
+"""LM assembly: param specs with logical sharding axes + train/prefill/decode
+forwards for the four block patterns (uniform, vlm, zamba, rwkv).
+
+Layers are stacked and iterated with ``lax.scan`` so the lowered HLO is O(1)
+in depth — mandatory for compiling 96-layer × 512-way-SPMD programs in the
+dry-run.  Parameters are plain nested dicts; ``param_specs`` describes every
+leaf once as (shape, logical axes, init), from which both real initialization
+(smoke tests / train driver) and ShapeDtypeStruct skeletons (dry-run) derive.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from . import ssm as S
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]          # logical axis name (or None) per dim
+    init: str = "normal"           # normal | zeros | ones | const:<val>
+    dtype: Any = None              # override (defaults to build dtype)
+
+
+def _is_spec(x):
+    return isinstance(x, Spec)
+
+
+# ---------------------------------------------------------------------------
+# Param specs per pattern
+# ---------------------------------------------------------------------------
+
+def _attn_specs(cfg: ModelConfig, stack: tuple[int, ...], saxes: tuple) -> dict:
+    d, ha, kv = cfg.d_model, cfg.d_attn, cfg.n_kv_heads * cfg.d_head
+    return {
+        "wq": Spec(stack + (d, ha), saxes + ("embed", "heads_flat")),
+        "wk": Spec(stack + (d, kv), saxes + ("embed", "kv_flat")),
+        "wv": Spec(stack + (d, kv), saxes + ("embed", "kv_flat")),
+        "wo": Spec(stack + (ha, d), saxes + ("heads_flat", "embed")),
+    }
+
+
+def _mlp_specs(cfg: ModelConfig, stack, saxes) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    out = {
+        "w1": Spec(stack + (d, f), saxes + ("embed", "mlp")),
+        "w2": Spec(stack + (f, d), saxes + ("mlp", "embed")),
+    }
+    if cfg.mlp == "swiglu":
+        out["w3"] = Spec(stack + (d, f), saxes + ("embed", "mlp"))
+    return out
+
+
+def _moe_specs(cfg: ModelConfig, stack, saxes) -> dict:
+    d, e, f = cfg.d_model, cfg.moe.n_experts, cfg.moe.d_ff
+    out = {
+        "router": Spec(stack + (d, e), saxes + ("embed", None)),
+        "w1": Spec(stack + (e, d, f), saxes + ("experts", "embed", "mlp")),
+        "w2": Spec(stack + (e, f, d), saxes + ("experts", "mlp", "embed")),
+    }
+    if cfg.mlp == "swiglu":
+        out["w3"] = Spec(stack + (e, d, f), saxes + ("experts", "embed", "mlp"))
+    return out
+
+
+def _uniform_layer_specs(cfg: ModelConfig, stack, saxes) -> dict:
+    d = cfg.d_model
+    out = {
+        "ln1": Spec(stack + (d,), saxes + ("embed",), init="ones"),
+        "ln2": Spec(stack + (d,), saxes + ("embed",), init="ones"),
+        "attn": _attn_specs(cfg, stack, saxes),
+    }
+    if cfg.moe is not None:
+        out["moe"] = _moe_specs(cfg, stack, saxes)
+    else:
+        out["mlp"] = _mlp_specs(cfg, stack, saxes)
+    return out
+
+
+def _mamba_layer_specs(cfg: ModelConfig, stack, saxes) -> dict:
+    d = cfg.d_model
+    ssm = cfg.ssm
+    d_in = ssm.expand * d
+    h = d_in // ssm.head_dim
+    n = ssm.state
+    proj_out = 2 * d_in + 2 * n + h
+    return {
+        "ln": Spec(stack + (d,), saxes + ("embed",), init="ones"),
+        "in_proj": Spec(stack + (d, proj_out), saxes + ("embed", "ssm_inner")),
+        "conv_w": Spec(stack + (ssm.conv, d_in), saxes + (None, "ssm_inner"),
+                       init="const:0.25"),
+        "conv_b": Spec(stack + (d_in,), saxes + ("ssm_inner",), init="zeros"),
+        "dt_bias": Spec(stack + (h,), saxes + (None,), init="const:-2.0"),
+        "a_log": Spec(stack + (h,), saxes + (None,), init="zeros"),
+        "d_skip": Spec(stack + (h,), saxes + (None,), init="ones"),
+        "norm": Spec(stack + (d_in,), saxes + ("ssm_inner",), init="ones"),
+        "out_proj": Spec(stack + (d_in, d), saxes + ("ssm_inner", "embed")),
+    }
+
+
+def _rwkv_layer_specs(cfg: ModelConfig, stack, saxes) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    rw = cfg.rwkv
+    h = d // rw.head_dim
+    mu = lambda: Spec(stack + (d,), saxes + ("embed",), init="const:0.5")
+    return {
+        "ln1": Spec(stack + (d,), saxes + ("embed",), init="ones"),
+        "ln2": Spec(stack + (d,), saxes + ("embed",), init="ones"),
+        "tm": {
+            "mu_r": mu(), "mu_k": mu(), "mu_v": mu(), "mu_g": mu(), "mu_w": mu(),
+            "wr": Spec(stack + (d, d), saxes + ("embed", "heads_flat")),
+            "wk": Spec(stack + (d, d), saxes + ("embed", "heads_flat")),
+            "wv": Spec(stack + (d, d), saxes + ("embed", "heads_flat")),
+            "wg": Spec(stack + (d, d), saxes + ("embed", "heads_flat")),
+            "wo": Spec(stack + (d, d), saxes + ("heads_flat", "embed")),
+            "w_lora_a": Spec(stack + (d, rw.lora_rank), saxes + ("embed", None)),
+            "w_lora_b": Spec(stack + (rw.lora_rank, d), saxes + (None, "heads_flat")),
+            "w0": Spec(stack + (d,), saxes + ("heads_flat",), init="const:-2.0"),
+            "u": Spec(stack + (h, rw.head_dim), saxes + (None, None), init="const:0.1"),
+            "ln_x": Spec(stack + (d,), saxes + ("heads_flat",), init="ones"),
+        },
+        "cm": {
+            "mu_k": mu(), "mu_r": mu(),
+            "wk": Spec(stack + (d, f), saxes + ("embed", "mlp")),
+            "wv": Spec(stack + (f, d), saxes + ("mlp", "embed")),
+            "wr_gate": Spec(stack + (d, d), saxes + ("embed", "heads_flat")),
+        },
+    }
+
+
+def _cross_layer_specs(cfg: ModelConfig, stack, saxes) -> dict:
+    out = _attn_specs(cfg, stack, saxes)
+    out["ln"] = Spec(stack + (cfg.d_model,), saxes + ("embed",), init="ones")
+    out["gate"] = Spec(stack + (), saxes, init="zeros")
+    return out
+
+
+def vlm_layout(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_groups, self_per_group): cross-attn after every ``cross_every``-1
+    self layers; total layers = n_groups * cross_every."""
+    assert cfg.n_layers % cfg.cross_every == 0
+    return cfg.n_layers // cfg.cross_every, cfg.cross_every - 1
+
+
+def zamba_layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_groups, mamba_per_group, tail): shared attn block before each group."""
+    per = cfg.shared_attn_every
+    n_groups = cfg.n_layers // per
+    tail = cfg.n_layers - n_groups * per
+    return n_groups, per, tail
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab
+    out: dict = {}
+    if cfg.input_mode != "embeddings":
+        out["embed"] = Spec((v, d), ("vocab", "embed"))
+    out["final_norm"] = Spec((d,), ("embed",), init="ones")
+    out["head"] = Spec((d, v), ("embed", "vocab"))
+
+    if cfg.pattern == "uniform":
+        out["layers"] = _uniform_layer_specs(cfg, (cfg.n_layers,), ("layers",))
+    elif cfg.pattern == "vlm":
+        g, self_per = vlm_layout(cfg)
+        out["groups"] = {
+            "self": _uniform_layer_specs(cfg, (g, self_per), ("group", "layers")),
+            "cross": _cross_layer_specs(cfg, (g,), ("group",)),
+            "cross_ln2": Spec((g, d), ("group", "embed"), init="ones"),
+            "cross_mlp": _mlp_specs(cfg, (g,), ("group",)),
+        }
+    elif cfg.pattern == "zamba":
+        ng, per, tail = zamba_layout(cfg)
+        out["mamba_groups"] = _mamba_layer_specs(cfg, (ng, per), ("group", "layers"))
+        if tail:
+            out["tail"] = _mamba_layer_specs(cfg, (tail,), ("layers",))
+        out["shared"] = {
+            "ln1": Spec((d,), ("embed",), init="ones"),
+            "ln2": Spec((d,), ("embed",), init="ones"),
+            "attn": _attn_specs(cfg, (), ()),
+            "mlp": _mlp_specs(cfg, (), ()),
+        }
+    elif cfg.pattern == "rwkv":
+        out["layers"] = _rwkv_layer_specs(cfg, (cfg.n_layers,), ("layers",))
+    else:  # pragma: no cover
+        raise ValueError(cfg.pattern)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+def _path_key(path: str, seed: int) -> jax.Array:
+    h = int(hashlib.sha1(path.encode()).hexdigest()[:8], 16)
+    return jax.random.PRNGKey((seed * 1_000_003 + h) % (2**31))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0, dtype=jnp.float32) -> dict:
+    def build(path: str, spec: Spec):
+        dt = spec.dtype or dtype
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dt)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dt)
+        if spec.init.startswith("const:"):
+            return jnp.full(spec.shape, float(spec.init[6:]), dt)
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+        scale = 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(_path_key(path, seed), spec.shape) * scale).astype(dt)
+
+    return _map_specs(param_specs(cfg), build)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16, sharding_fn=None) -> dict:
+    """ShapeDtypeStruct skeleton (+ shardings) — no device allocation."""
+
+    def build(path: str, spec: Spec):
+        dt = spec.dtype or dtype
+        sh = sharding_fn(spec) if sharding_fn else None
+        if sh is not None:
+            return jax.ShapeDtypeStruct(spec.shape, dt, sharding=sh)
+        return jax.ShapeDtypeStruct(spec.shape, dt)
+
+    return _map_specs(param_specs(cfg), build)
+
+
+def _map_specs(tree, fn, path=""):
+    if _is_spec(tree):
+        return fn(path, tree)
+    return {k: _map_specs(v, fn, f"{path}/{k}") for k, v in tree.items()}
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _scan(cfg, body, init, xs):
+    """lax.scan that fully unrolls in analysis mode (exact cost accounting)."""
+    return jax.lax.scan(body, init, xs, unroll=True if cfg.unroll_scans else 1)
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def embed_inputs(params, cfg: ModelConfig, batch, acts=None):
+    acts = acts or {}
+    if cfg.input_mode == "embeddings":
+        h = batch["embeds"]
+    else:
+        h = jnp.take(params["embed"], batch["tokens"], axis=0)
+    return L.with_sharding(h.astype(compute_dtype(params)), acts.get("resid"))
+
+
+def compute_dtype(params):
+    leaf = jax.tree_util.tree_leaves(params)[0]
+    return jnp.bfloat16 if leaf.dtype == jnp.bfloat16 else leaf.dtype
+
+
+def _uniform_block(h, lp, cfg, acts, cache=None, pos=0):
+    a_in = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+    a, kv = L.attention_block(a_in, lp["attn"], cfg, cache=cache, pos_offset=pos, acts=acts)
+    h = h + a
+    m_in = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        m, aux = L.moe_block(m_in, lp["moe"], cfg, acts=acts)
+    else:
+        m, aux = L.mlp_block(m_in, lp["mlp"], cfg, acts=acts), 0.0
+    h = L.with_sharding(h + m, (acts or {}).get("resid"))
+    return h, kv, aux
+
+
+def _shared_block(h, sp, cfg, acts, cache=None, pos=0):
+    a, kv = L.attention_block(
+        L.rms_norm(h, sp["ln1"], cfg.norm_eps), sp["attn"], cfg,
+        cache=cache, pos_offset=pos, acts=acts,
+    )
+    h = h + a
+    h = h + L.mlp_block(L.rms_norm(h, sp["ln2"], cfg.norm_eps), sp["mlp"], cfg, acts=acts)
+    return L.with_sharding(h, (acts or {}).get("resid")), kv
+
+
+def _rwkv_block(h, lp, cfg, acts, state=None):
+    tm_state = None if state is None else {"shift": state["tm_shift"], "wkv": state["wkv"]}
+    y, new_tm = S.rwkv_time_mix(L.rms_norm(h, lp["ln1"], cfg.norm_eps), lp["tm"], cfg,
+                                state=tm_state, acts=acts)
+    h = h + y
+    y2, new_cm = S.rwkv_channel_mix(
+        L.rms_norm(h, lp["ln2"], cfg.norm_eps), lp["cm"],
+        state=None if state is None else state["cm_shift"],
+    )
+    h = L.with_sharding(h + y2, (acts or {}).get("resid"))
+    return h, {"tm_shift": new_tm["shift"], "wkv": new_tm["wkv"], "cm_shift": new_cm}
+
+
+def _mamba_block(h, mp, cfg, acts, state=None):
+    y, new_state = S.mamba2_mix(
+        L.rms_norm(h, mp["ln"], cfg.norm_eps), mp, cfg, state=state, acts=acts
+    )
+    return L.with_sharding(h + y, (acts or {}).get("resid")), new_state
+
+
+# -- mode: train / prefill ----------------------------------------------------
+
+def backbone(params, cfg: ModelConfig, h, batch, acts=None, collect_cache=False):
+    """Run all blocks. Returns (h, caches-or-None, aux_loss)."""
+    acts = acts or {}
+
+    if cfg.pattern == "uniform":
+        def body(carry, lp):
+            hh, aux = carry
+            if acts.get("layer_params") is not None:
+                lp = jax.tree_util.tree_map(
+                    L.with_sharding, lp, acts["layer_params"]
+                )
+            hh, kv, a = _uniform_block(hh, lp, cfg, acts)
+            ys = kv if collect_cache else None
+            return (hh, aux + a), ys
+
+        body = _remat(body, cfg)
+        layer_params = params["layers"]
+        if cfg.scan_groups and not collect_cache:
+            # √L nested scan: outer saves only G carries; the inner scan's
+            # carries are rematerialized per-group during backward, bounding
+            # live activation memory at (G + L/G)·|carry| instead of L·|carry|.
+            g = cfg.scan_groups
+            lt = cfg.n_layers
+            assert lt % g == 0, (lt, g)
+            grouped = jax.tree_util.tree_map(
+                lambda x: x.reshape((g, lt // g) + x.shape[1:]), layer_params
+            )
+
+            def outer(carry, gp):
+                out, _ = _scan(cfg, body, carry, gp)
+                return out, None
+
+            (h, aux), _ = _scan(cfg, _remat(outer, cfg), (h, 0.0), grouped)
+            return h, None, aux
+        (h, aux), kvs = _scan(cfg, body, (h, 0.0), layer_params)
+        caches = None if not collect_cache else {"k": kvs[0], "v": kvs[1]}
+        return h, caches, aux
+
+    if cfg.pattern == "vlm":
+        vision = batch["vision"].astype(h.dtype)
+
+        def body(carry, gp):
+            hh, aux = carry
+            def inner(hh2, lp):
+                hh2, kv, a = _uniform_block(hh2, lp, cfg, acts)
+                return hh2, (kv if collect_cache else None, a)
+            hh, (kvs, aux_s) = _scan(cfg, inner, hh, gp["self"])
+            aux = aux + jnp.sum(aux_s)
+            cp = gp["cross"]
+            x, xkv = L.cross_attention_block(
+                L.rms_norm(hh, cp["ln"], cfg.norm_eps), cp, cfg, vision=vision, acts=acts
+            )
+            hh = hh + jnp.tanh(cp["gate"]) * x
+            hh = hh + L.mlp_block(
+                L.rms_norm(hh, gp["cross_ln2"], cfg.norm_eps), gp["cross_mlp"], cfg, acts=acts
+            )
+            hh = L.with_sharding(hh, acts.get("resid"))
+            ys = (kvs, xkv) if collect_cache else None
+            return (hh, aux), ys
+
+        body = _remat(body, cfg)
+        (h, aux), ys = _scan(cfg, body, (h, 0.0), params["groups"])
+        caches = None
+        if collect_cache:
+            kvs, xkv = ys
+            caches = {"k": kvs[0], "v": kvs[1], "xk": xkv[0], "xv": xkv[1]}
+        return h, caches, aux
+
+    if cfg.pattern == "zamba":
+        sp = params["shared"]
+
+        def body(carry, gp):
+            hh = carry
+            hh, kv = _shared_block(hh, sp, cfg, acts)
+            def inner(hh2, mp):
+                hh2, st = _mamba_block(hh2, mp, cfg, acts)
+                return hh2, (st if collect_cache else None)
+            hh, sts = _scan(cfg, inner, hh, gp)
+            return hh, ((kv, sts) if collect_cache else None)
+
+        body = _remat(body, cfg)
+        h, ys = _scan(cfg, body, h, params["mamba_groups"])
+        tail_sts = None
+        if "tail" in params:
+            def tbody(hh, mp):
+                hh, st = _mamba_block(hh, mp, cfg, acts)
+                return hh, (st if collect_cache else None)
+            h, tail_sts = _scan(cfg, _remat(tbody, cfg), h, params["tail"])
+        caches = None
+        if collect_cache:
+            kv, sts = ys
+            caches = {
+                "shared_k": kv[0], "shared_v": kv[1],
+                "conv": sts["conv"], "ssm": sts["ssm"],
+            }
+            if tail_sts is not None:
+                caches["tail_conv"] = tail_sts["conv"]
+                caches["tail_ssm"] = tail_sts["ssm"]
+        return h, caches, 0.0
+
+    if cfg.pattern == "rwkv":
+        def body(hh, lp):
+            hh, st = _rwkv_block(hh, lp, cfg, acts)
+            return hh, (st if collect_cache else None)
+
+        body = _remat(body, cfg)
+        h, sts = _scan(cfg, body, h, params["layers"])
+        caches = sts if collect_cache else None
+        return h, caches, 0.0
+
+    raise ValueError(cfg.pattern)  # pragma: no cover
+
+
+def chunked_xent(h, head_w, labels, chunk: int, acts=None, unroll: bool = False):
+    """Sequence-chunked softmax cross-entropy (keeps logits O(B·chunk·V))."""
+    acts = acts or {}
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    n = s // chunk
+    assert s % chunk == 0
+    hc = h.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def body(tot, inp):
+        hb, lb = inp
+        logits = (hb @ head_w).astype(jnp.float32)
+        logits = L.with_sharding(logits, acts.get("logits"))
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(logz - ll), None
+
+    body = jax.checkpoint(body)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc),
+                            unroll=True if unroll else 1)
+    return total / (b * s)
+
+
+def forward_train(params, cfg: ModelConfig, batch, acts=None):
+    h = embed_inputs(params, cfg, batch, acts)
+    h, _, aux = backbone(params, cfg, h, batch, acts=acts, collect_cache=False)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    loss = chunked_xent(h, params["head"], batch["labels"], cfg.loss_chunk, acts,
+                        unroll=cfg.unroll_scans)
+    return loss + 0.01 * aux, {"xent": loss, "aux": aux}
+
+
+def forward_prefill(params, cfg: ModelConfig, batch, acts=None):
+    h = embed_inputs(params, cfg, batch, acts)
+    h, caches, _ = backbone(params, cfg, h, batch, acts=acts, collect_cache=True)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, -1] @ params["head"]).astype(jnp.float32)
+    return logits, caches
+
+
+# -- mode: decode ----------------------------------------------------------------
+
+def forward_decode(params, cfg: ModelConfig, batch, caches, pos, acts=None):
+    """One-token decode against full caches; returns (logits, new_caches).
+
+    ``pos`` is the (traced) write position; attention reads the whole cache
+    (decode_32k/long_500k lower with a full cache of seq_len per the brief).
+    """
+    acts = acts or {}
+    h = embed_inputs(params, cfg, batch, acts)     # (B, 1, D)
+
+    if cfg.pattern == "uniform":
+        def body(hh, xs):
+            lp, ck, cv = xs
+            k_new_v_new = None
+            x_in = L.rms_norm(hh, lp["ln1"], cfg.norm_eps)
+            b, s, d = x_in.shape
+            hh2, (ck2, cv2), _ = _decode_attn_update(x_in, hh, lp, cfg, ck, cv, pos, acts)
+            m_in = L.rms_norm(hh2, lp["ln2"], cfg.norm_eps)
+            if cfg.moe is not None:
+                m, _ = L.moe_block(m_in, lp["moe"], cfg, acts=acts)
+            else:
+                m = L.mlp_block(m_in, lp["mlp"], cfg, acts=acts)
+            return hh2 + m, (ck2, cv2)
+
+        h, (ck, cv) = _scan(cfg, body, h, (params["layers"], caches["k"], caches["v"]))
+        new_caches = {"k": ck, "v": cv}
+
+    elif cfg.pattern == "vlm":
+        def body(hh, xs):
+            gp, ck, cv, xk, xv = xs
+            def inner(hh2, xs2):
+                lp, ck1, cv1 = xs2
+                x_in = L.rms_norm(hh2, lp["ln1"], cfg.norm_eps)
+                hh3, (ck2, cv2), _ = _decode_attn_update(x_in, hh2, lp, cfg, ck1, cv1, pos, acts)
+                hh3 = hh3 + L.mlp_block(
+                    L.rms_norm(hh3, lp["ln2"], cfg.norm_eps), lp["mlp"], cfg, acts=acts)
+                return hh3, (ck2, cv2)
+            hh, (ck2, cv2) = _scan(cfg, inner, hh, (gp["self"], ck, cv))
+            cp = gp["cross"]
+            x, _ = L.cross_attention_block(
+                L.rms_norm(hh, cp["ln"], cfg.norm_eps), cp, cfg, kv=(xk, xv), acts=acts)
+            hh = hh + jnp.tanh(cp["gate"]) * x
+            hh = hh + L.mlp_block(
+                L.rms_norm(hh, gp["cross_ln2"], cfg.norm_eps), gp["cross_mlp"], cfg, acts=acts)
+            return hh, (ck2, cv2)
+
+        h, (ck, cv) = jax.lax.scan(
+            body, h,
+            (params["groups"], caches["k"], caches["v"], caches["xk"], caches["xv"]),
+        )
+        new_caches = dict(caches, k=ck, v=cv)
+
+    elif cfg.pattern == "zamba":
+        sp = params["shared"]
+
+        def body(hh, xs):
+            gp, sk, sv, conv, ssm_st = xs
+            x_in = L.rms_norm(hh, sp["ln1"], cfg.norm_eps)
+            hh, (sk2, sv2), _ = _decode_attn_update(
+                x_in, hh, {"attn": sp["attn"]}, cfg, sk, sv, pos, acts, wo_parent=sp)
+            hh = hh + L.mlp_block(L.rms_norm(hh, sp["ln2"], cfg.norm_eps), sp["mlp"], cfg, acts=acts)
+            def inner(hh2, xs2):
+                mp, cst, sst = xs2
+                hh3, st = _mamba_block(hh2, mp, cfg, acts, state={"conv": cst, "ssm": sst})
+                return hh3, (st["conv"], st["ssm"])
+            hh, (conv2, ssm2) = _scan(cfg, inner, hh, (gp, conv, ssm_st))
+            return hh, (sk2, sv2, conv2, ssm2)
+
+        h, (sk, sv, conv, ssm_st) = jax.lax.scan(
+            body, h,
+            (params["mamba_groups"], caches["shared_k"], caches["shared_v"],
+             caches["conv"], caches["ssm"]),
+        )
+        new_caches = {"shared_k": sk, "shared_v": sv, "conv": conv, "ssm": ssm_st}
+        if "tail" in params:
+            def tbody(hh, xs2):
+                mp, cst, sst = xs2
+                hh3, st = _mamba_block(hh, mp, cfg, acts, state={"conv": cst, "ssm": sst})
+                return hh3, (st["conv"], st["ssm"])
+            h, (tc, ts) = jax.lax.scan(
+                tbody, h, (params["tail"], caches["tail_conv"], caches["tail_ssm"]))
+            new_caches["tail_conv"], new_caches["tail_ssm"] = tc, ts
+
+    elif cfg.pattern == "rwkv":
+        def body(hh, xs):
+            lp, tm, cm, wkv = xs
+            hh, st = _rwkv_block(hh, lp, cfg, acts,
+                                 state={"tm_shift": tm, "cm_shift": cm, "wkv": wkv})
+            return hh, (st["tm_shift"], st["cm_shift"], st["wkv"])
+
+        h, (tm, cm, wkv) = jax.lax.scan(
+            body, h,
+            (params["layers"], caches["tm_shift"], caches["cm_shift"], caches["wkv"]),
+        )
+        new_caches = {"tm_shift": tm, "cm_shift": cm, "wkv": wkv}
+    else:  # pragma: no cover
+        raise ValueError(cfg.pattern)
+
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, -1] @ params["head"]).astype(jnp.float32)
+    return logits, new_caches
+
+
+def _decode_attn_update(x_in, h, lp, cfg, ck, cv, pos, acts, wo_parent=None):
+    """Project one token, write kv into the cache at ``pos``, attend, residual."""
+    p = lp["attn"]
+    b, s, d = x_in.shape
+    hN, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (x_in @ p["wq"]).reshape(b, s, hN, dh)
+    k = (x_in @ p["wk"]).reshape(b, s, kh, dh)
+    v = (x_in @ p["wv"]).reshape(b, s, kh, dh)
+    positions = pos + jnp.arange(s)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), pos, axis=1)
+    o = L.decode_attention(q[:, 0], ck, cv, valid_upto=pos)[:, None]
+    y = o.reshape(b, s, hN * dh) @ p["wo"]
+    return h + y, (ck, cv), None
+
+
+# ---------------------------------------------------------------------------
+# Cache skeletons (decode dry-run inputs)
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16) -> dict:
+    """Shape/logical-axes description of the decode cache pytree."""
+    kh, dh = cfg.n_kv_heads, cfg.d_head
+    kv_axes = (None, "act_batch", "cache_seq", "kv_heads", None)
+
+    def kv(*lead):
+        return Spec(lead + (batch, seq, kh, dh), (None,) * (len(lead)) + kv_axes[1:], init="zeros")
+
+    if cfg.pattern == "uniform":
+        return {"k": kv(cfg.n_layers), "v": kv(cfg.n_layers)}
+    if cfg.pattern == "vlm":
+        g, self_per = vlm_layout(cfg)
+        out = {
+            "k": Spec((g, self_per, batch, seq, kh, dh),
+                      (None, None, "act_batch", "cache_seq", "kv_heads", None), init="zeros"),
+            "v": Spec((g, self_per, batch, seq, kh, dh),
+                      (None, None, "act_batch", "cache_seq", "kv_heads", None), init="zeros"),
+            "xk": Spec((g, batch, cfg.n_vision_tokens, kh, dh),
+                       (None, "act_batch", None, "kv_heads", None), init="zeros"),
+            "xv": Spec((g, batch, cfg.n_vision_tokens, kh, dh),
+                       (None, "act_batch", None, "kv_heads", None), init="zeros"),
+        }
+        return out
+    if cfg.pattern == "zamba":
+        ng, per, tail = zamba_layout(cfg)
+        ssm = cfg.ssm
+        d_in = ssm.expand * cfg.d_model
+        hS = d_in // ssm.head_dim
+        out = {
+            "shared_k": kv(ng), "shared_v": kv(ng),
+            "conv": Spec((ng, per, batch, ssm.conv - 1, d_in),
+                         (None, None, "act_batch", None, "ssm_inner"), init="zeros"),
+            "ssm": Spec((ng, per, batch, hS, ssm.state, ssm.head_dim),
+                        (None, None, "act_batch", None, None, None), init="zeros"),
+        }
+        if tail:
+            out["tail_conv"] = Spec((tail, batch, ssm.conv - 1, d_in),
+                                    (None, "act_batch", None, "ssm_inner"), init="zeros")
+            out["tail_ssm"] = Spec((tail, batch, hS, ssm.state, ssm.head_dim),
+                                   (None, "act_batch", None, None, None), init="zeros")
+        return out
+    if cfg.pattern == "rwkv":
+        rw = cfg.rwkv
+        hR = cfg.d_model // rw.head_dim
+        lN, d = cfg.n_layers, cfg.d_model
+        return {
+            "tm_shift": Spec((lN, batch, d), (None, "act_batch", "act_embed"), init="zeros"),
+            "cm_shift": Spec((lN, batch, d), (None, "act_batch", "act_embed"), init="zeros"),
+            "wkv": Spec((lN, batch, hR, rw.head_dim, rw.head_dim),
+                        (None, "act_batch", None, None, None), init="zeros",
+                        dtype=jnp.float32),
+        }
+    raise ValueError(cfg.pattern)  # pragma: no cover
+
+
+class LM:
+    """Convenience namespace used by examples/tests."""
+
+    param_specs = staticmethod(param_specs)
+    init_params = staticmethod(init_params)
+    abstract_params = staticmethod(abstract_params)
+    forward_train = staticmethod(forward_train)
+    forward_prefill = staticmethod(forward_prefill)
+    forward_decode = staticmethod(forward_decode)
+    cache_specs = staticmethod(cache_specs)

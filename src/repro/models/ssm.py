@@ -1,0 +1,345 @@
+"""State-space blocks: Mamba2 (SSD chunked form) and RWKV6 (chunked WKV).
+
+Both are implemented in their TPU-native *chunked-parallel* forms: within a
+chunk the recurrence is expressed as masked matmuls (MXU work), and only the
+chunk-to-chunk state carry is a sequential ``lax.scan`` — the standard
+hardware adaptation of linear-attention/SSM recurrences (Mamba2's own SSD
+algorithm; GLA-style chunking for WKV6).  Sequential single-step references
+(`*_reference`) are the oracles for the property tests, and double as the
+O(1)-state decode steps.
+
+Numerical note (WKV6): the intra-chunk decay matrix is computed with the
+exact pairwise log-difference ``exp(pc_t - cum_s)`` (always ≤ 1 under the
+strictly-lower-triangular mask), avoiding the separable-form overflow;
+memory is O(Q²·H·K) per chunk, which is why the default chunk is 32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(xh, log_a, B_t, C_t, chunk: int, vectorized: bool = False):
+    """Chunked SSD scan.
+
+    xh:    (B, S, H, P)  dt-scaled inputs
+    log_a: (B, S, H)     per-step log decay (≤ 0)
+    B_t:   (B, S, N)     input projections (shared across heads)
+    C_t:   (B, S, N)     output projections
+    Returns y (B, S, H, P) and final state (B, H, N, P).
+    """
+    b, s, h, p = xh.shape
+    n = B_t.shape[-1]
+    pad = (-s) % chunk
+    if pad:  # state-neutral padding: zero input, decay 1
+        zp = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        y, S_fin = ssd_chunked(zp(xh), zp(log_a), zp(B_t), zp(C_t), chunk, vectorized)
+        return y[:, :s], S_fin
+    nc = s // chunk
+    xh_c = xh.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    la_c = log_a.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+    b_c = B_t.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    c_c = C_t.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    tril = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(S, inp):
+        x_i, la_i, b_i, c_i = inp                       # (B,Q,...)
+        cum = jnp.cumsum(la_i, axis=1)                   # (B,Q,H)
+        cb = jnp.einsum("btn,bsn->bts", c_i, b_i)        # (B,Q,Q)
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,t,s,H)
+        m = jnp.where(tril[None, :, :, None], cb[..., None] * dec, 0.0)
+        y = jnp.einsum("btsh,bshp->bthp", m, x_i)        # intra
+        y += jnp.einsum("bth,btn,bhnp->bthp", jnp.exp(cum), c_i, S)  # inter
+        w = jnp.exp(cum[:, -1:, :] - cum)                # (B,Q,H)
+        S_new = jnp.exp(cum[:, -1])[:, :, None, None] * S + jnp.einsum(
+            "bsh,bsn,bshp->bhnp", w, b_i, x_i
+        )
+        return S_new, y
+
+    S0 = jnp.zeros((b, h, n, p), jnp.float32)
+    if vectorized:
+        # analysis-exact form: all intra-chunk work is batched over chunks so
+        # XLA cost analysis counts every block; only the (tiny) chunk-state
+        # recurrence remains a while loop.
+        cum = jnp.cumsum(la_c, axis=2)                              # (nc,B,Q,H)
+        cb = jnp.einsum("cbtn,cbsn->cbts", c_c, b_c)
+        dec = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+        m = jnp.where(tril[None, None, :, :, None], cb[..., None] * dec, 0.0)
+        y_intra = jnp.einsum("cbtsh,cbshp->cbthp", m, xh_c)
+        w = jnp.exp(cum[:, :, -1:, :] - cum)
+        wx = w[..., None] * xh_c                                     # (nc,B,Q,H,P)
+        S_in = jnp.einsum("cbshp,cbsn->cbhnp", wx, b_c)              # per-chunk input state
+        gain = jnp.exp(cum[:, :, -1])                                # (nc,B,H)
+
+        def carry_body(S, inp):
+            S_i, g_i = inp
+            S_new = g_i[:, :, None, None] * S + S_i
+            return S_new, S                                          # emit state BEFORE chunk
+
+        S_fin, S_prev = jax.lax.scan(carry_body, S0, (S_in, gain))
+        y_int = jnp.einsum("cbtn,cbhnp->cbthp", c_c, S_prev)
+        y = y_intra + jnp.exp(cum)[..., None] * y_int
+        y = y.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+        return y, S_fin
+    S_fin, y = jax.lax.scan(body, S0, (xh_c, la_c, b_c, c_c))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, S_fin
+
+
+def ssd_reference(xh, log_a, B_t, C_t):
+    """Sequential oracle: S_t = a_t S_{t-1} + B_t ⊗ x_t ; y_t = C_t · S_t."""
+    b, s, h, p = xh.shape
+    n = B_t.shape[-1]
+
+    def step(S, inp):
+        x_t, la_t, b_t, c_t = inp
+        S = jnp.exp(la_t)[:, :, None, None] * S + jnp.einsum(
+            "bn,bhp->bhnp", b_t, x_t
+        )
+        y = jnp.einsum("bn,bhnp->bhp", c_t, S)
+        return S, y
+
+    S0 = jnp.zeros((b, h, n, p), jnp.float32)
+    xs = (
+        xh.transpose(1, 0, 2, 3), log_a.transpose(1, 0, 2),
+        B_t.transpose(1, 0, 2), C_t.transpose(1, 0, 2),
+    )
+    S_fin, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3), S_fin
+
+
+def ssd_decode_step(S, x_t, log_a_t, b_t, c_t):
+    """One decode step; S (B,H,N,P), x_t (B,H,P), log_a_t (B,H), b/c_t (B,N)."""
+    S = jnp.exp(log_a_t)[:, :, None, None] * S + jnp.einsum("bn,bhp->bhnp", b_t, x_t)
+    y = jnp.einsum("bn,bhnp->bhp", c_t, S)
+    return S, y
+
+
+def mamba2_mix(x, p, cfg, state=None, acts=None):
+    """Full Mamba2 mixer: in_proj → causal depthwise conv → SSD → gated out.
+
+    state (decode): dict(conv=(B, conv-1, d_in), ssm=(B,H,N,P)) or None.
+    Returns (y, new_state).
+    """
+    from .layers import rms_norm, with_sharding
+    ssm = cfg.ssm
+    b = x.shape[0]
+    s = x.shape[1]
+    d_in = ssm.expand * cfg.d_model
+    h = d_in // ssm.head_dim
+    n, pdim = ssm.state, ssm.head_dim
+    acts = acts or {}
+
+    zxbcdt = x @ p["in_proj"]
+    z, xr, b_t, c_t, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1
+    )
+    # causal depthwise conv (kernel ssm.conv) on xr
+    if state is None:
+        pad = jnp.zeros((b, ssm.conv - 1, d_in), xr.dtype)
+        xp = jnp.concatenate([pad, xr], axis=1)
+        new_conv = xp[:, -(ssm.conv - 1):]
+    else:
+        xp = jnp.concatenate([state["conv"].astype(xr.dtype), xr], axis=1)
+        new_conv = xp[:, -(ssm.conv - 1):]
+    xc = sum(
+        xp[:, i : i + s] * p["conv_w"][i][None, None, :] for i in range(ssm.conv)
+    ) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B,S,H)
+    log_a = -jnp.exp(p["a_log"])[None, None, :] * dt                 # (B,S,H)
+    xh = xc.reshape(b, s, h, pdim).astype(jnp.float32) * dt[..., None]
+    b_t = b_t.astype(jnp.float32)
+    c_t = c_t.astype(jnp.float32)
+
+    if state is None:
+        y, S_fin = ssd_chunked(xh, log_a, b_t, c_t, min(ssm.chunk, s),
+                               vectorized=cfg.unroll_scans)
+    else:
+        S_fin, y1 = ssd_decode_step(
+            state["ssm"], xh[:, 0], log_a[:, 0], b_t[:, 0], c_t[:, 0]
+        )
+        y = y1[:, None]
+    y = y + p["d_skip"][None, None, :, None] * xc.reshape(b, s, h, pdim).astype(jnp.float32)
+    y = y.reshape(b, s, d_in)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    y = with_sharding(y, acts.get("ff"))
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv, "ssm": S_fin}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch)
+# ---------------------------------------------------------------------------
+
+def wkv_chunked(r, k, v, log_w, u, chunk: int, vectorized: bool = False):
+    """Chunked WKV6: S_t = diag(w_t) S_{t-1} + kᵀv ; o_t = r·(S_{t-1} + diag(u) kᵀv).
+
+    r, k, log_w: (B, S, H, K); v: (B, S, H, V); u: (H, K).
+    Returns o (B, S, H, V) and final state (B, H, K, V).
+    """
+    b, s, h, kk = r.shape
+    vv = v.shape[-1]
+    pad = (-s) % chunk
+    if pad:  # state-neutral padding: r=k=v=0, decay 1 (log_w=0)
+        zp = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        o, S_fin = wkv_chunked(zp(r), zp(k), zp(v), zp(log_w), u, chunk, vectorized)
+        return o[:, :s], S_fin
+    nc = s // chunk
+    rs = r.reshape(b, nc, chunk, h, kk).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(b, nc, chunk, h, kk).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nc, chunk, h, vv).transpose(1, 0, 2, 3, 4)
+    ws = log_w.reshape(b, nc, chunk, h, kk).transpose(1, 0, 2, 3, 4)
+    strict = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def body(S, inp):
+        r_i, k_i, v_i, w_i = inp                    # (B,Q,H,K/V)
+        cum = jnp.cumsum(w_i, axis=1)                # (B,Q,H,K)  cum_t = Σ_{j≤t} log w
+        pc = cum - w_i                               # cum_{t-1}
+        # inter-chunk: o += (r ⊙ exp(pc)) · S
+        o = jnp.einsum("bthk,bhkv->bthv", r_i * jnp.exp(pc), S)
+        # intra-chunk strictly-lower: A[t,s] = Σ_K r_t k_s exp(pc_t - cum_s)
+        dec = jnp.exp(
+            jnp.clip(pc[:, :, None] - cum[:, None, :], max=0.0)
+        )                                            # (B,t,s,H,K), ≤1 on mask
+        a = jnp.einsum("bthk,bshk,btshk->bths", r_i, k_i, dec)
+        a = jnp.where(strict[None, :, None, :], a, 0.0)
+        o += jnp.einsum("bths,bshv->bthv", a, v_i)
+        # diagonal bonus term: (r ⊙ u ⊙ k) per step
+        o += (r_i * u[None, None] * k_i).sum(-1)[..., None] * v_i
+        # state update: S' = diag(Πw) S + Σ_s exp(cum_Q - cum_s) k_s ⊗ v_s
+        wq = cum[:, -1]                               # (B,H,K)
+        decay_to_end = jnp.exp(cum[:, -1][:, None] - cum)   # (B,Q,H,K) ≤ 1
+        S_new = jnp.exp(wq)[..., None] * S + jnp.einsum(
+            "bshk,bshv->bhkv", k_i * decay_to_end, v_i
+        )
+        return S_new, o
+
+    S0 = jnp.zeros((b, h, kk, vv), jnp.float32)
+    if vectorized:
+        cum = jnp.cumsum(ws, axis=2)                                 # (nc,B,Q,H,K)
+        pc = cum - ws
+        dec = jnp.exp(jnp.clip(pc[:, :, :, None] - cum[:, :, None, :], max=0.0))
+        rdec = rs[:, :, :, None] * dec                               # (nc,B,t,s,H,K)
+        a = jnp.einsum("cbtshk,cbshk->cbths", rdec, ks)
+        a = jnp.where(strict[None, None, :, None, :], a, 0.0)
+        o = jnp.einsum("cbths,cbshv->cbthv", a, vs)
+        o += (rs * u[None, None, None] * ks).sum(-1)[..., None] * vs
+        decay_to_end = jnp.exp(cum[:, :, -1][:, :, None] - cum)
+        S_in = jnp.einsum("cbshk,cbshv->cbhkv", ks * decay_to_end, vs)
+        gain = jnp.exp(cum[:, :, -1])                                 # (nc,B,H,K)
+
+        def carry_body(S, inp):
+            S_i, g_i = inp
+            return g_i[..., None] * S + S_i, S
+
+        S_fin, S_prev = jax.lax.scan(carry_body, S0, (S_in, gain))
+        o += jnp.einsum("cbthk,cbhkv->cbthv", rs * jnp.exp(pc), S_prev)
+        o = o.transpose(1, 0, 2, 3, 4).reshape(b, s, h, vv)
+        return o, S_fin
+    S_fin, o = jax.lax.scan(body, S0, (rs, ks, vs, ws))
+    o = o.transpose(1, 0, 2, 3, 4).reshape(b, s, h, vv)
+    return o, S_fin
+
+
+def wkv_reference(r, k, v, log_w, u):
+    """Sequential oracle for WKV6."""
+    b, s, h, kk = r.shape
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None][..., None] * kv)
+        S = jnp.exp(w_t)[..., None] * S + kv
+        return S, o
+
+    S0 = jnp.zeros((b, h, kk, v.shape[-1]), jnp.float32)
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, log_w))
+    S_fin, o = jax.lax.scan(step, S0, xs)
+    return o.transpose(1, 0, 2, 3), S_fin
+
+
+def wkv_decode_step(S, r_t, k_t, v_t, log_w_t, u):
+    kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+    o = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None][..., None] * kv)
+    S = jnp.exp(log_w_t)[..., None] * S + kv
+    return S, o
+
+
+def rwkv_time_mix(x, p, cfg, state=None, acts=None):
+    """RWKV6 time-mix with data-dependent decay.
+
+    state (decode): dict(shift=(B, D), wkv=(B,H,K,V)).  Returns (y, new_state).
+    """
+    from .layers import with_sharding
+    rw = cfg.rwkv
+    b, s, d = x.shape
+    h = d // rw.head_dim
+    kk = rw.head_dim
+    acts = acts or {}
+
+    if state is None:
+        prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+        new_shift = x[:, -1]
+    else:
+        prev = state["shift"][:, None].astype(x.dtype)
+        new_shift = x[:, -1]
+    dx = prev - x
+
+    def mix(mu):
+        return x + dx * mu[None, None, :]
+
+    r = (mix(p["mu_r"]) @ p["wr"]).reshape(b, s, h, kk)
+    kx = (mix(p["mu_k"]) @ p["wk"]).reshape(b, s, h, kk)
+    vx = (mix(p["mu_v"]) @ p["wv"]).reshape(b, s, h, kk)
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["wg"])
+    # data-dependent decay (the Finch contribution): w = exp(-exp(w0 + lora(x)))
+    xw = mix(p["mu_w"])
+    ddd = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    log_w = -jnp.exp(
+        jnp.clip(p["w0"][None, None, :] + ddd.astype(jnp.float32), max=8.0)
+    )
+    log_w = log_w.reshape(b, s, h, kk)
+
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, kx, vx))
+    if state is None:
+        o, S_fin = wkv_chunked(r32, k32, v32, log_w, p["u"], min(rw.chunk, s),
+                               vectorized=cfg.unroll_scans)
+    else:
+        S_fin, o1 = wkv_decode_step(
+            state["wkv"], r32[:, 0], k32[:, 0], v32[:, 0], log_w[:, 0], p["u"]
+        )
+        o = o1[:, None]
+    # per-head groupnorm
+    o = o.reshape(b, s, h, kk)
+    mean = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = (o - mean) * jax.lax.rsqrt(var + 64e-5)
+    o = o.reshape(b, s, d) * p["ln_x"][None, None, :]
+    o = (o.astype(x.dtype) * g)
+    o = with_sharding(o, acts.get("ff"))
+    y = o @ p["wo"]
+    return y, {"shift": new_shift, "wkv": S_fin}
+
+
+def rwkv_channel_mix(x, p, state=None):
+    """RWKV6 channel-mix; state (decode): (B, D) shift."""
+    if state is None:
+        prev = jnp.concatenate([jnp.zeros_like(x[:, :1]), x[:, :-1]], axis=1)
+        new_shift = x[:, -1]
+    else:
+        prev = state[:, None].astype(x.dtype)
+        new_shift = x[:, -1]
+    dx = prev - x
+    xk = x + dx * p["mu_k"][None, None, :]
+    xr = x + dx * p["mu_r"][None, None, :]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    y = jax.nn.sigmoid(xr @ p["wr_gate"]) * (k @ p["wv"])
+    return y, new_shift

@@ -1,0 +1,101 @@
+"""AdamW with warmup-cosine schedule, global-norm clipping, and configurable
+moment dtypes (m in bf16 + v in fp32 by default — the ≥100B-parameter memory
+budget in EXPERIMENTS.md §Dry-run depends on this split)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import Spec, param_specs, _map_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    m_dtype: str = "bfloat16"
+    v_dtype: str = "float32"
+
+
+def lr_at(cfg: AdamWConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.peak_lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    return {
+        "m": jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, cfg.m_dtype), params),
+        "v": jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, cfg.v_dtype), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(model_cfg, cfg: AdamWConfig) -> dict:
+    """Spec pytree mirroring ``init_opt_state`` (same logical axes as params)."""
+    ps = param_specs(model_cfg)
+    m = _map_specs(ps, lambda _, s: Spec(s.shape, s.axes, init="zeros", dtype=cfg.m_dtype))
+    v = _map_specs(ps, lambda _, s: Spec(s.shape, s.axes, init="zeros", dtype=cfg.v_dtype))
+    return {"m": m, "v": v, "step": Spec((), (), init="zeros", dtype="int32")}
+
+
+def global_norm(tree):
+    # square in the native dtype, reduce with an fp32 accumulator: never
+    # materializes an fp32 cast of a (possibly 100B-parameter) bf16 leaf, and
+    # never ravels (which would break GSPMD shardings and replicate)
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(
+        jnp.sum(jax.lax.square(l), dtype=jnp.float32) for l in leaves
+    ))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step; moment/param dtypes are preserved leaf-wise."""
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    def upd_slice(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        mhat = m32 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v32 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    def upd(p, g, m, v):
+        # Stream layer-stacked leaves through lax.map so the fp32 update
+        # chain's transients are one layer-slice, not the whole tree (a
+        # ≥100B-parameter leaf otherwise costs ~6 fp32 copies at once).
+        # The optimization_barrier pins the casts inside the loop — XLA
+        # otherwise hoists them out, recreating full-stack fp32 copies.
+        if p.ndim >= 3 and p.shape[0] <= 256:
+            def body(t):
+                return upd_slice(*jax.lax.optimization_barrier(t))
+            return jax.lax.map(body, (p, g, m, v))
+        return upd_slice(p, g, m, v)
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,189 @@
+"""Sparse annotated relations (dictionary-encoded COO) and the catalog.
+
+The DBMS the paper delegates storage to is replaced by this layer: a relation
+is a set of dictionary-encoded attribute code columns plus numeric measure
+columns.  ``lift_rows`` turns a relation into per-row semiring fields
+(COUNT → 1̄, SUM → measure, MOMENTS → (1,x,x²), tropical → value, …);
+``Relation.to_factor`` densifies via segment ⊕-aggregation (the
+``segment_aggregate`` Pallas kernel's job on TPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import semiring as sr
+from repro.core.factor import Factor
+
+
+def _digest_array(a: np.ndarray) -> str:
+    return hashlib.sha1(np.ascontiguousarray(a).tobytes()).hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class Predicate:
+    """σ annotation: a boolean mask over one attribute's domain (paper §3.3).
+
+    Hashable by content digest so message signatures (Prop. 2) can include it.
+    """
+
+    attr: str
+    mask: np.ndarray  # bool (domain,)
+    label: str = ""
+
+    @property
+    def digest(self) -> str:
+        return f"{self.attr}:{_digest_array(self.mask)}"
+
+    def __hash__(self):
+        return hash(self.digest)
+
+    def __eq__(self, other):
+        return isinstance(other, Predicate) and self.digest == other.digest
+
+
+def mask_in(domain: int, values: Sequence[int], attr: str = "", label: str = "") -> Predicate:
+    m = np.zeros((domain,), bool)
+    m[np.asarray(list(values), np.int64)] = True
+    return Predicate(attr=attr, mask=m, label=label or f"{attr} IN {list(values)[:4]}")
+
+
+def mask_range(domain: int, lo: int, hi: int, attr: str = "", label: str = "") -> Predicate:
+    m = np.zeros((domain,), bool)
+    m[lo:hi] = True
+    return Predicate(attr=attr, mask=m, label=label or f"{lo}<={attr}<{hi}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Relation:
+    """Dictionary-encoded sparse annotated relation."""
+
+    name: str
+    attrs: tuple[str, ...]
+    codes: Mapping[str, np.ndarray]        # attr -> int32 (N,)
+    domains: Mapping[str, int]             # attr -> domain size
+    measures: Mapping[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    weights: np.ndarray | None = None      # explicit multiplicity annotation
+    version: str = "v0"
+
+    @property
+    def num_rows(self) -> int:
+        return 0 if not self.attrs else int(self.codes[self.attrs[0]].shape[0])
+
+    @property
+    def key(self) -> tuple[str, str]:
+        return (self.name, self.version)
+
+    @property
+    def digest(self) -> str:
+        h = hashlib.sha1()
+        h.update(self.name.encode())
+        h.update(self.version.encode())
+        return h.hexdigest()[:16]
+
+    def with_version(self, version: str, **updates) -> "Relation":
+        return dataclasses.replace(self, version=version, **updates)
+
+    def filter_rows(self, row_mask: np.ndarray, version: str) -> "Relation":
+        codes = {a: c[row_mask] for a, c in self.codes.items()}
+        measures = {m: v[row_mask] for m, v in self.measures.items()}
+        w = self.weights[row_mask] if self.weights is not None else None
+        return dataclasses.replace(
+            self, codes=codes, measures=measures, weights=w, version=version
+        )
+
+    def perturb_measure(self, measure: str, scale: float, seed: int, version: str) -> "Relation":
+        """Random cell-value perturbation (paper §5.1.1 relation-update test)."""
+        rng = np.random.default_rng(seed)
+        col = self.measures[measure]
+        new = col * (1.0 + scale * rng.standard_normal(col.shape)).astype(col.dtype)
+        measures = dict(self.measures)
+        measures[measure] = new
+        return dataclasses.replace(self, measures=measures, version=version)
+
+    # -- densification ------------------------------------------------------
+    def flat_codes(self, attrs: Sequence[str]) -> tuple[np.ndarray, int]:
+        attrs = list(attrs)
+        if not attrs:
+            return np.zeros((self.num_rows,), np.int64), 1
+        dims = [self.domains[a] for a in attrs]
+        idx = np.ravel_multi_index(
+            tuple(self.codes[a].astype(np.int64) for a in attrs), dims
+        )
+        return idx, int(np.prod(dims))
+
+    def to_factor(self, ring: sr.Semiring, measure: str | None = None) -> Factor:
+        rows = lift_rows(self, ring, measure)
+        idx, total = self.flat_codes(self.attrs)
+        field = ring.segment_reduce(rows, jnp.asarray(idx), total)
+        shape = tuple(self.domains[a] for a in self.attrs)
+        field = jax.tree_util.tree_map(
+            lambda leaf: leaf.reshape(shape + leaf.shape[1:]), field
+        )
+        return Factor(tuple(self.attrs), field, ring)
+
+
+def lift_rows(rel: Relation, ring: sr.Semiring, measure: str | None = None) -> sr.Field:
+    """Per-row semiring elements for a relation (paper §2 annotation lift)."""
+    n = rel.num_rows
+    w = (
+        jnp.asarray(rel.weights, jnp.float32)
+        if rel.weights is not None
+        else jnp.ones((n,), jnp.float32)
+    )
+    if ring.name in ("count", "count_i64"):
+        return w.astype(ring.dtype)
+    if ring.name == "sum":
+        col = jnp.asarray(rel.measures[measure], jnp.float32) if measure else jnp.ones((n,))
+        return col * w
+    if ring.name == "moments":
+        if measure is None:  # relation doesn't carry the measure → ⊗-identity ⊙ count
+            return (w, jnp.zeros_like(w), jnp.zeros_like(w))
+        col = jnp.asarray(rel.measures[measure], jnp.float32)
+        return sr.moments_lift(col, w)
+    if ring.name in ("tropical_min", "tropical_max"):
+        if measure is None:
+            return jnp.zeros((n,), jnp.float32)  # ⊗-identity: joins add 0
+        return jnp.asarray(rel.measures[measure], jnp.float32)
+    if ring.name == "bool":
+        return jnp.ones((n,), bool)
+    raise KeyError(f"no default lift for ring {ring.name}; supply one via Query.lifts")
+
+
+class Catalog:
+    """Versioned relation store — the stand-in for DBMS tables."""
+
+    def __init__(self, relations: Sequence[Relation] = ()):
+        self._store: dict[tuple[str, str], Relation] = {}
+        self._latest: dict[str, str] = {}
+        for r in relations:
+            self.put(r)
+
+    def put(self, rel: Relation) -> None:
+        self._store[(rel.name, rel.version)] = rel
+        self._latest[rel.name] = rel.version
+
+    def get(self, name: str, version: str | None = None) -> Relation:
+        v = version or self._latest[name]
+        return self._store[(name, v)]
+
+    def names(self) -> list[str]:
+        return sorted(self._latest)
+
+    def latest_version(self, name: str) -> str:
+        return self._latest[name]
+
+    def domains(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for (name, _), rel in self._store.items():
+            for a, d in rel.domains.items():
+                if a in out and out[a] != d:
+                    raise ValueError(f"inconsistent domain for {a}")
+                out[a] = d
+        return out

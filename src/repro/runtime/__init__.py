@@ -1,0 +1,2 @@
+from .sharding import ShardingRules, make_rules, pspec_for, sharding_for, act_specs, batch_specs  # noqa: F401
+from .step import make_train_step, make_prefill_step, make_decode_step  # noqa: F401

@@ -1,0 +1,170 @@
+"""Logical-axis → mesh-axis sharding rules with divisibility fallback.
+
+Every parameter/cache leaf is declared once with logical axes (models/lm.py
+``Spec``); this module maps them onto the production mesh:
+
+  single pod  : (data=16, model=16)          fsdp=(data,)        tensor=model
+  multi pod   : (pod=2, data=16, model=16)   fsdp=(pod, data)    tensor=model
+
+Rules are *requests*: a dim whose size is not divisible by the mesh axes it
+maps to falls back to replication (e.g. deepseek's 56 q-heads on a 16-way
+tensor axis — the flat head projection dim 7168 still shards; granite's
+49155-way vocab replicates).  A mesh axis is also never used twice in one
+PartitionSpec (first dim wins).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.lm import Spec, _map_specs, param_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    table: Mapping[str, tuple[str, ...]]   # logical axis -> mesh axes
+
+    def axes_for(self, logical: Any) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        return tuple(self.table.get(logical, ()))
+
+
+def make_rules(mesh: Mesh, shape: ShapeConfig | None = None, multi_pod: bool | None = None) -> ShardingRules:
+    if multi_pod is None:
+        multi_pod = "pod" in mesh.axis_names
+    fsdp = ("pod", "data") if multi_pod else ("data",)
+    tensor = ("model",)
+    table: dict[str, tuple[str, ...]] = {
+        # parameters
+        "embed": fsdp,
+        "vocab": tensor,
+        "heads_flat": tensor,
+        "kv_flat": tensor,
+        "mlp": tensor,
+        "experts": tensor,
+        "ssm_inner": tensor,
+        "layers": (), "group": (),
+        # activations / caches
+        "act_batch": fsdp,
+        "act_seq": (),
+        "act_embed": tensor,
+        "act_heads": tensor,
+        "act_ff": tensor,
+        "cache_seq": tensor,
+        "kv_heads": (),
+        "act_vocab": tensor,
+        "act_experts": tensor,
+    }
+    if shape is not None and shape.kind == "decode" and shape.global_batch < _n(mesh, fsdp):
+        # long-context decode (batch=1): nothing to shard on batch; spread the
+        # KV cache/sequence over the whole mesh instead.
+        table["act_batch"] = ()
+        table["cache_seq"] = fsdp + tensor
+    return ShardingRules(mesh=mesh, table=table)
+
+
+def _n(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def pspec_for(spec_shape: tuple[int, ...], logical_axes: tuple, rules: ShardingRules) -> P:
+    used: set[str] = set()
+    entries = []
+    for dim, logical in zip(spec_shape, logical_axes):
+        axes = [a for a in rules.axes_for(logical) if a not in used]
+        if axes and dim % _n(rules.mesh, tuple(axes)) == 0:
+            used.update(axes)
+            entries.append(tuple(axes) if len(axes) > 1 else axes[0])
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def sharding_for(spec: Spec, rules: ShardingRules) -> NamedSharding:
+    return NamedSharding(rules.mesh, pspec_for(spec.shape, spec.axes, rules))
+
+
+def tree_shardings(spec_tree, rules: ShardingRules):
+    return _map_specs(spec_tree, lambda _, s: sharding_for(s, rules))
+
+
+def tree_abstract(spec_tree, rules: ShardingRules, default_dtype):
+    import jax.numpy as jnp
+
+    def build(_, s: Spec):
+        dt = s.dtype or default_dtype
+        return jax.ShapeDtypeStruct(s.shape, jnp.dtype(dt), sharding=sharding_for(s, rules))
+
+    return _map_specs(spec_tree, build)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints handed into the forward pass
+# ---------------------------------------------------------------------------
+
+def act_specs(cfg: ModelConfig, rules: ShardingRules) -> dict:
+    """PartitionSpecs for with_sharding_constraint sites inside the model."""
+    r = rules
+
+    def p(*logicals, dims):
+        return NamedSharding(r.mesh, pspec_for(dims, logicals, r))
+
+    d = cfg.d_model
+    # context-parallel attention: put the tensor axis on the sequence dim of
+    # q/k/v instead of heads (deepseek: 56 heads ∤ 16)
+    seq_ax = "act_embed" if getattr(cfg, "attn_seq_shard", False) else "act_seq"
+    head_ax = None if getattr(cfg, "attn_seq_shard", False) else "act_heads"
+    resid_ax = "act_embed" if getattr(cfg, "resid_shard", True) else None
+    out = {
+        "resid": p("act_batch", "act_seq", resid_ax, dims=(1 << 30, 1 << 30, d)),
+        "qkv": p("act_batch", seq_ax, head_ax, None,
+                 dims=(1 << 30, 1 << 30, cfg.n_heads, cfg.d_head)),
+        "kv": p("act_batch", seq_ax, "kv_heads", None,
+                dims=(1 << 30, 1 << 30, cfg.n_kv_heads, cfg.d_head)),
+        "ff": p("act_batch", "act_seq", "act_ff", dims=(1 << 30, 1 << 30, cfg.d_ff)),
+        "logits": p("act_batch", "act_seq", "act_vocab", dims=(1 << 30, 1 << 30, cfg.vocab)),
+    }
+    if cfg.moe:
+        out["expert_in"] = p(None, "act_experts", None, None,
+                             dims=(1 << 30, cfg.moe.n_experts, 1 << 30, d))
+        out["expert_ff"] = p(None, "act_experts", None, None,
+                             dims=(1 << 30, cfg.moe.n_experts, 1 << 30, cfg.moe.d_ff))
+    return out
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules, dtype) -> dict:
+    """ShapeDtypeStructs (with shardings) for one device batch."""
+    import jax.numpy as jnp
+
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    m = rules.mesh
+
+    def sds(shape_, logicals, dt):
+        return jax.ShapeDtypeStruct(
+            shape_, jnp.dtype(dt),
+            sharding=NamedSharding(m, pspec_for(shape_, logicals, rules)),
+        )
+
+    out = {}
+    if cfg.input_mode == "embeddings":
+        out["embeds"] = sds((b, s, cfg.d_model), ("act_batch", "act_seq", "act_embed"), dtype)
+    else:
+        out["tokens"] = sds((b, s), ("act_batch", "act_seq"), "int32")
+    if cfg.input_mode == "tokens+vision":
+        out["vision"] = sds(
+            (b, cfg.n_vision_tokens, cfg.d_model), ("act_batch", None, "act_embed"), dtype
+        )
+    if shape.kind == "train":
+        out["labels"] = sds((b, s), ("act_batch", "act_seq"), "int32")
+    return out

@@ -1,0 +1,138 @@
+"""Jitted step builders: train (grad + AdamW, optional microbatch accumulation
+and manual-DP int8-compressed gradient reduction), prefill, decode.
+
+Each builder returns (fn, in_specs, out_shardings-ready jit) so the dry-run
+can ``.lower().compile()`` against ShapeDtypeStructs and the train driver can
+run the same function on real arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.optim import adamw
+from .sharding import ShardingRules, act_specs, tree_shardings, tree_abstract
+
+
+def layer_slice_constraint(cfg: ModelConfig, rules: ShardingRules):
+    """Shardings for ONE stacked-layer slice: re-asserted inside the scan body
+    so GSPMD keeps per-layer weights sharded instead of hoisting a full FSDP
+    all-gather of the whole stack out of the loop (which alone is
+    params·(1/model_axis) bytes — 42 GiB for nemotron-4-340b)."""
+    from jax.sharding import NamedSharding
+    from repro.models.lm import param_specs, _map_specs, Spec
+    from .sharding import pspec_for
+
+    specs = param_specs(cfg)
+    if "layers" not in specs:
+        return None
+
+    def slice_sharding(_, s: Spec):
+        return NamedSharding(rules.mesh, pspec_for(s.shape[1:], s.axes[1:], rules))
+
+    return _map_specs(specs["layers"], slice_sharding)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig,
+    rules: ShardingRules | None = None,
+    accum: int = 1,
+    donate: bool = True,
+):
+    """Returns a jitted train_step(params, opt_state, batch) → (params, opt, metrics)."""
+    acts = act_specs(cfg, rules) if rules is not None else {}
+    if rules is not None:
+        lc = layer_slice_constraint(cfg, rules)
+        if lc is not None:
+            acts["layer_params"] = lc
+
+    def loss_fn(params, batch):
+        loss, metrics = lm.forward_train(params, cfg, batch, acts=acts)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        else:
+            # microbatch gradient accumulation: batch leading dim splits into
+            # (accum, b/accum); bf16 accumulators keep the ≥100B budget.
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((accum, b // accum) + x.shape[1:])
+
+            mbs = jax.tree_util.tree_map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(a.dtype), g_acc, g
+                )
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.bfloat16), params
+            )
+            (grads, loss), _ = jax.lax.scan(acc_body, (g0, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {}
+        params, opt_state, om = adamw.apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+
+    donate_argnums = (0, 1) if donate else ()
+    return jax.jit(train_step, donate_argnums=donate_argnums)
+
+
+def make_prefill_step(cfg: ModelConfig, rules: ShardingRules | None = None,
+                      shape: ShapeConfig | None = None):
+    acts = act_specs(cfg, rules) if rules is not None else {}
+
+    def prefill(params, batch):
+        return lm.forward_prefill(params, cfg, batch, acts=acts)
+
+    out_shardings = None
+    if rules is not None and shape is not None:
+        # the produced KV/state caches must leave the step sharded (seq over
+        # the tensor axis) — a 32k cache replicated per device is tens of GiB
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from .sharding import pspec_for
+        cache_sh = tree_shardings(
+            lm.cache_specs(cfg, shape.global_batch, shape.seq_len), rules
+        )
+        logits_sh = NamedSharding(
+            rules.mesh,
+            pspec_for((shape.global_batch, cfg.vocab), ("act_batch", "act_vocab"), rules),
+        )
+        out_shardings = (logits_sh, cache_sh)
+    return jax.jit(prefill, out_shardings=out_shardings)
+
+
+def make_decode_step(cfg: ModelConfig, rules: ShardingRules | None = None, donate: bool = True):
+    acts = act_specs(cfg, rules) if rules is not None else {}
+
+    def decode(params, batch, caches, pos):
+        return lm.forward_decode(params, cfg, batch, caches, pos, acts=acts)
+
+    return jax.jit(decode, donate_argnums=(2,) if donate else ())
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg, rules: ShardingRules, param_dtype="bfloat16"):
+    """(params, opt_state) ShapeDtypeStructs with shardings for the dry-run."""
+    pspecs = lm.param_specs(cfg)
+    params = tree_abstract(pspecs, rules, param_dtype)
+    opt = tree_abstract(adamw.opt_state_specs(cfg, opt_cfg), rules, "float32")
+    return params, opt
+
+
+def abstract_caches(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules, dtype="bfloat16"):
+    specs = lm.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    return tree_abstract(specs, rules, dtype)

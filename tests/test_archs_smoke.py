@@ -1,0 +1,98 @@
+"""Per-architecture smoke tests (brief requirement): a REDUCED config of the
+same family runs one forward/train step on CPU — output shapes + no NaNs.
+The FULL configs are exercised only via the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.configs.base import smoke_config
+from repro.models import lm
+
+
+def _batch(cfg, b=2, s=32, rng=None):
+    rng = rng or np.random.default_rng(0)
+    out = {"labels": rng.integers(0, cfg.vocab, (b, s)).astype(np.int32)}
+    if cfg.input_mode == "embeddings":
+        out["embeds"] = rng.standard_normal((b, s, cfg.d_model)).astype(np.float32)
+    else:
+        out["tokens"] = rng.integers(0, cfg.vocab, (b, s)).astype(np.int32)
+    if cfg.input_mode == "tokens+vision":
+        out["vision"] = rng.standard_normal(
+            (b, cfg.n_vision_tokens, cfg.d_model)
+        ).astype(np.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    full = get_config(arch)
+    cfg = smoke_config(full)
+    assert cfg.family == full.family and cfg.pattern == full.pattern
+    params = lm.init_params(cfg, 0)
+    batch = _batch(cfg)
+    loss, metrics = jax.jit(lambda p, b: lm.forward_train(p, cfg, b))(params, batch)
+    assert np.isfinite(float(loss)), arch
+    logits, caches = jax.jit(lambda p, b: lm.forward_prefill(p, cfg, b))(params, batch)
+    assert logits.shape == (2, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32))), arch
+    # one optimizer step moves parameters
+    from repro.optim.adamw import AdamWConfig, init_opt_state
+    from repro.runtime.step import make_train_step
+    opt_cfg = AdamWConfig(m_dtype="float32")
+    opt = init_opt_state(params, opt_cfg)
+    step = make_train_step(cfg, opt_cfg, donate=False)
+    p2, _, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2))
+    )
+    assert moved, arch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_matches_assignment(arch):
+    """Pin the exact published hyperparameters from the brief."""
+    cfg = get_config(arch)
+    expect = {
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "nemotron-4-340b": (96, 18432, 96, 8, 73728, 256000),
+        "deepseek-coder-33b": (62, 7168, 56, 8, 19200, 32256),
+        "stablelm-12b": (40, 5120, 32, 8, 13824, 100352),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab)
+    assert got == expect, (arch, got, expect)
+    if arch == "dbrx-132b":
+        assert (cfg.moe.n_experts, cfg.moe.top_k) == (16, 4)
+    if arch == "granite-moe-1b-a400m":
+        assert (cfg.moe.n_experts, cfg.moe.top_k) == (32, 8)
+    if arch == "zamba2-1.2b":
+        assert cfg.ssm.state == 64 and cfg.sub_quadratic
+    if arch == "rwkv6-7b":
+        assert cfg.sub_quadratic and cfg.pattern == "rwkv"
+    if arch == "llama-3.2-vision-90b":
+        assert cfg.pattern == "vlm"
+
+
+def test_param_counts_plausible():
+    """n_params() sits near the advertised sizes (sanity for MODEL_FLOPS)."""
+    expect_b = {
+        "dbrx-132b": (110, 150), "nemotron-4-340b": (300, 380),
+        "deepseek-coder-33b": (28, 38), "stablelm-12b": (10, 14),
+        "llama-3.2-vision-90b": (75, 100), "rwkv6-7b": (6, 9),
+        "nemotron-4-15b": (13, 18),
+    }
+    for arch, (lo, hi) in expect_b.items():
+        n = get_config(arch).n_params() / 1e9
+        assert lo <= n <= hi, (arch, n)
+    n_active = get_config("dbrx-132b").n_active_params() / 1e9
+    assert 30 <= n_active <= 45, n_active

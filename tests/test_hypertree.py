@@ -1,0 +1,86 @@
+"""JT construction: GYO acyclicity, RIP validation, empty bags, augmentation."""
+
+import pytest
+
+from repro.core.hypertree import (
+    CyclicSchemaError, attach_relation, build_join_tree, insert_empty_bag,
+    is_acyclic, jt_from_catalog,
+)
+from repro.relational import schema
+
+
+def test_acyclic_detection():
+    assert is_acyclic({"R": ["A", "B"], "S": ["B", "C"], "T": ["C", "D"]})
+    assert is_acyclic({"R": ["A", "B"], "S": ["A", "C"], "T": ["A", "D"]})
+    # triangle
+    assert not is_acyclic({"R": ["A", "B"], "S": ["B", "C"], "T": ["A", "C"]})
+
+
+def test_cyclic_raises():
+    with pytest.raises(CyclicSchemaError):
+        build_join_tree(
+            {"R": ("A", "B"), "S": ("B", "C"), "T": ("A", "C")},
+            {"A": 2, "B": 2, "C": 2},
+        )
+
+
+@pytest.mark.parametrize("maker", [schema.salesforce, schema.flight, schema.favorita,
+                                   schema.tpch, schema.tpcds_star])
+def test_catalog_trees_validate(maker):
+    cat = maker() if maker is not schema.salesforce else maker(n_opp=1000)
+    jt = jt_from_catalog(cat)
+    jt.validate()
+    # every relation's bag covers its attrs (edge coverage)
+    for name in cat.names():
+        bag = jt.mapping[name]
+        assert set(cat.get(name).attrs) <= set(jt.bags[bag])
+
+
+def test_separators_and_subtrees():
+    cat = schema.chain(4, fanout=2, domain=8)
+    jt = jt_from_catalog(cat)
+    assert jt.separator("bag:R0", "bag:R1") == ("A1",)
+    sub = jt.subtree_bags("bag:R0", "bag:R1")
+    assert sub == ("bag:R0",)
+    assert set(jt.subtree_bags("bag:R1", "bag:R0")) == {"bag:R1", "bag:R2", "bag:R3"}
+
+
+def test_empty_bag_insert_preserves_rip():
+    cat = schema.tpcds_star(n_sales=1000)
+    jt = jt_from_catalog(cat)
+    jt2 = insert_empty_bag(jt, "TimeStores", ("store_key", "time_key"),
+                           host="bag:Store_Sales", reroute=["bag:Stores", "bag:Time"])
+    jt2.validate()
+    assert "bag:TimeStores" in jt2.empty_bags
+    assert "bag:TimeStores" in jt2.adj["bag:Store_Sales"]
+    assert "bag:Stores" in jt2.adj["bag:TimeStores"]
+
+
+def test_empty_bag_rejects_uncovered_separator():
+    cat = schema.tpcds_star(n_sales=1000)
+    jt = jt_from_catalog(cat)
+    with pytest.raises(AssertionError):
+        insert_empty_bag(jt, "Bad", ("store_key",), host="bag:Store_Sales",
+                         reroute=["bag:Time"])  # separator time_key not covered
+
+
+def test_attach_relation_single_key():
+    cat = schema.favorita(n_sales=1000)
+    jt = jt_from_catalog(cat)
+    jt2, bag = attach_relation(jt, "Aug", ("store", "extra"), {"store": 54, "extra": 3})
+    jt2.validate()
+    assert jt2.mapping["Aug"] == bag
+
+
+def test_traversal_covers_all_edges():
+    cat = schema.salesforce(n_opp=500)
+    jt = jt_from_catalog(cat)
+    for root in jt.bags:
+        tra = jt.traversal_to_root(root)
+        assert len(tra) == len(jt.bags) - 1
+        # each child appears before its parent's edge
+        seen = set()
+        for u, v in tra:
+            for w in jt.subtree_bags(u, v):
+                seen.add(w)
+        assert seen == set(jt.bags) - {root}

@@ -1,0 +1,81 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles in
+interpret mode (the brief's per-kernel requirement)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.segment_aggregate.ops import aggregate_op
+from repro.kernels.segment_aggregate.ref import segment_aggregate_ref
+from repro.kernels.semiring_contract.ops import contract_op
+from repro.kernels.semiring_contract.ref import semiring_contract_ref
+from repro.kernels.tropical_contract.ops import contract_op as tropical_op
+from repro.kernels.tropical_contract.ref import tropical_contract_ref
+
+
+SHAPES = [(8, 8, 8), (64, 64, 64), (100, 70, 130), (256, 128, 200), (1, 300, 5)]
+
+
+@pytest.mark.parametrize("g,b,a", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_semiring_contract_shapes(g, b, a, dtype):
+    rng = np.random.default_rng(g * 1000 + b)
+    m = rng.random((g, b)).astype(dtype)
+    r = rng.random((b, a)).astype(dtype)
+    got = contract_op(m, r)
+    want = semiring_contract_ref(jnp.asarray(m), jnp.asarray(r))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 999), g=st.integers(1, 80), b=st.integers(1, 80),
+       a=st.integers(1, 80))
+def test_semiring_contract_fused_mask_property(seed, g, b, a):
+    rng = np.random.default_rng(seed)
+    m = rng.random((g, b)).astype(np.float32)
+    r = rng.random((b, a)).astype(np.float32)
+    mask = (rng.random(b) > 0.5).astype(np.float32)
+    got = contract_op(m, r, mask)
+    want = semiring_contract_ref(jnp.asarray(m), jnp.asarray(r), jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("g,b,a", SHAPES[:4])
+@pytest.mark.parametrize("is_min", [True, False])
+def test_tropical_contract(g, b, a, is_min):
+    rng = np.random.default_rng(a)
+    m = rng.standard_normal((g, b)).astype(np.float32)
+    r = rng.standard_normal((b, a)).astype(np.float32)
+    got = tropical_op(m, r, is_min=is_min)
+    want = tropical_contract_ref(jnp.asarray(m), jnp.asarray(r), is_min)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,g,v", [(64, 8, 1), (1000, 64, 3), (77, 13, 5), (4096, 300, 2)])
+@pytest.mark.parametrize("op", ["sum", "min", "max"])
+def test_segment_aggregate(n, g, v, op):
+    rng = np.random.default_rng(n + g)
+    codes = rng.integers(0, g, n).astype(np.int32)
+    vals = rng.random((n, v)).astype(np.float32)
+    got = aggregate_op(jnp.asarray(codes), jnp.asarray(vals), g, op=op)
+    want = segment_aggregate_ref(jnp.asarray(codes), jnp.asarray(vals), g, op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500), n=st.integers(1, 600), g=st.integers(1, 100))
+def test_segment_aggregate_property(seed, n, g):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, g, n).astype(np.int32)
+    vals = rng.standard_normal((n, 2)).astype(np.float32)
+    got = aggregate_op(jnp.asarray(codes), jnp.asarray(vals), g, op="sum")
+    want = segment_aggregate_ref(jnp.asarray(codes), jnp.asarray(vals), g, "sum")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_segment_aggregate_1d_squeeze():
+    codes = jnp.asarray([0, 1, 1, 2], jnp.int32)
+    vals = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    got = aggregate_op(codes, vals, 3, op="sum")
+    np.testing.assert_allclose(np.asarray(got), [1.0, 5.0, 4.0])

@@ -1,0 +1,102 @@
+"""Factorized ML (covariance ring) and CJT data cubes."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CJTEngine, FactorizedLinearRegression, FeatureSpec, MessageStore, Query,
+    build_cube, jt_from_catalog,
+)
+from repro.core import semiring as sr
+from repro.relational import schema
+
+
+@pytest.fixture(scope="module")
+def favorita():
+    cat = schema.favorita(n_sales=8_000, n_stores=12, n_items=30, n_dates=20)
+    return cat
+
+
+def _numpy_fit(cat, w_ridge=1e-3):
+    sales = cat.get("Sales"); stores = cat.get("Stores")
+    items = cat.get("Items"); trans = cat.get("Trans")
+    st_type = stores.codes["store_type"][sales.codes["store"]]
+    perish = items.codes["perishable"][sales.codes["item"]]
+    tmap = {}
+    for s, d, t in zip(trans.codes["store"], trans.codes["date"],
+                       trans.measures["transactions"]):
+        tmap[(s, d)] = t
+    y = np.array([tmap[(s, d)] for s, d in zip(sales.codes["store"], sales.codes["date"])])
+    X = [np.ones(len(y)), sales.measures["unit_sales"]]
+    X += [(st_type == c).astype(float) for c in range(5)]
+    X += [(perish == c).astype(float) for c in range(2)]
+    X = np.stack(X, 1)
+    w = np.linalg.solve(X.T @ X + w_ridge * np.eye(X.shape[1]), X.T @ y)
+    sse = ((X @ w - y) ** 2).sum()
+    sst = ((y - y.mean()) ** 2).sum()
+    return 1 - sse / sst
+
+
+def _model(cat):
+    return FactorizedLinearRegression(
+        cat,
+        features=[FeatureSpec("Sales", "unit_sales"),
+                  FeatureSpec("Stores", "store_type", categorical=True),
+                  FeatureSpec("Items", "perishable", categorical=True)],
+        target=FeatureSpec("Trans", "transactions"),
+    )
+
+
+def test_factorized_fit_matches_numpy(favorita):
+    model = _model(favorita)
+    got = model.fit()
+    want = _numpy_fit(favorita)
+    assert abs(got.r2 - want) < 1e-3, (got.r2, want)
+
+
+def test_augmentation_single_message_and_agreement(favorita):
+    model = _model(favorita)
+    model.calibrate()
+    augs = schema.favorita_augmentations(favorita, n_per_key=2)
+    seen_keys = set()
+    for a in augs:
+        res = model.fit_augmented(a)
+        base = model.fit_unfactorized_baseline(a)
+        assert abs(res.r2 - base.r2) < 1e-4
+        key = a.attrs[0]
+        if key in seen_keys:
+            # same host/separator → host→aug message fully reused (Fig 11)
+            assert res.stats.messages_computed == 0
+        else:
+            assert res.stats.messages_computed <= 1
+        seen_keys.add(key)
+
+
+def test_aug_with_higher_phi_fits_better(favorita):
+    model = _model(favorita)
+    model.calibrate()
+    augs = schema.favorita_augmentations(favorita, n_per_key=6, seed=9)
+    date_augs = [a for a in augs if a.attrs[0] == "store"]
+    r2 = {a.name: model.fit_augmented(a).r2 for a in date_augs}
+    phi = {a.name: float(a.measures["phi"][0]) for a in date_augs}
+    best_phi = max(phi, key=phi.get)
+    assert phi[best_phi] < 0.2 or r2[best_phi] == max(r2.values())
+
+
+def test_cube_correctness_and_reuse():
+    cat = schema.flight(n_flights=10_000)
+    jt = jt_from_catalog(cat)
+    dims = ("carrier_group", "month", "dow")
+    base = Query.make(cat, ring="count")
+    eng = CJTEngine(jt, cat, sr.COUNT, store=MessageStore())
+    rep = build_cube(eng, base, dims, h=2, pivot_k=1)
+    apex = float(np.asarray(rep.cuboids[()].field))
+    assert apex == cat.get("Flights").num_rows
+    # roll-up consistency: every cuboid sums to the apex
+    for combo, f in rep.cuboids.items():
+        assert abs(float(np.asarray(f.field).sum()) - apex) < 1e-3 * apex
+    # marginalizing the 2-attr cuboid gives the 1-attr cuboid
+    f2 = rep.cuboids[("carrier_group", "month")]
+    f1 = rep.cuboids[("carrier_group",)]
+    np.testing.assert_allclose(
+        np.asarray(f2.field).sum(1), np.asarray(f1.field), rtol=1e-5)

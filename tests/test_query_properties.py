@@ -1,0 +1,119 @@
+"""Hypothesis property tests on the Query IR and engine invariants under
+random interaction sequences — the paper's correctness contract: any sequence
+of cached interactions returns exactly what a cold engine returns."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CJTEngine, MessageStore, Query, jt_from_catalog
+from repro.core import semiring as sr
+from repro.relational import schema
+from repro.relational.relation import mask_in
+
+
+@pytest.fixture(scope="module")
+def world():
+    cat = schema.salesforce(n_opp=2_000, n_user=25, n_camp=10, n_acc=15, n_role=4)
+    return cat, jt_from_catalog(cat)
+
+
+ATTRS = ["role_name", "title", "camp_type", "state", "start_q", "stage"]
+GROUPS = ["camp_type", "title", "state", "role_name"]
+
+
+def _random_query(cat, rng, base=None):
+    q = base or Query.make(cat, ring="sum", measure=("Opp", "amount"))
+    d = cat.domains()
+    for _ in range(rng.integers(0, 3)):
+        a = ATTRS[rng.integers(len(ATTRS))]
+        vals = rng.choice(d[a], size=max(1, d[a] // 3), replace=False)
+        q = q.with_predicate(mask_in(d[a], [int(v) for v in vals], attr=a))
+    gb = [GROUPS[i] for i in range(len(GROUPS)) if rng.integers(2)]
+    return q.with_group_by(*gb[:2])
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_random_interaction_sequence_matches_cold_engine(world, seed):
+    """Warm-cache execution over a random interaction path ≡ cold execution."""
+    cat, jt = world
+    rng = np.random.default_rng(seed)
+    warm = CJTEngine(jt, cat, sr.SUM, store=MessageStore())
+    q = Query.make(cat, ring="sum", measure=("Opp", "amount"))
+    warm.calibrate(q)
+    for _ in range(3):
+        q = _random_query(cat, rng, q)
+        f_warm, _ = warm.execute(q)
+        cold = CJTEngine(jt, cat, sr.SUM, store=MessageStore())
+        f_cold, _ = cold.execute(q)
+        np.testing.assert_allclose(
+            np.asarray(f_warm.project_to(q.group_by).field, np.float64),
+            np.asarray(f_cold.project_to(q.group_by).field, np.float64),
+            rtol=1e-4, atol=1e-3,
+        )
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_query_digest_is_content_addressed(world, seed):
+    cat, _ = world
+    rng = np.random.default_rng(seed)
+    q1 = _random_query(cat, rng)
+    q2 = _random_query(cat, np.random.default_rng(seed))  # same stream
+    assert q1.digest == q2.digest
+    d = cat.domains()
+    q3 = q1.with_predicate(mask_in(d["stage"], [0], attr="stage"))
+    assert q3.digest != q1.digest
+    # predicate replacement on the same attr is idempotent in digest
+    q4 = q3.with_predicate(mask_in(d["stage"], [0], attr="stage"))
+    assert q4.digest == q3.digest
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_group_by_permutation_invariance(world, seed):
+    """γ order affects output axis order only, never values."""
+    cat, jt = world
+    rng = np.random.default_rng(seed)
+    eng = CJTEngine(jt, cat, sr.SUM, store=MessageStore())
+    base = Query.make(cat, ring="sum", measure=("Opp", "amount"))
+    f1, _ = eng.execute(base.with_group_by("camp_type", "title"))
+    f2, _ = eng.execute(base.with_group_by("title", "camp_type"))
+    np.testing.assert_allclose(
+        np.asarray(f1.field, np.float64),
+        np.asarray(f2.project_to(("camp_type", "title")).field, np.float64),
+        rtol=1e-4,
+    )
+
+
+def test_marginalization_consistency_over_predicates(world):
+    """Σ_A of a γ=A query equals the γ=∅ query under any shared σ."""
+    cat, jt = world
+    d = cat.domains()
+    eng = CJTEngine(jt, cat, sr.SUM, store=MessageStore())
+    pred = mask_in(d["state"], [1, 2, 5], attr="state")
+    q0 = Query.make(cat, ring="sum", measure=("Opp", "amount"), predicates=[pred])
+    qA = q0.with_group_by("camp_type")
+    f0, _ = eng.execute(q0)
+    fA, _ = eng.execute(qA)
+    np.testing.assert_allclose(
+        float(np.asarray(fA.field, np.float64).sum()),
+        float(np.asarray(f0.field, np.float64)), rtol=1e-5)
+
+
+def test_disjoint_selection_partition(world):
+    """σ(A∈S) + σ(A∈S̄) partitions the unfiltered total (semiring linearity)."""
+    cat, jt = world
+    d = cat.domains()
+    eng = CJTEngine(jt, cat, sr.SUM, store=MessageStore())
+    base = Query.make(cat, ring="sum", measure=("Opp", "amount"))
+    half = list(range(d["title"] // 2))
+    rest = list(range(d["title"] // 2, d["title"]))
+    f_all, _ = eng.execute(base)
+    f_a, _ = eng.execute(base.with_predicate(mask_in(d["title"], half, attr="title")))
+    f_b, _ = eng.execute(base.with_predicate(mask_in(d["title"], rest, attr="title")))
+    np.testing.assert_allclose(
+        float(np.asarray(f_a.field)) + float(np.asarray(f_b.field)),
+        float(np.asarray(f_all.field)), rtol=1e-5)

@@ -1,0 +1,120 @@
+"""Runtime substrate: checkpointing (async/atomic/restore/reshard), data
+pipeline determinism, straggler monitor, gradient compression, sharding rules."""
+
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer, restore_pytree, save_pytree
+from repro.data.pipeline import StragglerMonitor, TokenPipeline, synth_batch
+from repro.optim.compression import compress_int8, decompress_int8
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": {"c": np.float32(3.5), "d": np.arange(4, dtype=np.int32)}}
+    save_pytree(tree, tmp_path, 7)
+    got, step = restore_pytree(tmp_path, template=tree)
+    assert step == 7
+    np.testing.assert_array_equal(got["a"], tree["a"])
+    np.testing.assert_array_equal(got["b"]["d"], tree["b"]["d"])
+
+
+def test_checkpoint_async_retention(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    tree = {"w": np.zeros(4, np.float32)}
+    for s in (1, 2, 3, 4):
+        ck.save_async({"w": np.full(4, s, np.float32)}, s)
+    ck.wait()
+    steps = sorted(int(p.name.split("_")[1]) for p in Path(tmp_path).glob("step_*"))
+    assert steps == [3, 4]
+    got, s = restore_pytree(tmp_path, template=tree)
+    assert s == 4 and got["w"][0] == 4.0
+    ck.close()
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Restore with different shardings (mesh change) — elastic scaling."""
+    tree = {"w": np.arange(16, dtype=np.float32).reshape(4, 4)}
+    save_pytree(tree, tmp_path, 1)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    got, _ = restore_pytree(tmp_path, template=tree, shardings=sh)
+    assert got["w"].sharding.is_equivalent_to(sh["w"], 2)
+    np.testing.assert_array_equal(np.asarray(got["w"]), tree["w"])
+
+
+def test_pipeline_deterministic_restart():
+    p1 = TokenPipeline(100, 2, 8, start_step=5)
+    b1 = next(p1)
+    p1.close()
+    p2 = TokenPipeline(100, 2, 8, start_step=5)
+    b2 = next(p2)
+    p2.close()
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    direct = synth_batch(100, 2, 8, 5)
+    np.testing.assert_array_equal(b1["tokens"], direct["tokens"])
+
+
+def test_straggler_monitor_flags_outliers():
+    m = StragglerMonitor(threshold=2.0, warmup=2)
+    for i in range(8):
+        assert not m.observe(i, 0.1)
+    assert m.observe(8, 0.5)
+    assert m.flagged == [(8, 0.5)]
+    assert not m.observe(9, 0.11)  # ewma not polluted by the outlier
+
+
+def test_int8_compression_error_feedback():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.standard_normal(128), jnp.float32)}
+    q, scales, err = compress_int8(g)
+    deq = decompress_int8(q, scales)
+    rel = np.linalg.norm(np.asarray(deq["w"]) - np.asarray(g["w"])) / np.linalg.norm(np.asarray(g["w"]))
+    assert rel < 0.02
+    # feeding the error back makes the SUM over steps exact-ish
+    q2, s2, err2 = compress_int8(g, error=err)
+    total = np.asarray(decompress_int8(q, scales)["w"]) + np.asarray(decompress_int8(q2, s2)["w"])
+    want = 2 * np.asarray(g["w"])
+    assert np.linalg.norm(total - want) / np.linalg.norm(want) < 0.02
+
+
+def test_sharding_rules_divisibility_fallback():
+    import os
+    from repro.runtime.sharding import make_rules, pspec_for
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = make_rules(mesh, multi_pod=False)
+    # vocab 49155 can't shard 16-ways → but divisible by 1 here; simulate by hand
+    from repro.runtime import sharding as sh_mod
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    fake_rules = sh_mod.ShardingRules(mesh=FakeMesh(), table=rules.table)
+    p = pspec_for((49155, 1024), ("vocab", "embed"), fake_rules)
+    assert p[0] is None          # 49155 % 16 != 0 → replicated
+    assert p[1] == "data"
+    p2 = pspec_for((100352, 1024), ("vocab", "embed"), fake_rules)
+    assert p2[0] == "model"
+    # same mesh axis never used twice
+    p3 = pspec_for((64, 64), ("embed", "act_batch"), fake_rules)
+    assert p3[0] == "data" and (len(p3) < 2 or p3[1] is None)
+
+
+def test_train_driver_failure_recovery(tmp_path):
+    from repro.launch.train import main as train_main
+    losses = train_main([
+        "--arch", "granite-moe-1b-a400m", "--steps", "10", "--batch", "2",
+        "--seq", "32", "--ckpt-every", "4", "--inject-failure", "6",
+        "--ckpt-dir", str(tmp_path), "--log-every", "5",
+    ])
+    assert len(losses) >= 10
+    assert all(np.isfinite(l) for l in losses)

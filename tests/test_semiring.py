@@ -1,0 +1,93 @@
+"""Semiring law property tests (hypothesis): the algebra CJT correctness
+rests on — commutativity/associativity of ⊕/⊗, distributivity, identities."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import semiring as sr
+
+RINGS = [sr.COUNT, sr.SUM, sr.TROPICAL_MIN, sr.TROPICAL_MAX, sr.BOOL, sr.MOMENTS]
+
+
+def _elem(ring, rng, shape=(3,)):
+    if ring.name == "bool":
+        return jnp.asarray(rng.random(shape) > 0.5)
+    if ring.name == "moments":
+        return tuple(jnp.asarray(rng.integers(0, 5, shape), jnp.float32) for _ in range(3))
+    return jnp.asarray(rng.integers(0, 7, shape), jnp.float32)
+
+
+def _eq(ring, a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float64), np.asarray(y, np.float64),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("ring", RINGS, ids=lambda r: r.name)
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_semiring_laws(ring, seed):
+    rng = np.random.default_rng(seed)
+    a, b, c = (_elem(ring, rng) for _ in range(3))
+    _eq(ring, ring.mul(a, b), ring.mul(b, a))                      # ⊗ comm
+    _eq(ring, ring.add(a, b), ring.add(b, a))                      # ⊕ comm
+    _eq(ring, ring.mul(ring.mul(a, b), c), ring.mul(a, ring.mul(b, c)))
+    _eq(ring, ring.add(ring.add(a, b), c), ring.add(a, ring.add(b, c)))
+    # distributivity: a ⊗ (b ⊕ c) == (a⊗b) ⊕ (a⊗c)
+    _eq(ring, ring.mul(a, ring.add(b, c)), ring.add(ring.mul(a, b), ring.mul(a, c)))
+    # identities
+    ones = ring.ones((3,))
+    zeros = ring.zeros((3,))
+    _eq(ring, ring.mul(a, ones), a)
+    _eq(ring, ring.add(a, zeros), a)
+    # annihilation: a ⊗ 0 == 0   (holds for all our rings)
+    _eq(ring, ring.mul(a, zeros), zeros)
+
+
+@pytest.mark.parametrize("ring", RINGS, ids=lambda r: r.name)
+def test_reduce_matches_fold(ring):
+    rng = np.random.default_rng(1)
+    a = _elem(ring, rng, shape=(4, 5))
+    red = ring.add_reduce(a, (0,))
+    leaves = jax.tree_util.tree_leaves(a)
+    acc = jax.tree_util.tree_map(lambda l: l[0], a)
+    for i in range(1, 4):
+        acc = ring.add(acc, jax.tree_util.tree_map(lambda l: l[i], a))
+    _eq(ring, red, acc)
+
+
+def test_segment_reduce_matches_dense():
+    rng = np.random.default_rng(2)
+    for ring in (sr.SUM, sr.TROPICAL_MIN, sr.TROPICAL_MAX, sr.BOOL, sr.MOMENTS):
+        vals = _elem(ring, rng, shape=(20,))
+        ids = jnp.asarray(rng.integers(0, 4, 20))
+        out = ring.segment_reduce(vals, ids, 4)
+        for g in range(4):
+            mask = np.asarray(ids) == g
+            if not mask.any():
+                continue
+            sub = jax.tree_util.tree_map(lambda l: l[jnp.asarray(mask)], vals)
+            acc = jax.tree_util.tree_map(lambda l: l[0], sub)
+            n = int(mask.sum())
+            for i in range(1, n):
+                acc = ring.add(acc, jax.tree_util.tree_map(lambda l: l[i], sub))
+            got = jax.tree_util.tree_map(lambda l: l[g], out)
+            _eq(ring, got, acc)
+
+
+def test_covariance_ring_outer_products():
+    ring = sr.make_covariance_ring(3)
+    a = ring.ones(())
+    c, s, q = a
+    assert c.shape == () and s.shape == (3,) and q.shape == (3, 3)
+    x = (jnp.ones(()), jnp.asarray([1.0, 2.0, 0.0]), None)
+    x = (x[0], x[1], x[1][:, None] * x[1][None, :])
+    y = (jnp.ones(()), jnp.asarray([0.0, 0.0, 3.0]), None)
+    y = (y[0], y[1], y[1][:, None] * y[1][None, :])
+    c, s, q = ring.mul(x, y)
+    # joined tuple has features [1, 2, 3]: Q must be the full outer product
+    np.testing.assert_allclose(np.asarray(s), [1, 2, 3])
+    np.testing.assert_allclose(np.asarray(q), np.outer([1, 2, 3], [1, 2, 3]))

@@ -1,0 +1,111 @@
+"""Steiner planning + Treant middleware: recomputed edges ⊆ Steiner tree,
+think-time calibration monotonicity, cross-session cache sharing."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CJTEngine, MessageStore, Query, Treant, jt_from_catalog, steiner
+from repro.core import semiring as sr
+from repro.relational import schema
+from repro.relational.relation import mask_in
+
+
+@pytest.fixture(scope="module")
+def flight():
+    cat = schema.flight(n_flights=20_000)
+    return cat, jt_from_catalog(cat)
+
+
+def test_minimal_steiner_tree_is_path(flight):
+    cat, jt = flight
+    nodes, edges = steiner.minimal_steiner_tree(jt, {"bag:Carrier", "bag:Airport"})
+    # carrier—flights—airport path
+    assert "bag:Flights" in nodes
+    assert len(nodes) == 3 and len(edges) == 2
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_recomputed_edges_within_steiner_tree(seed):
+    """Property (§3.4.3): after calibration, an interaction query only
+    recomputes messages whose directed edge lies inside the Steiner tree."""
+    cat = schema.flight(n_flights=5_000, seed=seed % 7)
+    jt = jt_from_catalog(cat)
+    eng = CJTEngine(jt, cat, sr.SUM)
+    rng = np.random.default_rng(seed)
+    d = cat.domains()
+    q0 = Query.make(cat, ring="sum", measure=("Flights", "dep_delay"),
+                    group_by=("carrier_group",))
+    eng.calibrate(q0)
+    attrs = ["airport_state", "month", "dow", "carrier_group", "airport_size"]
+    attr = attrs[rng.integers(len(attrs))]
+    q1 = q0.with_predicate(mask_in(d[attr], [int(rng.integers(d[attr]))], attr=attr))
+    pln = steiner.plan(eng, q0, q1)
+    f, stats = eng.execute(q1)
+    allowed = steiner.directed_edges_into(pln) | {(b, b) for b in pln.nodes}
+    for (u, v) in stats.recomputed_edges:
+        assert (u, v) in allowed or u in pln.nodes, (u, v, pln)
+
+
+def test_steiner_size_tracks_query_distance(flight):
+    cat, jt = flight
+    t = Treant(cat, ring=sr.SUM, jt=jt)
+    d = cat.domains()
+    q0 = Query.make(cat, ring="sum", measure=("Flights", "dep_delay"))
+    t.register_dashboard("v", q0)
+    q1 = q0.with_predicate(mask_in(d["carrier_group"], [0], attr="carrier_group"))
+    r1 = t.interact("s", "v", q1)
+    # identical query again: zero-size plan, pure cache hits
+    r2 = t.interact("s", "v", q1)
+    assert r2.stats.messages_computed == 0
+    assert r2.steiner_size <= 1
+
+
+def test_think_time_calibration_reduces_next_latency(flight):
+    cat, jt = flight
+    d = cat.domains()
+    q0 = Query.make(cat, ring="sum", measure=("Flights", "dep_delay"),
+                    group_by=("airport_state",))
+    q1 = q0.with_predicate(mask_in(d["carrier_group"], [0, 1], attr="carrier_group"))
+    q2 = q1.with_predicate(mask_in(d["airport_size"], [1], attr="airport_size"))
+
+    def run(budget):
+        t = Treant(cat, ring=sr.SUM, jt=jt)
+        t.register_dashboard("v", q0)
+        t.interact("s", "v", q1)
+        if budget:
+            t.think_time("s", "v", budget_messages=budget)
+        res = t.interact("s", "v", q2)
+        return res.stats.messages_computed, np.asarray(res.factor.field)
+
+    cold_computed, cold = run(0)
+    warm_computed, warm = run(8)
+    assert warm_computed <= cold_computed
+    np.testing.assert_allclose(warm, cold, rtol=1e-5)
+
+
+def test_cross_session_sharing(flight):
+    cat, jt = flight
+    t = Treant(cat, ring=sr.SUM, jt=jt)
+    q0 = Query.make(cat, ring="sum", measure=("Flights", "dep_delay"))
+    t.register_dashboard("v", q0)
+    d = cat.domains()
+    q1 = q0.with_predicate(mask_in(d["month"], [3], attr="month"))
+    r_a = t.interact("alice", "v", q1)
+    r_b = t.interact("bob", "v", q1)  # same query, different session → cache
+    assert r_b.stats.messages_computed == 0
+
+
+def test_preemption_keeps_partial_messages(flight):
+    cat, jt = flight
+    t = Treant(cat, ring=sr.SUM, jt=jt)
+    q0 = Query.make(cat, ring="sum", measure=("Flights", "dep_delay"))
+    t.register_dashboard("v", q0)
+    d = cat.domains()
+    q1 = q0.with_predicate(mask_in(d["dow"], [0], attr="dow"))
+    t.interact("s", "v", q1)
+    n_before = len(t.store)
+    done = t.think_time("s", "v", budget_messages=2)   # preempted early
+    assert done == 2
+    assert len(t.store) >= n_before  # materialized messages persisted
