@@ -1,0 +1,109 @@
+"""Delta calibration — update-then-query latency vs recalibrate-from-scratch.
+
+For chain and star schemas: calibrate a dashboard query, apply an append (and
+a delete) to the fact relation, then compare
+
+  delta   — ``CJTEngine.apply_delta``: n−1 delta messages, old ⊕ Δ, every
+            off-path cached message reused, then one cache-hit query;
+  rebuild — full ``calibrate`` of the new version on a cold store
+            (2(n−1) messages, every base relation rescanned), then query.
+
+Emits one CSV row per (schema, update-kind, path); ``derived`` records the
+message counts so the strictly-fewer-messages claim is auditable.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CJTEngine, MessageStore, Query, jt_from_catalog
+from repro.core import semiring as sr
+from repro.relational import schema
+
+from .common import emit, time_fn
+
+
+def _random_append(rel, frac, rng):
+    n = max(1, int(rel.num_rows * frac))
+    codes = {a: rng.integers(0, rel.domains[a], n) for a in rel.attrs}
+    measures = {m: rng.gamma(1.5, 10.0, n).astype(np.float32) for m in rel.measures}
+    return rel.append_rows(codes, measures=measures)
+
+
+def _timed_apply_delta(eng, q, delta):
+    """Time apply_delta with XLA jit caches warm but the message store in its
+    pre-update state (same discipline as common.timed_interact)."""
+    snap = eng.store.snapshot()
+    eng.apply_delta(q, delta)           # warm XLA jit cache
+    eng.store.restore(snap)
+    return time_fn(lambda: eng.apply_delta(q, delta), repeats=1, warmup=0)
+
+
+def run_case(name: str, cat, fact: str, measure, group_by, frac: float = 0.01):
+    jt = jt_from_catalog(cat)
+    ring = sr.SUM
+    rng = np.random.default_rng(0)
+
+    for kind in ("append", "delete"):
+        eng = CJTEngine(jt, cat, ring)
+        mk = lambda: Query.make(
+            cat, ring="sum",
+            measure=(fact, measure) if measure else None, group_by=group_by,
+        )
+        q = mk()
+        eng.calibrate(q)
+        rel = cat.get(fact)
+        if kind == "append":
+            new_rel, delta = _random_append(rel, frac, rng)
+        else:
+            new_rel, delta = rel.delete_rows(rng.random(rel.num_rows) < frac)
+        cat.put(new_rel)
+
+        # delta path: maintain cached messages, then query
+        t_delta, (q_new, dstats) = _timed_apply_delta(eng, q, delta)
+        t_q, (res, qstats) = time_fn(lambda: eng.execute(q_new), repeats=1, warmup=1)
+        assert not dstats.fallback and qstats.messages_computed == 0
+
+        # rebuild path: cold store, full calibration of the new version
+        cold = CJTEngine(jt, cat, ring, store=MessageStore())
+        cstats = cold.calibrate(mk())   # warm jit
+        cold2 = CJTEngine(jt, cat, ring, store=MessageStore())
+        t_full, cstats = time_fn(lambda: cold2.calibrate(mk()), repeats=1, warmup=0)
+
+        assert dstats.delta_messages < cstats.messages_computed, (
+            f"delta path must recompute strictly fewer messages: "
+            f"{dstats.delta_messages} vs {cstats.messages_computed}"
+        )
+        emit(
+            f"updates/{name}/{kind}/delta", t_delta + t_q,
+            f"msgs={dstats.delta_messages} maintained={dstats.edges_maintained} "
+            f"drows={dstats.delta_rows}",
+        )
+        emit(
+            f"updates/{name}/{kind}/rebuild", t_full,
+            f"msgs={cstats.messages_computed} rows={cstats.rows_scanned}",
+        )
+
+        # roll the catalog back so the delete case starts from the seed version
+        cat.put(rel)
+
+
+def run(scale: float = 0.33):
+    run_case(
+        "star_flight",
+        schema.flight(n_flights=int(300_000 * scale)),
+        "Flights", "dep_delay", ("carrier_group", "month"),
+    )
+    run_case(
+        "chain6",
+        schema.chain(r=6, fanout=8, domain=256),
+        "R0", None, ("A4",),
+    )
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -7,8 +7,8 @@ from .hypertree import (  # noqa: F401
     is_acyclic, CyclicSchemaError,
 )
 from .query import Query  # noqa: F401
-from .calibration import CJTEngine, MessageStore, ExecStats  # noqa: F401
-from .treant import Treant, InteractionResult  # noqa: F401
+from .calibration import CJTEngine, MessageStore, ExecStats, DeltaStats  # noqa: F401
+from .treant import Treant, InteractionResult, UpdateResult  # noqa: F401
 from . import steiner  # noqa: F401
 from .ml import FactorizedLinearRegression, FeatureSpec, FitResult  # noqa: F401
 from .cube import build_cube, naive_cube_cost, CubeReport  # noqa: F401

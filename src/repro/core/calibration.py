@@ -22,6 +22,21 @@ Bags holding a single sparse relation use the factorized sparse path
 (gather incoming messages at row codes, ⊗ rowwise, segment-⊕ — the DBMS
 hash-join/aggregate re-expressed for the TPU, see kernels/segment_aggregate);
 empty bags and densified dimension bags use dense factor contraction.
+
+**Delta calibration** (data updates): a base-relation update only changes the
+messages directed *away* from the updated bag u₀ — n−1 of the 2(n−1)
+messages; everything else keeps its Prop-2 signature and is reused verbatim.
+Because bag contraction distributes ⊕ over ⊗, each changed message satisfies
+Y_new(u→v) = Y_old(u→v) ⊕ ΔY(u→v) where ΔY is the same contraction with the
+changed input (the relation at u₀, or the incoming delta further out)
+replaced by its delta — ``CJTEngine.delta_message``.
+``CJTEngine.apply_delta`` walks the u₀-outward edges, combines each cached
+message with its delta via ``MessageStore.apply_delta``, and stores the
+result under the *new-version* signature.  Versions are part of every bag
+digest, so stale entries can never be served: an unmaintained edge simply
+misses and recomputes.  Deletions ride on ⊕-inverse row annotations and are
+therefore gated on ``Semiring.has_add_inverse`` (MIN/MAX/BOOL fall back to
+recomputation; the caller sees ``DeltaStats.fallback``).
 """
 
 from __future__ import annotations
@@ -35,7 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.relational.relation import Catalog, Predicate, Relation, lift_rows
+from repro.relational.relation import Catalog, Delta, Predicate, Relation, lift_rows
 from . import semiring as sr
 from .factor import Factor, contract, ones_factor
 from .hypertree import JTree
@@ -109,6 +124,41 @@ class MessageStore:
     def pin(self, base_sig: str, gamma: tuple[str, ...]):
         self._pinned.add(self.full_sig(base_sig, gamma))
 
+    def is_pinned(self, base_sig: str, gamma: tuple[str, ...]) -> bool:
+        """Pinned exactly, or through a pinned wider-γ variant (Σ-widening)."""
+        if self.full_sig(base_sig, gamma) in self._pinned:
+            return True
+        return any(
+            set(gamma) <= set(g2) and sig in self._pinned
+            for g2, sig in self._widen.get(base_sig, {}).items()
+        )
+
+    def unpin(self, base_sig: str, gamma: tuple[str, ...]):
+        self._pinned.discard(self.full_sig(base_sig, gamma))
+
+    def apply_delta(
+        self, old_base: str, new_base: str, gamma: tuple[str, ...], delta: Factor
+    ) -> Factor | None:
+        """Maintain one message across a data update: new = old ⊕ Δ.
+
+        Looks up the cached message under the *old* signature (Σ-widening
+        applies), combines it with the delta factor, and stores the result
+        under the bumped *new* signature.  A pin migrates to the new
+        generation: the old-version message stays servable for queries still
+        snapshotting the old version, but becomes evictable — otherwise every
+        update would grow an unevictable pinned generation.
+        Returns None (and stores nothing) when there is no cached message to
+        maintain; the new-version message will then be computed on demand.
+        """
+        old = self.get(old_base, gamma)
+        if old is None:
+            self.misses -= 1  # probe, not a serving miss
+            return None
+        new = old.add(delta)
+        self.put(new_base, gamma, new, pin=self.is_pinned(old_base, gamma))
+        self.unpin(old_base, gamma)
+        return new
+
     def unpin_all(self):
         self._pinned.clear()
 
@@ -160,6 +210,17 @@ class ExecStats:
     messages_reused: int = 0
     rows_scanned: int = 0
     recomputed_edges: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class DeltaStats:
+    """Outcome of one ``CJTEngine.apply_delta`` maintenance pass."""
+
+    delta_rows: int = 0          # |Δ| — rows in the signed delta
+    delta_messages: int = 0      # ΔY factors computed (≤ n−1 vs 2(n−1) full)
+    edges_maintained: int = 0    # cached messages updated as old ⊕ Δ
+    edges_skipped: int = 0       # outward edges with nothing cached to maintain
+    fallback: bool = False       # ring cannot absorb the delta (e.g. MIN delete)
 
 
 class CJTEngine:
@@ -478,6 +539,96 @@ class CJTEngine:
                 self.store.pin(base, self.gamma_carry(q, u, v))
             self.message(q, u, v, placement, stats)
             yield (u, v)
+
+    # -- delta calibration (data updates) ---------------------------------------
+    def delta_message(
+        self,
+        q_new: Query,
+        q_delta: Query,
+        u: str,
+        v: str,
+        placement,
+        via: str | None = None,
+        delta_in: Factor | None = None,
+    ) -> Factor:
+        """ΔY(u→v): the u→v contraction with the changed input swapped for its delta.
+
+        Bag contraction distributes ⊕ over ⊗ (it is multilinear in the bag's
+        relations and in each incoming message), so replacing exactly the
+        changed input by its ⊕-difference yields the ⊕-difference of the
+        output.  ``via=None`` means u itself hosts the updated relation and
+        ``q_delta`` (which pins that relation to its delta-rows version)
+        drives the contraction; otherwise ``delta_in`` is ΔY(via→u) from the
+        previous hop and every other input is an unchanged cached message.
+        """
+        gamma = self.gamma_carry(q_new, u, v)
+        out_attrs = tuple(dict.fromkeys(self.jt.separator(u, v) + gamma))
+        incoming = [
+            self.message(q_new, i, u, placement)
+            for i in self.jt.neighbors(u)
+            if i != v and i != via
+        ]
+        if via is None:
+            return self._bag_contract(q_delta, u, incoming, out_attrs, placement)
+        return self._bag_contract(q_new, u, incoming + [delta_in], out_attrs, placement)
+
+    def apply_delta(self, q: Query, delta: Delta) -> tuple[Query, DeltaStats]:
+        """Maintain this query's cached messages across a base-data update.
+
+        Returns ``(q_new, stats)`` where ``q_new`` is ``q`` re-snapshotted to
+        ``delta.new_version``.  Only the n−1 messages directed away from the
+        updated bag u₀ change; they are updated as old ⊕ ΔY in u₀-outward
+        order, reusing every off-path cached message.  The new messages are
+        stored under new-version Prop-2 signatures (the version is part of
+        every bag digest), so a stale pre-update message can never serve a
+        post-update query.  The catalog must already contain the new relation
+        version.  When the ring cannot absorb the delta (no ⊕-inverse for a
+        delete) or σ-placement migrated between versions, nothing is
+        maintained and ``stats.fallback`` is set — queries then recompute on
+        demand (schedule via think-time).
+        """
+        stats = DeltaStats(delta_rows=delta.num_rows)
+        q_new = q.with_version(delta.relation, delta.new_version)
+        if delta.relation in q.removed or delta.relation not in self.jt.mapping:
+            return q_new, stats  # update invisible to this query's CJT
+        if q.version_of(delta.relation) != delta.old_version:
+            raise ValueError(
+                f"delta chains {delta.relation}@{delta.old_version} but the "
+                f"query snapshot is @{q.version_of(delta.relation)}"
+            )
+        if not delta.supported_by(self.ring):
+            stats.fallback = True
+            return q_new, stats
+        self.catalog.put(delta.rows, make_latest=False)
+        placement_old = self.place_predicates(q)
+        placement_new = self.place_predicates(q_new)
+        if placement_old != placement_new:
+            # row-count ordering flipped and a σ migrated bags: old messages
+            # were built under a different annotation layout — unsound to ⊕.
+            stats.fallback = True
+            return q_new, stats
+        u0 = self.jt.mapping[delta.relation]
+        q_delta = q_new.with_version(delta.relation, delta.rows.version)
+        upward = self.jt.traversal_to_root(u0)  # (child, parent): parent is u₀-side
+        toward_u0 = {c: p for (c, p) in upward}
+        dmsgs: dict[tuple[str, str], Factor] = {}
+        for (c, p) in reversed(upward):  # edges nearest u₀ first
+            u, v = p, c  # the changed direction points away from u₀
+            via = None if u == u0 else toward_u0[u]
+            d = self.delta_message(
+                q_new, q_delta, u, v, placement_new,
+                via=via, delta_in=None if via is None else dmsgs[(via, u)],
+            )
+            dmsgs[(u, v)] = d
+            stats.delta_messages += 1
+            old_base = self.edge_sig(q, u, v, placement_old)
+            new_base = self.edge_sig(q_new, u, v, placement_new)
+            gamma = self.gamma_carry(q_new, u, v)
+            if self.store.apply_delta(old_base, new_base, gamma, d) is not None:
+                stats.edges_maintained += 1
+            else:
+                stats.edges_skipped += 1
+        return q_new, stats
 
     def is_calibrated(self, q: Query) -> bool:
         placement = self.place_predicates(q)

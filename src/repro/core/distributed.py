@@ -24,6 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# jax moved shard_map out of experimental around 0.6; support both
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 def calibrate_chain_reference(factors: list[jax.Array]) -> tuple[list, list]:
     """Single-device oracle: forward/backward messages of a chain CJT.
@@ -96,7 +101,7 @@ def make_chain_calibrate(mesh: Mesh, axis: str, r: int, d: int, dtype=jnp.float3
 
     shard = shard_spec = P(axis, None)
     msg_spec = P(axis)
-    fn = jax.shard_map(
+    fn = _shard_map(
         _local,
         mesh=mesh,
         in_specs=([shard_spec] * r,),
@@ -141,7 +146,7 @@ def make_chain_calibrate_multi(mesh: Mesh, axis: str, r: int, d: int,
         return fwd, bwd, totals
 
     msg_spec = P(axis, None)
-    fn = jax.shard_map(
+    fn = _shard_map(
         _local,
         mesh=mesh,
         in_specs=([P(axis, None)] * r, P(axis, None)),

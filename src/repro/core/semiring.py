@@ -15,6 +15,12 @@ Every ring implements:
   lift(...)               raw column(s) → element field
   trailing_ndims(leaf_i)  number of non-domain trailing dims per leaf
 
+Rings additionally declare ``has_add_inverse``: True iff every element has an
+⊕-inverse (the ring is actually a commutative *group* under ⊕).  Delta
+calibration (calibration.CJTEngine.apply_delta) relies on this to encode
+deletions as negatively-weighted rows: SUM/COUNT/MOMENTS/covariance admit it,
+tropical MIN/MAX and BOOL do not (a delete there forces recomputation).
+
 The (ℝ, +, ×) rings additionally expose an einsum fast path used by
 ``factor.contract`` so that hot contractions lower to MXU matmuls (and to the
 ``semiring_contract`` Pallas kernel on TPU).
@@ -53,6 +59,9 @@ class Semiring:
     trailing: tuple[int, ...] = (0,)
     # True iff (⊕,⊗) == (+,×): enables the einsum/MXU fast path.
     is_arithmetic: bool = False
+    # True iff ⊕ has inverses (ring is a group under ⊕): enables encoding
+    # deletions as negatively-weighted delta rows (delta calibration).
+    has_add_inverse: bool = False
     # ⊕-segment-reduction over the leading (row) axis; None → segment_sum
     # per leaf (valid whenever ⊕ is +).
     _segment: Callable[[Field, jax.Array, int], Field] | None = None
@@ -134,6 +143,7 @@ def _arith(name: str, dtype) -> Semiring:
         _ones=lambda s: jnp.ones(s, dtype),
         trailing=(0,),
         is_arithmetic=True,
+        has_add_inverse=True,
     )
 
 
@@ -204,13 +214,19 @@ MOMENTS = Semiring(
     _ones=lambda s: (jnp.ones(s, jnp.float32), jnp.zeros(s, jnp.float32), jnp.zeros(s, jnp.float32)),
     trailing=(0, 0, 0),
     is_arithmetic=False,
+    has_add_inverse=True,
 )
 
 
 def moments_lift(value: jax.Array, count: jax.Array | None = None) -> Field:
-    """Lift a measure column: element (cnt, Σx, Σx²)."""
+    """Lift a measure column: element (c, c·x, c·x²).
+
+    ``count`` is the row multiplicity; scaling every component makes
+    count = -1 the exact ⊕-inverse (delete deltas) and multiplicity-w rows
+    aggregate as w copies would.
+    """
     c = jnp.ones_like(value) if count is None else count
-    return (c, value, value * value)
+    return (c, c * value, c * value * value)
 
 
 def moments_finalize(field: Field) -> dict[str, jax.Array]:
@@ -259,6 +275,7 @@ def make_covariance_ring(k: int) -> Semiring:
         ),
         trailing=(0, 1, 2),
         is_arithmetic=False,
+        has_add_inverse=True,
     )
 
 

@@ -7,6 +7,14 @@ against the most-recent CJT of the same (session, visualization), then — in
 the user's think-time — calibrates the latest interaction query in a
 preemptible background pass so the *next* interaction is cheap (§4.2.1,
 Example 14).
+
+Live data is handled by ``Treant.update``: given a new relation version and
+its signed :class:`~repro.relational.relation.Delta`, every tracked query's
+cached CJT is delta-maintained in place (``CJTEngine.apply_delta`` — old
+message ⊕ delta, stored under the bumped signature) and every stored query is
+re-snapshotted to the new version, so the next interaction reads fresh data
+at cache-hit speed.  Rings that cannot absorb a delta (MIN/MAX deletes) skip
+maintenance; their recalibration lands in the next ``think_time`` call.
 """
 
 from __future__ import annotations
@@ -15,9 +23,9 @@ import dataclasses
 import time
 from typing import Callable, Mapping
 
-from repro.relational.relation import Catalog
+from repro.relational.relation import Catalog, Delta, Relation
 from . import semiring as sr
-from .calibration import CJTEngine, ExecStats, MessageStore
+from .calibration import CJTEngine, DeltaStats, ExecStats, MessageStore
 from .factor import Factor
 from .hypertree import JTree, jt_from_catalog
 from .query import Query
@@ -30,6 +38,15 @@ class InteractionResult:
     stats: ExecStats
     latency_s: float
     steiner_size: int
+
+
+@dataclasses.dataclass
+class UpdateResult:
+    relation: str
+    new_version: str
+    queries_maintained: int   # distinct cached CJTs updated via delta calibration
+    queries_fallback: int     # CJTs that must recalibrate (no ⊕-inverse, σ moved)
+    stats: list[DeltaStats]
 
 
 @dataclasses.dataclass
@@ -93,6 +110,61 @@ class Treant:
         t0 = time.perf_counter()
         factor, stats = self.engine.execute(st.current)
         return InteractionResult(factor, stats, time.perf_counter() - t0, 0)
+
+    # -- data updates (delta calibration) ------------------------------------------
+    def update(self, new_rel: Relation, delta: Delta) -> UpdateResult:
+        """Apply a base-data update online, maintaining every cached CJT.
+
+        ``new_rel`` is the post-update relation version produced by
+        ``Relation.append_rows`` / ``delete_rows`` alongside ``delta``.  The
+        catalog gains the new version; each distinct tracked query (dashboard
+        queries and per-session current queries) whose snapshot matches
+        ``delta.old_version`` is delta-maintained (old message ⊕ ΔY, stored
+        under the bumped Prop-2 signature — pinned messages stay pinned), then
+        re-snapshotted to the new version.  Where maintenance is impossible
+        (ring without ⊕-inverse for a delete, σ-placement migration) nothing
+        stale survives either: the bumped signatures simply miss, and the
+        full recalibration is scheduled into the next ``think_time`` pass.
+        """
+        assert new_rel.name == delta.relation and new_rel.version == delta.new_version
+        self.catalog.put(new_rel)
+        tracked = list(self._dashboards.values()) + [
+            q for st in self._sessions.values() for q in (st.dashboard_query, st.current)
+        ]
+        todo = {
+            q.digest: q for q in tracked
+            if q.version_of(delta.relation) == delta.old_version
+        }
+        all_stats: list[DeltaStats] = []
+        maintained = fallbacks = 0
+        for q in todo.values():
+            _, st = self.engine.apply_delta(q, delta)
+            all_stats.append(st)
+            fallbacks += int(st.fallback)
+            # a query the update can't even reach (relation removed / outside
+            # the JT) is neither maintained nor a fallback
+            maintained += int(not st.fallback and st.delta_messages > 0)
+
+        def bump(q: Query) -> Query:
+            if q.version_of(delta.relation) == delta.old_version:
+                return q.with_version(delta.relation, delta.new_version)
+            return q
+
+        self._dashboards = {v: bump(q) for v, q in self._dashboards.items()}
+        for st_ in self._sessions.values():
+            st_.dashboard_query = bump(st_.dashboard_query)
+            st_.current = bump(st_.current)
+        # any in-flight background calibration targets a stale snapshot;
+        # the next think_time() restarts against the updated query (cheap
+        # when maintenance succeeded, a full recalibration otherwise)
+        self._calibrator = None
+        return UpdateResult(
+            relation=delta.relation,
+            new_version=delta.new_version,
+            queries_maintained=maintained,
+            queries_fallback=fallbacks,
+            stats=all_stats,
+        )
 
     # -- think-time calibration (§4.2.1) -------------------------------------------
     def think_time(

@@ -37,6 +37,8 @@ import time
 import traceback
 from pathlib import Path
 
+from repro.runtime.compat import cost_analysis as compat_cost_analysis
+
 ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
 
 
@@ -341,7 +343,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, analysis: bool = True,
             + mem.temp_size_in_bytes - mem.alias_size_in_bytes
         ),
     }
-    ca = compiled.cost_analysis() or {}
+    ca = compat_cost_analysis(compiled)
     rec["cost_raw"] = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
@@ -369,7 +371,7 @@ def run_analysis(cfg, shape, mesh, rules) -> dict:
             acfg = analysis_cfg(cfg, k, shape, grid=grid)
             lowered, _ = lower_cell(acfg, shape, mesh, rules, accum=1)
             compiled = lowered.compile()
-            ca = compiled.cost_analysis() or {}
+            ca = compat_cost_analysis(compiled)
             coll = parse_collectives(compiled.as_text())
             c = costs.setdefault(k, {})
             vals = {
@@ -420,7 +422,7 @@ def run_treant_cell(mesh_kind: str, n_measures: int = 1) -> dict:
         mem = compiled.memory_analysis()
         rec["memory"] = {"argument_bytes": mem.argument_size_in_bytes,
                          "temp_bytes": mem.temp_size_in_bytes}
-        ca = compiled.cost_analysis() or {}
+        ca = compat_cost_analysis(compiled)
         rec["cost_raw"] = {"flops": float(ca.get("flops", 0.0)),
                            "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
         rec["collectives_schedule"] = parse_collectives(compiled.as_text())
@@ -437,7 +439,7 @@ def run_treant_cell(mesh_kind: str, n_measures: int = 1) -> dict:
         "argument_bytes": mem.argument_size_in_bytes,
         "temp_bytes": mem.temp_size_in_bytes,
     }
-    ca = compiled.cost_analysis() or {}
+    ca = compat_cost_analysis(compiled)
     rec["cost_raw"] = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

@@ -1,4 +1,4 @@
 """Relational substrate: sparse annotated relations, schemas, generators, SQL."""
 
-from .relation import Relation, Catalog, lift_rows, mask_in, Predicate  # noqa: F401
+from .relation import Relation, Catalog, Delta, lift_rows, mask_in, Predicate  # noqa: F401
 from . import schema  # noqa: F401

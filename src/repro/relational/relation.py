@@ -6,6 +6,15 @@ columns.  ``lift_rows`` turns a relation into per-row semiring fields
 (COUNT → 1̄, SUM → measure, MOMENTS → (1,x,x²), tropical → value, …);
 ``Relation.to_factor`` densifies via segment ⊕-aggregation (the
 ``segment_aggregate`` Pallas kernel's job on TPU).
+
+Data updates are first-class: ``Relation.append_rows`` / ``delete_rows``
+produce a new immutable version *plus* a signed :class:`Delta` whose rows
+lift to the exact ⊕-difference between the versions.  Appends carry positive
+weights (valid in every semiring — min over a union is min of mins);
+deletes carry ⊕-inverse annotations via negated weights, which is only sound
+when the ring is a group under ⊕ (``Semiring.has_add_inverse``: SUM/COUNT/
+MOMENTS yes, MIN/MAX/BOOL no — those fall back to recomputation).  The CJT
+side of the machinery lives in ``core.calibration.CJTEngine.apply_delta``.
 """
 
 from __future__ import annotations
@@ -107,6 +116,89 @@ class Relation:
         measures[measure] = new
         return dataclasses.replace(self, measures=measures, version=version)
 
+    # -- data updates (delta calibration) ------------------------------------
+    def _materialized_weights(self) -> np.ndarray:
+        return (
+            np.asarray(self.weights, np.float32)
+            if self.weights is not None
+            else np.ones((self.num_rows,), np.float32)
+        )
+
+    def append_rows(
+        self,
+        codes: Mapping[str, np.ndarray],
+        measures: Mapping[str, np.ndarray] | None = None,
+        weights: np.ndarray | None = None,
+        version: str | None = None,
+    ) -> tuple["Relation", "Delta"]:
+        """Append rows, returning ``(new_version, delta)``.
+
+        The delta's rows are exactly the appended rows, so for any semiring
+        ``lift(new) = lift(old) ⊕ lift(delta.rows)`` — appends are maintainable
+        under every ring, including MIN/MAX.
+        """
+        measures = dict(measures or {})
+        if set(codes) != set(self.attrs):
+            raise ValueError(f"append codes {sorted(codes)} != attrs {sorted(self.attrs)}")
+        if set(measures) != set(self.measures):
+            raise ValueError("appended rows must supply every measure column")
+        new_codes = {a: np.asarray(codes[a], np.int32) for a in self.attrs}
+        n_new = new_codes[self.attrs[0]].shape[0] if self.attrs else 0
+        new_meas = {
+            m: np.asarray(measures[m], self.measures[m].dtype) for m in self.measures
+        }
+        w_new = (
+            np.asarray(weights, np.float32)
+            if weights is not None
+            else np.ones((n_new,), np.float32)
+        )
+        delta_rows = dataclasses.replace(
+            self, codes=new_codes, measures=new_meas, weights=w_new,
+            version=_delta_version(self.version, "a", new_codes, new_meas, w_new),
+        )
+        new_version = version or f"{self.version}+{delta_rows.version.split('Δ', 1)[1]}"
+        merged = dataclasses.replace(
+            self,
+            codes={a: np.concatenate([np.asarray(self.codes[a], np.int32), new_codes[a]])
+                   for a in self.attrs},
+            measures={m: np.concatenate([self.measures[m], new_meas[m]])
+                      for m in self.measures},
+            weights=(np.concatenate([self._materialized_weights(), w_new])
+                     if (self.weights is not None or weights is not None) else None),
+            version=new_version,
+        )
+        return merged, Delta(
+            relation=self.name, old_version=self.version, new_version=new_version,
+            rows=delta_rows, kind="append",
+        )
+
+    def delete_rows(
+        self, row_mask: np.ndarray, version: str | None = None
+    ) -> tuple["Relation", "Delta"]:
+        """Delete the rows selected by ``row_mask``, returning ``(new, delta)``.
+
+        The delta's rows are the deleted rows with *negated* weights — a valid
+        ⊕-inverse annotation exactly when the ring has additive inverses
+        (SUM/COUNT/MOMENTS); MIN/MAX/BOOL consumers must recompute instead
+        (``Delta.supported_by`` reports which).
+        """
+        row_mask = np.asarray(row_mask, bool)
+        if row_mask.shape != (self.num_rows,):
+            raise ValueError(f"mask shape {row_mask.shape} != ({self.num_rows},)")
+        gone_codes = {a: np.asarray(c, np.int32)[row_mask] for a, c in self.codes.items()}
+        gone_meas = {m: v[row_mask] for m, v in self.measures.items()}
+        gone_w = -self._materialized_weights()[row_mask]
+        delta_rows = dataclasses.replace(
+            self, codes=gone_codes, measures=gone_meas, weights=gone_w,
+            version=_delta_version(self.version, "d", gone_codes, gone_meas, gone_w),
+        )
+        new_version = version or f"{self.version}+{delta_rows.version.split('Δ', 1)[1]}"
+        kept = self.filter_rows(~row_mask, new_version)
+        return kept, Delta(
+            relation=self.name, old_version=self.version, new_version=new_version,
+            rows=delta_rows, kind="delete",
+        )
+
     # -- densification ------------------------------------------------------
     def flat_codes(self, attrs: Sequence[str]) -> tuple[np.ndarray, int]:
         attrs = list(attrs)
@@ -127,6 +219,44 @@ class Relation:
             lambda leaf: leaf.reshape(shape + leaf.shape[1:]), field
         )
         return Factor(tuple(self.attrs), field, ring)
+
+
+def _delta_version(old_version: str, tag: str, codes, measures, weights) -> str:
+    """Deterministic content-addressed version string for a delta-rows relation."""
+    h = hashlib.sha1()
+    h.update(old_version.encode())
+    h.update(tag.encode())
+    for a in sorted(codes):
+        h.update(codes[a].tobytes())
+    for m in sorted(measures):
+        h.update(np.ascontiguousarray(measures[m]).tobytes())
+    if weights is not None:
+        h.update(np.ascontiguousarray(weights).tobytes())
+    return f"{old_version}Δ{tag}{h.hexdigest()[:10]}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Delta:
+    """A signed change taking ``relation`` from ``old_version`` to ``new_version``.
+
+    ``rows`` is itself a :class:`Relation` (same schema) whose lift is the
+    ⊕-difference between the two versions; its ``weights`` carry the sign.
+    Deltas chain: applying them in sequence walks the version history.
+    """
+
+    relation: str
+    old_version: str
+    new_version: str
+    rows: Relation
+    kind: str  # "append" | "delete"
+
+    @property
+    def num_rows(self) -> int:
+        return self.rows.num_rows
+
+    def supported_by(self, ring: sr.Semiring) -> bool:
+        """Can cached ⊕-state absorb this delta, or must consumers recompute?"""
+        return self.kind == "append" or ring.has_add_inverse
 
 
 def lift_rows(rel: Relation, ring: sr.Semiring, measure: str | None = None) -> sr.Field:
@@ -165,9 +295,12 @@ class Catalog:
         for r in relations:
             self.put(r)
 
-    def put(self, rel: Relation) -> None:
+    def put(self, rel: Relation, make_latest: bool = True) -> None:
+        """Store a relation version; ``make_latest=False`` registers auxiliary
+        versions (e.g. delta rows) without making them the default snapshot."""
         self._store[(rel.name, rel.version)] = rel
-        self._latest[rel.name] = rel.version
+        if make_latest or rel.name not in self._latest:
+            self._latest[rel.name] = rel.version
 
     def get(self, name: str, version: str | None = None) -> Relation:
         v = version or self._latest[name]

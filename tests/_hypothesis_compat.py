@@ -1,0 +1,77 @@
+"""Thin fallback for ``hypothesis`` so the property-test modules always collect.
+
+When the real package is installed (see requirements-dev.txt) it is re-exported
+unchanged.  Otherwise a deterministic mini-implementation covers exactly the
+subset this suite uses — ``@settings(max_examples=..., deadline=None)`` over
+``@given(name=st.integers(lo, hi), ...)`` — by drawing ``max_examples``
+seeded examples per test and running the body once for each.  No shrinking,
+no database: failures print the drawn example so they can be replayed by hand.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover — exercised when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw  # draw(rng) -> value
+
+    class strategies:  # noqa: N801 — mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            pool = list(elements)
+            return _Strategy(lambda rng: pool[int(rng.integers(0, len(pool)))])
+
+    class settings:  # noqa: N801
+        def __init__(self, max_examples: int = 10, deadline=None, **_ignored):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._compat_max_examples = self.max_examples
+            return fn
+
+    def given(**strategy_kwargs):
+        names = sorted(strategy_kwargs)  # fixed draw order for determinism
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples", 10)
+                rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+                for i in range(n):
+                    drawn = {k: strategy_kwargs[k]._draw(rng) for k in names}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception:
+                        print(f"falsifying example ({i + 1}/{n}): {drawn}")
+                        raise
+
+            # hide the drawn parameters from pytest's fixture resolution,
+            # exactly as real hypothesis does
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(
+                parameters=[p for k, p in sig.parameters.items() if k not in strategy_kwargs]
+            )
+            del wrapper.__wrapped__  # keep pytest off the original signature
+            return wrapper
+
+        return deco

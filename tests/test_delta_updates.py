@@ -1,0 +1,262 @@
+"""Delta calibration: incremental CJT maintenance under data updates.
+
+Metamorphic contract: for any sequence of appends/deletes,
+``apply_delta(Δ)`` followed by a query must equal a from-scratch calibration
+over the updated catalog — across SUM/COUNT/AVG(MOMENTS) rings and both
+update kinds — while recomputing zero messages at query time.  Plus cache
+correctness: version-bumped Prop-2 signatures mean no stale message can ever
+serve a post-update query, and pre-update queries keep answering from their
+own snapshot.
+"""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import CJTEngine, MessageStore, Query, Treant, jt_from_catalog
+from repro.core import semiring as sr
+from repro.relational import schema
+from repro.relational.relation import mask_in
+
+
+RINGS = {"sum": sr.SUM, "count": sr.COUNT, "moments": sr.MOMENTS}
+
+
+def _query(cat, ring_name, group_by=("carrier_group", "month")):
+    measure = ("Flights", "dep_delay") if ring_name != "count" else None
+    return Query.make(cat, ring=ring_name, measure=measure, group_by=group_by)
+
+
+def _random_update(rel, rng):
+    if rng.integers(2) == 0:
+        n = int(rng.integers(1, 200))
+        codes = {a: rng.integers(0, rel.domains[a], n) for a in rel.attrs}
+        measures = {m: rng.gamma(1.5, 10.0, n).astype(np.float32) for m in rel.measures}
+        return rel.append_rows(codes, measures=measures)
+    return rel.delete_rows(rng.random(rel.num_rows) < 0.08)
+
+
+def _assert_factors_close(got, want, rtol=2e-3, atol=5e-2):
+    import jax
+
+    for a, b in zip(jax.tree_util.tree_leaves(got.field),
+                    jax.tree_util.tree_leaves(want.field)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float64), np.asarray(b, np.float64),
+            rtol=rtol, atol=atol,
+        )
+
+
+@pytest.mark.parametrize("ring_name", sorted(RINGS))
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_update_sequence_matches_rebuild(ring_name, seed):
+    """update(Δ)* then query ≡ rebuild-from-scratch on the updated catalog."""
+    rng = np.random.default_rng(seed)
+    cat = schema.flight(n_flights=2_000, seed=seed % 5)
+    jt = jt_from_catalog(cat)
+    eng = CJTEngine(jt, cat, RINGS[ring_name])
+    q = _query(cat, ring_name)
+    eng.calibrate(q)
+    rel = cat.get("Flights")
+    for _ in range(int(rng.integers(1, 4))):
+        rel, delta = _random_update(rel, rng)
+        cat.put(rel)
+        q, stats = eng.apply_delta(q, delta)
+        assert not stats.fallback
+        assert stats.edges_maintained == len(jt.bags) - 1
+    got, es = eng.execute(q)
+    # every message is a cache hit: maintenance re-calibrated the CJT
+    assert es.messages_computed == 0, es.recomputed_edges
+    cold = CJTEngine(jt, cat, RINGS[ring_name], store=MessageStore())
+    want, _ = cold.execute(_query(cat, ring_name))
+    _assert_factors_close(got, want)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_update_with_predicates_matches_rebuild(seed):
+    """Maintenance respects σ annotations placed anywhere in the tree."""
+    rng = np.random.default_rng(seed)
+    cat = schema.flight(n_flights=2_000, seed=seed % 3)
+    jt = jt_from_catalog(cat)
+    eng = CJTEngine(jt, cat, sr.SUM)
+    d = cat.domains()
+    q = _query(cat, "sum").with_predicate(
+        mask_in(d["airport_state"], [int(v) for v in rng.choice(d["airport_state"], 10, replace=False)],
+                attr="airport_state")
+    ).with_predicate(
+        mask_in(d["delay_bucket"], [0, 1, 2, 3], attr="delay_bucket")
+    )
+    eng.calibrate(q)
+    rel = cat.get("Flights")
+    for _ in range(2):
+        rel, delta = _random_update(rel, rng)
+        cat.put(rel)
+        q, stats = eng.apply_delta(q, delta)
+        assert not stats.fallback
+    got, es = eng.execute(q)
+    assert es.messages_computed == 0
+    cold = CJTEngine(jt, cat, sr.SUM, store=MessageStore())
+    want, _ = cold.execute(q)
+    _assert_factors_close(got, want)
+
+
+def test_append_then_delete_roundtrip():
+    """Deleting exactly the appended rows restores the original answers (SUM)."""
+    cat = schema.flight(n_flights=2_000)
+    jt = jt_from_catalog(cat)
+    eng = CJTEngine(jt, cat, sr.SUM)
+    q0 = _query(cat, "sum")
+    eng.calibrate(q0)
+    base, _ = eng.execute(q0)
+    rel = cat.get("Flights")
+    rng = np.random.default_rng(3)
+    n0 = rel.num_rows
+    codes = {a: rng.integers(0, rel.domains[a], 64) for a in rel.attrs}
+    rel1, d1 = rel.append_rows(codes, measures={"dep_delay": rng.gamma(1.5, 10.0, 64)})
+    cat.put(rel1)
+    q1, _ = eng.apply_delta(q0, d1)
+    mask = np.zeros(rel1.num_rows, bool)
+    mask[n0:] = True
+    rel2, d2 = rel1.delete_rows(mask)
+    cat.put(rel2)
+    q2, _ = eng.apply_delta(q1, d2)
+    back, es = eng.execute(q2)
+    assert es.messages_computed == 0
+    _assert_factors_close(back, base, rtol=1e-4, atol=1e-2)
+
+
+def test_no_stale_signature_survives_update():
+    """Prop-2 signature bumping: old and new snapshots never cross-contaminate."""
+    cat = schema.flight(n_flights=2_000)
+    jt = jt_from_catalog(cat)
+    eng = CJTEngine(jt, cat, sr.SUM)
+    q_old = _query(cat, "sum")
+    eng.calibrate(q_old)
+    placement = eng.place_predicates(q_old)
+    old_answer, _ = eng.execute(q_old)
+
+    rel = cat.get("Flights")
+    rng = np.random.default_rng(9)
+    codes = {a: rng.integers(0, rel.domains[a], 300) for a in rel.attrs}
+    new_rel, delta = rel.append_rows(
+        codes, measures={"dep_delay": np.full(300, 100.0, np.float32)}
+    )
+    cat.put(new_rel)
+    q_new, stats = eng.apply_delta(q_old, delta)
+    assert not stats.fallback
+
+    u0 = jt.mapping["Flights"]
+    placement_new = eng.place_predicates(q_new)
+    for u, v in jt.directed_edges():
+        sig_old = eng.edge_sig(q_old, u, v, placement)
+        sig_new = eng.edge_sig(q_new, u, v, placement_new)
+        if u0 in jt.subtree_bags(u, v):
+            # changed messages live under bumped signatures
+            assert sig_old != sig_new, (u, v)
+        else:
+            # untouched subtrees keep their signature — that's the reuse
+            assert sig_old == sig_new, (u, v)
+        assert eng.store.contains(eng.edge_sig(q_new, u, v, placement_new),
+                                  eng.gamma_carry(q_new, u, v))
+
+    # the new query sees the update, the old query still answers its snapshot
+    new_answer, es = eng.execute(q_new)
+    assert es.messages_computed == 0
+    assert not np.allclose(np.asarray(new_answer.field), np.asarray(old_answer.field))
+    old_again, _ = eng.execute(q_old)
+    np.testing.assert_allclose(
+        np.asarray(old_again.field), np.asarray(old_answer.field), rtol=1e-6
+    )
+
+
+def test_tropical_append_maintains_delete_falls_back():
+    """MIN ring: appends combine via ⊕=min; deletes have no inverse → fallback."""
+    cat = schema.flight(n_flights=1_500)
+    jt = jt_from_catalog(cat)
+    eng = CJTEngine(jt, cat, sr.TROPICAL_MIN)
+    q = Query.make(cat, ring="tropical_min", measure=("Flights", "dep_delay"),
+                   group_by=("carrier_group",))
+    eng.calibrate(q)
+    rel = cat.get("Flights")
+    rng = np.random.default_rng(5)
+    codes = {a: rng.integers(0, rel.domains[a], 40) for a in rel.attrs}
+    rel1, d_app = rel.append_rows(codes, measures={"dep_delay": rng.gamma(1.5, 10.0, 40)})
+    cat.put(rel1)
+    q1, st_app = eng.apply_delta(q, d_app)
+    assert not st_app.fallback
+    got, es = eng.execute(q1)
+    assert es.messages_computed == 0
+    cold = CJTEngine(jt, cat, sr.TROPICAL_MIN, store=MessageStore())
+    want, _ = cold.execute(q1)
+    _assert_factors_close(got, want, rtol=1e-5, atol=1e-5)
+
+    rel2, d_del = rel1.delete_rows(rng.random(rel1.num_rows) < 0.1)
+    cat.put(rel2)
+    q2, st_del = eng.apply_delta(q1, d_del)
+    assert st_del.fallback and st_del.edges_maintained == 0
+    # nothing stale: recompute-on-demand still yields the right answer
+    got2, _ = eng.execute(q2)
+    cold2 = CJTEngine(jt, cat, sr.TROPICAL_MIN, store=MessageStore())
+    want2, _ = cold2.execute(q2)
+    _assert_factors_close(got2, want2, rtol=1e-5, atol=1e-5)
+
+
+def test_pinned_dashboard_messages_stay_pinned():
+    """Maintained counterparts of pinned (dashboard) messages are pinned too."""
+    cat = schema.flight(n_flights=1_500)
+    jt = jt_from_catalog(cat)
+    eng = CJTEngine(jt, cat, sr.SUM)
+    q = _query(cat, "sum")
+    eng.calibrate(q, pin=True)
+    rel = cat.get("Flights")
+    rng = np.random.default_rng(2)
+    codes = {a: rng.integers(0, rel.domains[a], 50) for a in rel.attrs}
+    new_rel, delta = rel.append_rows(codes, measures={"dep_delay": rng.gamma(1.5, 10.0, 50)})
+    cat.put(new_rel)
+    q_new, stats = eng.apply_delta(q, delta)
+    assert stats.edges_maintained == len(jt.bags) - 1
+    placement = eng.place_predicates(q_new)
+    placement_old = eng.place_predicates(q)
+    u0 = jt.mapping["Flights"]
+    for u, v in jt.directed_edges():
+        if u0 in jt.subtree_bags(u, v):
+            base = eng.edge_sig(q_new, u, v, placement)
+            assert eng.store.is_pinned(base, eng.gamma_carry(q_new, u, v)), (u, v)
+            # the pin migrated: the stale generation is evictable again
+            old_base = eng.edge_sig(q, u, v, placement_old)
+            assert not eng.store.is_pinned(old_base, eng.gamma_carry(q, u, v)), (u, v)
+
+
+def test_treant_update_end_to_end():
+    """Treant.update maintains dashboards + sessions and serves fresh data
+    at cache-hit speed; a cold Treant over the updated catalog agrees."""
+    cat = schema.flight(n_flights=2_000)
+    t = Treant(cat, ring=sr.SUM)
+    q0 = _query(cat, "sum", group_by=("carrier_group",))
+    t.register_dashboard("v1", q0)
+    d = cat.domains()
+    q1 = q0.with_predicate(mask_in(d["month"], [0, 1, 2], attr="month"))
+    t.interact("s", "v1", q1)
+    t.think_time("s", "v1")
+
+    rel = cat.get("Flights")
+    rng = np.random.default_rng(4)
+    codes = {a: rng.integers(0, rel.domains[a], 120) for a in rel.attrs}
+    new_rel, delta = rel.append_rows(
+        codes, measures={"dep_delay": np.full(120, 77.0, np.float32)}
+    )
+    res = t.update(new_rel, delta)
+    assert res.queries_fallback == 0 and res.queries_maintained >= 1
+
+    r = t.read("s", "v1")
+    assert r.stats.messages_computed == 0, r.stats.recomputed_edges
+    cold = Treant(cat, ring=sr.SUM)
+    cold.register_dashboard("v1", _query(cat, "sum", group_by=("carrier_group",)))
+    cold.interact("s", "v1",
+                  _query(cat, "sum", group_by=("carrier_group",)).with_predicate(
+                      mask_in(d["month"], [0, 1, 2], attr="month")))
+    want = cold.read("s", "v1")
+    _assert_factors_close(r.factor, want.factor, rtol=1e-4, atol=1e-2)

@@ -18,8 +18,8 @@ SCRIPT = textwrap.dedent("""
         calibrate_chain_reference, chain_absorptions_reference,
         make_chain_calibrate, place_chain_factors,
     )
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.runtime.compat import make_mesh
+    mesh = make_mesh((8,), ("data",))
     r, d = 6, 64
     rng = np.random.default_rng(0)
     factors_np = [rng.random((d, d)).astype(np.float32) for _ in range(r)]

@@ -4,7 +4,7 @@ relations (hypothesis property test over schemas/rings)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import semiring as sr
 from repro.core.factor import Factor, brute_force_join_aggregate, contract, ones_factor

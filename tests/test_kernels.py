@@ -4,7 +4,7 @@ interpret mode (the brief's per-kernel requirement)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels.segment_aggregate.ops import aggregate_op
 from repro.kernels.segment_aggregate.ref import segment_aggregate_ref

@@ -5,7 +5,7 @@ of cached interactions returns exactly what a cold engine returns."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import CJTEngine, MessageStore, Query, jt_from_catalog
 from repro.core import semiring as sr

@@ -12,6 +12,7 @@ import pytest
 from repro.checkpoint.checkpointer import Checkpointer, restore_pytree, save_pytree
 from repro.data.pipeline import StragglerMonitor, TokenPipeline, synth_batch
 from repro.optim.compression import compress_int8, decompress_int8
+from repro.runtime.compat import make_mesh
 
 
 def test_checkpoint_roundtrip(tmp_path):
@@ -41,8 +42,7 @@ def test_checkpoint_elastic_reshard(tmp_path):
     """Restore with different shardings (mesh change) — elastic scaling."""
     tree = {"w": np.arange(16, dtype=np.float32).reshape(4, 4)}
     save_pytree(tree, tmp_path, 1)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     sh = {"w": NamedSharding(mesh, P("data", None))}
     got, _ = restore_pytree(tmp_path, template=tree, shardings=sh)
@@ -88,8 +88,7 @@ def test_int8_compression_error_feedback():
 def test_sharding_rules_divisibility_fallback():
     import os
     from repro.runtime.sharding import make_rules, pspec_for
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     rules = make_rules(mesh, multi_pod=False)
     # vocab 49155 can't shard 16-ways → but divisible by 1 here; simulate by hand
     from repro.runtime import sharding as sh_mod

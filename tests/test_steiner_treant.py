@@ -3,7 +3,7 @@ think-time calibration monotonicity, cross-session cache sharing."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import CJTEngine, MessageStore, Query, Treant, jt_from_catalog, steiner
 from repro.core import semiring as sr
