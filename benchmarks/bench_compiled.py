@@ -1,0 +1,142 @@
+"""Compiled message plans: jit + Pallas fast path vs the legacy un-jitted engine.
+
+Same dashboard/interaction/update workload run twice — once on the legacy
+op-by-op path (``use_plans=False``: host-side index building + un-jitted
+dispatch per message) and once through the compiled plan cache — timing each
+warm interaction with the message store restored to its pre-interaction
+state (plan/XLA caches warm, the paper's §5.2 protocol).  Reports per-query
+latencies, the median warm-plan speedup, an update-maintenance comparison,
+and the plan-cache counters (kernel-path executions must be > 0).
+
+``REPRO_BENCH_SCALE`` scales the fact table (CI smoke uses 0.05).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import Query, Treant, jt_from_catalog
+from repro.core import semiring as sr
+from repro.relational import schema
+from repro.relational.relation import mask_in, mask_range
+
+from .common import emit
+
+
+def _interactions(cat, q0: Query) -> list[tuple[str, Query]]:
+    d = cat.domains()
+    return [
+        ("sel_role", q0.with_predicate(mask_in(d["role_name"], [1, 2], attr="role_name"))),
+        ("sel_title", q0.with_predicate(mask_in(d["title"], [0, 3, 5], attr="title"))),
+        ("sel_start_q", q0.with_predicate(mask_range(d["start_q"], 4, 12, attr="start_q"))),
+        ("sel_state", q0.with_predicate(mask_in(d["state"], list(range(10)), attr="state"))),
+        ("grp_title", q0.add_group_by("title")),
+        ("grp_state", q0.add_group_by("state")),
+        ("remove_Acc", q0.with_removed("Acc")),
+    ]
+
+
+def _timed_interact(tre: Treant, viz: str, q: Query, repeats: int = 3):
+    """Median warm latency; run 0 warms plan traces/XLA and is discarded."""
+    snap = tre.store.snapshot()
+    ts, res = [], None
+    for _ in range(repeats + 1):
+        tre.store.restore(snap)
+        t0 = time.perf_counter()
+        res = tre.interact("u1", viz, q)
+        jax.block_until_ready(res.factor.field)
+        ts.append(time.perf_counter() - t0)
+    tre.store.restore(snap)
+    return float(np.median(ts[1:])), res
+
+
+def _setup(n_opp: int, use_plans: bool):
+    cat = schema.salesforce(n_opp=n_opp)
+    jt = jt_from_catalog(cat)
+    tre = Treant(cat, ring=sr.SUM, jt=jt, use_plans=use_plans)
+    q0 = Query.make(cat, ring="sum", measure=("Opp", "amount"),
+                    group_by=("camp_type",))
+    t0 = time.perf_counter()
+    tre.register_dashboard("pie", q0)
+    t_off = time.perf_counter() - t0
+    return cat, tre, q0, t_off
+
+
+def _bench_update(cat, tre: Treant, q0: Query, seed: int) -> float:
+    """Time one warm maintained update + read.  The first append traces the
+    delta plans; the second (same |Δ| → same structure) is the timed one."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    for i in range(2):
+        camp = cat.get("Camp")
+        new_rel, delta = camp.append_rows(
+            {a: rng.integers(0, camp.domains[a], 64).astype(np.int32)
+             for a in camp.attrs},
+            {m: rng.random(64).astype(np.float32) * 100 for m in camp.measures},
+        )
+        t0 = time.perf_counter()
+        tre.update(new_rel, delta)
+        res = tre.read("u1", "pie")
+        jax.block_until_ready(res.factor.field)
+        t = time.perf_counter() - t0
+    return t
+
+
+def run(scale: float = 1.0):
+    n_opp = int(100_000 * scale)
+    sides = {}
+    for mode, use_plans in [("legacy", False), ("compiled", True)]:
+        cat, tre, q0, t_off = _setup(n_opp, use_plans)
+        sides[mode] = (cat, tre, q0)
+        emit(f"compiled/offline_calibrate/{mode}", t_off)
+
+    speedups = []
+    for name, _ in _interactions(sides["legacy"][0], sides["legacy"][2]):
+        per = {}
+        for mode in ("legacy", "compiled"):
+            cat, tre, q0 = sides[mode]
+            q = dict(_interactions(cat, q0))[name]
+            per[mode], per[f"res_{mode}"] = _timed_interact(tre, "pie", q)
+        match = np.allclose(
+            np.asarray(per["res_legacy"].factor.field, np.float64),
+            np.asarray(per["res_compiled"].factor.field, np.float64),
+            rtol=1e-4, atol=1e-4,
+        )
+        speed = per["legacy"] / max(per["compiled"], 1e-9)
+        speedups.append(speed)
+        emit(f"compiled/{name}/legacy", per["legacy"])
+        emit(f"compiled/{name}/compiled", per["compiled"],
+             f"speedup={speed:.1f}x match={match}")
+
+    # non-time rows carry their unit in the name (_x ratio, _count) so the
+    # BENCH_*.json artifact stays honest about what each value is
+    med = float(np.median(speedups))
+    emit("compiled/median_interaction_speedup_x", med / 1e6,
+         f"median legacy/compiled = {med:.1f}x")
+
+    upd = {m: _bench_update(sides[m][0], sides[m][1], sides[m][2], seed=41)
+           for m in ("legacy", "compiled")}
+    emit("compiled/update_then_read/legacy", upd["legacy"])
+    emit("compiled/update_then_read/compiled", upd["compiled"],
+         f"speedup={upd['legacy'] / max(upd['compiled'], 1e-9):.1f}x")
+
+    st = sides["compiled"][1].cache_stats()
+    plans = st["plans"]
+    emit("compiled/plans_built_count", plans["plans_built"] / 1e6,
+         f"hits={plans['plan_hits']}")
+    emit("compiled/kernel_execs_count", plans["kernel_execs"] / 1e6,
+         f"fallback={plans['fallback_execs']} (kernel-path execs must be > 0)")
+    return med
+
+
+def main():
+    scale = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+    run(scale=scale)
+
+
+if __name__ == "__main__":
+    main()

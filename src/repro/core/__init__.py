@@ -8,6 +8,7 @@ from .hypertree import (  # noqa: F401
 )
 from .query import Query  # noqa: F401
 from .calibration import CJTEngine, MessageStore, ExecStats, DeltaStats  # noqa: F401
+from .plans import PlanCache, PlanStats  # noqa: F401
 from .treant import Treant, InteractionResult, UpdateResult  # noqa: F401
 from . import steiner  # noqa: F401
 from .ml import FactorizedLinearRegression, FeatureSpec, FitResult  # noqa: F401

@@ -37,10 +37,27 @@ digest, so stale entries can never be served: an unmaintained edge simply
 misses and recomputes.  Deletions ride on ⊕-inverse row annotations and are
 therefore gated on ``Semiring.has_add_inverse`` (MIN/MAX/BOOL fall back to
 recomputation; the caller sees ``DeltaStats.fallback``).
+
+**Compiled message plans** (core.plans): every bag contraction is traced and
+jitted once per *structural* signature (relation shape/attr order, incoming
+factor shapes, ring, out attrs, predicate arity) and then re-executed across
+queries, interactions, versions and delta passes — a Prop-2 signature change
+that keeps the structure (new version, new σ mask, delta maintenance) hits
+the same compiled plan.  Flat row codes, per-row lifts and densified base
+factors are device-resident caches, so the message loop does no host work
+and the upward/downward passes dispatch asynchronously; ``execute`` blocks
+only at absorption.  Inside a plan, f32 scalar rings (SUM/COUNT) ⊕-reduce
+through the ``segment_aggregate`` Pallas kernel and tropical MIN/MAX through
+its min/max ops; the 2-factor dense hot path lowers to ``semiring_contract``.
+Compound rings (MOMENTS, covariance, BOOL, int64 COUNT) take the lax
+fallback.  ``use_plans=False`` keeps the legacy un-jitted reference path;
+plan hit/trace/kernel counters surface in ``ExecStats`` and
+``Treant.cache_stats``.
 """
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import hashlib
 from collections import OrderedDict
@@ -50,10 +67,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.relational.relation import Catalog, Delta, Predicate, Relation, lift_rows
+from repro.relational.relation import LRU, Catalog, Delta, Predicate, Relation, lift_rows
 from . import semiring as sr
 from .factor import Factor, contract, ones_factor
 from .hypertree import JTree
+from .plans import PlanCache, expand_rows_field
 from .query import Query
 
 
@@ -78,9 +96,21 @@ class MessageStore:
         self._pinned: set[str] = set()
         # (edge, base_sig) -> {γ tuple -> full sig}: Σ-compensation index
         self._widen: dict[str, dict[tuple[str, ...], str]] = {}
+        # derived probe index: per base_sig, entries sorted by |γ| (smallest
+        # superset narrows cheapest) and a refcount over all widened γ attrs
+        # (a probe γ ⊄ supp(refcount) can never match — skip the scan
+        # entirely; refcounts make eviction-time removal O(|γ|))
+        self._widen_bysize: dict[str, list[tuple[int, tuple[str, ...], str]]] = {}
+        self._widen_attrs: dict[str, dict[str, int]] = {}
+        # reverse map sig -> (base_sig, γ) so eviction can drop the widen
+        # entries too — otherwise the index grows monotonically across
+        # version bumps (dead sigs inflating every probe scan)
+        self._sig_index: dict[str, tuple[str, tuple[str, ...]]] = {}
         self.hits = 0
         self.misses = 0
         self.widen_hits = 0
+        self.widen_scans = 0
+        self.widen_scan_steps = 0
         self.nbytes = 0
 
     @staticmethod
@@ -94,20 +124,32 @@ class MessageStore:
             self._data.move_to_end(sig)
             self.hits += 1
             return f
-        # Σ compensation: narrow a cached wider-γ message by marginalization
-        for g2, sig2 in self._widen.get(base_sig, {}).items():
-            if set(gamma) <= set(g2) and sig2 in self._data:
-                wide = self._data[sig2]
-                narrowed = wide.marginalize(set(g2) - set(gamma))
-                self.put(base_sig, gamma, narrowed)
-                self.widen_hits += 1
-                return narrowed
+        # Σ compensation: narrow a cached wider-γ message by marginalization.
+        # Indexed by |γ|: strict supersets are larger, so the scan starts past
+        # size |γ| and visits candidates smallest-first.
+        gset = set(gamma)
+        attrs = self._widen_attrs.get(base_sig)
+        if attrs is not None and all(a in attrs for a in gset):
+            bysize = self._widen_bysize.get(base_sig, [])
+            self.widen_scans += 1
+            start = bisect.bisect_left(bysize, (len(gamma),))
+            for _, g2, sig2 in bysize[start:]:
+                self.widen_scan_steps += 1
+                if gset <= set(g2) and sig2 in self._data:
+                    wide = self._data[sig2]
+                    narrowed = wide.marginalize(set(g2) - gset)
+                    self.put(base_sig, gamma, narrowed)
+                    self.widen_hits += 1
+                    return narrowed
         self.misses += 1
         return None
 
     def contains(self, base_sig: str, gamma: tuple[str, ...]) -> bool:
         if self.full_sig(base_sig, gamma) in self._data:
             return True
+        attrs = self._widen_attrs.get(base_sig)
+        if attrs is None or not all(a in attrs for a in gamma):
+            return False
         return any(set(gamma) <= set(g2) for g2 in self._widen.get(base_sig, {}))
 
     def put(self, base_sig: str, gamma: tuple[str, ...], f: Factor, pin: bool = False):
@@ -116,10 +158,45 @@ class MessageStore:
             self.nbytes += factor_nbytes(f)
         self._data[sig] = f
         self._data.move_to_end(sig)
-        self._widen.setdefault(base_sig, {})[gamma] = sig
+        per_base = self._widen.setdefault(base_sig, {})
+        if gamma not in per_base:  # full_sig is deterministic: insert once
+            bisect.insort(
+                self._widen_bysize.setdefault(base_sig, []), (len(gamma), gamma, sig)
+            )
+            counts = self._widen_attrs.setdefault(base_sig, {})
+            for a in gamma:
+                counts[a] = counts.get(a, 0) + 1
+            self._sig_index[sig] = (base_sig, gamma)
+        per_base[gamma] = sig
         if pin:
             self._pinned.add(sig)
         self._evict()
+
+    def _drop_widen(self, sig: str) -> None:
+        """Remove an evicted message's Σ-widening index entries."""
+        hit = self._sig_index.pop(sig, None)
+        if hit is None:
+            return
+        base_sig, gamma = hit
+        per_base = self._widen.get(base_sig)
+        if per_base is None:
+            return
+        per_base.pop(gamma, None)
+        bysize = self._widen_bysize.get(base_sig, [])
+        i = bisect.bisect_left(bysize, (len(gamma), gamma, sig))
+        if i < len(bysize) and bysize[i] == (len(gamma), gamma, sig):
+            bysize.pop(i)
+        counts = self._widen_attrs.get(base_sig, {})
+        for a in gamma:
+            c = counts.get(a, 0) - 1
+            if c > 0:
+                counts[a] = c
+            else:
+                counts.pop(a, None)
+        if not per_base:
+            self._widen.pop(base_sig, None)
+            self._widen_bysize.pop(base_sig, None)
+            self._widen_attrs.pop(base_sig, None)
 
     def pin(self, base_sig: str, gamma: tuple[str, ...]):
         self._pinned.add(self.full_sig(base_sig, gamma))
@@ -172,12 +249,14 @@ class MessageStore:
                 continue
             f = self._data.pop(sig)
             self.nbytes -= factor_nbytes(f)
+            self._drop_widen(sig)
 
     def __len__(self):
         return len(self._data)
 
     def reset_stats(self):
         self.hits = self.misses = self.widen_hits = 0
+        self.widen_scans = self.widen_scan_steps = 0
 
     def snapshot(self):
         """Cheap state snapshot (factors are immutable) — used by benchmarks
@@ -195,6 +274,19 @@ class MessageStore:
             set(snap[2]), snap[3], snap[4],
         )
         self.hits, self.misses, self.widen_hits = stats
+        self._widen_bysize = {
+            b: sorted((len(g), g, s) for g, s in d.items())
+            for b, d in self._widen.items()
+        }
+        self._widen_attrs = {}
+        for b, d in self._widen.items():
+            counts = self._widen_attrs.setdefault(b, {})
+            for g in d:
+                for a in g:
+                    counts[a] = counts.get(a, 0) + 1
+        self._sig_index = {
+            s: (b, g) for b, d in self._widen.items() for g, s in d.items()
+        }
 
 
 # ---------------------------------------------------------------------------
@@ -210,6 +302,11 @@ class ExecStats:
     messages_reused: int = 0
     rows_scanned: int = 0
     recomputed_edges: list = dataclasses.field(default_factory=list)
+    # compiled message plans (core.plans): structural traces vs warm re-runs,
+    # and how many executions took a Pallas kernel path
+    plan_traces: int = 0
+    plan_hits: int = 0
+    kernel_execs: int = 0
 
 
 @dataclasses.dataclass
@@ -234,6 +331,8 @@ class CJTEngine:
         lifts: Mapping[str, LiftFn] | None = None,
         store: MessageStore | None = None,
         dense_rows_threshold: int = 0,
+        use_plans: bool = True,
+        plan_cache: PlanCache | None = None,
     ):
         self.jt = jt
         self.catalog = catalog
@@ -243,7 +342,16 @@ class CJTEngine:
         # relations with ≤ threshold rows are densified (dense contraction
         # path); bigger ones use the sparse segment path
         self.dense_rows_threshold = dense_rows_threshold
-        self._sig_memo: dict[tuple[str, str, str], str] = {}
+        # compiled message plans: jitted bag contractions keyed structurally
+        # (use_plans=False keeps the legacy un-jitted reference path)
+        if plan_cache is not None and plan_cache.ring.name != ring.name:
+            raise ValueError(
+                f"plan_cache ring {plan_cache.ring.name!r} != engine ring {ring.name!r}"
+            )
+        self.plans = (plan_cache or PlanCache(ring)) if use_plans else None
+        # Prop-2 signature memo, LRU-bounded: keyed by (query digest, edge),
+        # so a long-lived session's interaction stream cannot leak memory
+        self._sig_memo: LRU = LRU(capacity=8192)
 
     # -- annotation placement (§3.3, §3.4.2 shrinking) ------------------------
     def place_predicates(self, q: Query) -> dict[str, tuple[Predicate, ...]]:
@@ -355,10 +463,24 @@ class CJTEngine:
             stats.rows_scanned += sum(r.num_rows for r in rels)
         sparse_rels = [r for r in rels if r.num_rows > self.dense_rows_threshold]
         if len(sparse_rels) == 1 and len(rels) == 1:
-            return self._sparse_bag(q, rels[0], incoming, preds, out_attrs)
-        return self._dense_bag(q, rels, incoming, preds, out_attrs)
+            return self._sparse_bag(q, rels[0], incoming, preds, out_attrs, stats)
+        return self._dense_bag(q, rels, incoming, preds, out_attrs, stats)
+
+    def _lift_id(self, rel_name: str):
+        """Cache-key component identifying which lift produces a relation's
+        rows: None for the default lift, the custom fn object itself
+        otherwise (a shared PlanCache must not serve engine A's lift to
+        engine B; keying by the object keeps it alive, so no id reuse)."""
+        return self.lifts.get(rel_name)
 
     def _lift(self, q: Query, rel: Relation) -> sr.Field:
+        if self.plans is not None:
+            measure = q.measure[1] if q.measure and q.measure[0] == rel.name else None
+            key = (rel.key, self.ring.name, measure, q.lift_tag, self._lift_id(rel.name))
+            return self.plans.lift_cached(key, lambda: self._lift_impl(q, rel))
+        return self._lift_impl(q, rel)
+
+    def _lift_impl(self, q: Query, rel: Relation) -> sr.Field:
         if rel.name in self.lifts:
             return self.lifts[rel.name](rel)
         measure = None
@@ -366,14 +488,27 @@ class CJTEngine:
             measure = q.measure[1]
         return lift_rows(rel, self.ring, measure)
 
-    def _dense_bag(self, q, rels, incoming, preds, out_attrs) -> Factor:
+    def _base_factor(self, q: Query, rel: Relation) -> Factor:
+        """Densified base relation, device-cached when plans are enabled."""
         ring = self.ring
-        factors = [r.to_factor(ring, q.measure[1] if q.measure and q.measure[0] == r.name else None)
-                   if r.name not in self.lifts else self._dense_lifted(q, r)
-                   for r in rels]
-        factors += list(incoming)
+        measure = q.measure[1] if q.measure and q.measure[0] == rel.name else None
+        if rel.name in self.lifts:
+            if self.plans is None:
+                return self._dense_lifted(q, rel)
+            key = ("lifted", rel.key, ring.name, q.lift_tag, self._lift_id(rel.name))
+            return self.plans.factor_cached(key, lambda: self._dense_lifted(q, rel))
+        if self.plans is None:
+            return rel.to_factor(ring, measure)
+        key = ("base", rel.key, ring.name, measure)
+        return self.plans.factor_cached(key, lambda: rel.to_factor(ring, measure))
+
+    def _dense_bag(self, q, rels, incoming, preds, out_attrs, stats=None) -> Factor:
+        ring = self.ring
+        factors = [self._base_factor(q, r) for r in rels] + list(incoming)
         if not factors:
             return Factor((), ring.ones(()), ring)
+        if self.plans is not None:
+            return self.plans.run_dense(factors, preds, out_attrs, stats)
         avail = {a for f in factors for a in f.attrs}
         for p in preds:
             if p.attr not in avail:  # pragma: no cover — placement guarantees
@@ -389,6 +524,11 @@ class CJTEngine:
         return contract(factors, out, ring)
 
     def _dense_lifted(self, q, rel: Relation) -> Factor:
+        if self.plans is not None:
+            vals = self._lift(q, rel)
+            return self.plans.run_sparse(
+                self.catalog, rel, vals, [], (), tuple(rel.attrs)
+            )
         rows = self._lift(q, rel)
         idx, total = rel.flat_codes(rel.attrs)
         field = self.ring.segment_reduce(rows, jnp.asarray(idx), total)
@@ -396,30 +536,22 @@ class CJTEngine:
         field = jax.tree_util.tree_map(lambda l: l.reshape(shape + l.shape[1:]), field)
         return Factor(tuple(rel.attrs), field, self.ring)
 
-    def _sparse_bag(self, q, rel: Relation, incoming, preds, out_attrs) -> Factor:
-        """Factorized sparse path: gather ⊗ rowwise, segment-⊕ to out_attrs."""
+    def _sparse_bag(self, q, rel: Relation, incoming, preds, out_attrs, stats=None) -> Factor:
+        """Factorized sparse path: gather ⊗ rowwise, segment-⊕ to out_attrs.
+
+        With plans enabled this is one compiled executable re-run with
+        device-cached codes; the body below is the un-jitted reference path.
+        """
         ring = self.ring
         vals = self._lift(q, rel)  # leaves: (N, *trailing)
+        if self.plans is not None:
+            return self.plans.run_sparse(
+                self.catalog, rel, vals, incoming, preds, tuple(out_attrs), stats
+            )
         n = rel.num_rows
         carried: list[str] = []
         carried_dims: list[int] = []
-
-        def expand_field(field, have: list[str], want: list[str], trailing):
-            """Insert size-1 axes so leaves become (N, *want_dims, *trailing)."""
-            leaves, treedef = jax.tree_util.tree_flatten(field)
-            out = []
-            for leaf, t in zip(leaves, trailing):
-                cur = list(leaf.shape)
-                new_shape = [cur[0]]
-                hi = 1
-                for a in want:
-                    if a in have:
-                        new_shape.append(cur[hi]); hi += 1
-                    else:
-                        new_shape.append(1)
-                new_shape += cur[hi:] if t else cur[hi:]
-                out.append(leaf.reshape(new_shape))
-            return jax.tree_util.tree_unflatten(treedef, out)
+        expand_field = expand_rows_field
 
         for m in incoming:
             shared = [a for a in m.attrs if a in rel.attrs]
@@ -506,12 +638,23 @@ class CJTEngine:
         return best
 
     # -- public API ---------------------------------------------------------------
-    def execute(self, q: Query, root: str | None = None) -> tuple[Factor, ExecStats]:
+    def execute(
+        self, q: Query, root: str | None = None, sync: bool = True
+    ) -> tuple[Factor, ExecStats]:
+        """Execute ``q``: message passing to ``root``, absorption, γ-projection.
+
+        Messages are dispatched asynchronously (no host sync between edges —
+        plan inputs are device-resident); ``sync=True`` blocks once on the
+        absorbed result so callers observe completed work.
+        """
         stats = ExecStats()
         placement = self.place_predicates(q)
         root = root or self.choose_root(q, placement)
         f = self.absorb(q, root, placement, stats)
-        return f.project_to(q.group_by), stats
+        out = f.project_to(q.group_by)
+        if sync:
+            jax.block_until_ready(out.field)
+        return out, stats
 
     def calibrate(self, q: Query, root: str | None = None, pin: bool = False) -> ExecStats:
         stats = ExecStats()

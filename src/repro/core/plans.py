@@ -1,0 +1,422 @@
+"""Compiled message plans: structural jit + Pallas fast paths for bag contraction.
+
+Every CJT message is one *bag contraction*: ⊗ the bag's lifted relation with
+the incoming messages, apply σ, ⊕-marginalize to the separator ∪ carried γ.
+The legacy engine executed that op-by-op — un-jitted JAX dispatches plus
+host-side numpy index building (``np.ravel_multi_index``, row-mask gathers)
+on *every* call.  This module compiles each contraction once and re-executes
+it at hardware speed:
+
+- **Structural plan keys.**  Plans are keyed by the contraction's *structure*
+  (relation attr order/domains/row count, incoming-factor shapes, ring,
+  out_attrs, predicate arity) — NOT by Proposition-2 signatures.  A new
+  relation version, a different predicate mask, or a delta-maintenance pass
+  changes the Prop-2 signature but not the structure, so it re-executes the
+  already-compiled plan (trace once, run forever).
+- **Device-resident inputs.**  Flat row codes live in ``Catalog.dev_flat_codes``
+  (keyed ``(relation, version, attr-tuple)``); per-row lifts and densified
+  base factors are cached here.  The message hot path does no host work
+  beyond dict lookups, so upward/downward passes dispatch asynchronously and
+  the engine only blocks at absorption.
+- **Pallas routing.**  Inside the traced plan, the ⊕-segment reduction of
+  f32 scalar rings (SUM/COUNT via ``kernel_segment_op="sum"``, tropical
+  MIN/MAX via ``"min"``/``"max"``) lowers to the ``segment_aggregate`` Pallas
+  kernel, and the 2-factor dense contraction of arithmetic rings lowers to
+  the ``semiring_contract`` Pallas kernel (interpret mode off-TPU).  Compound
+  rings (MOMENTS, covariance, BOOL, int64 COUNT) keep the lax fallback.
+  Off-TPU the one-hot-matmul kernels do O(N·G) work, so they are cost-gated
+  (``REPRO_PLAN_KERNEL_COST``): small bags exercise the kernels, huge fact
+  bags stay on the O(N) lax path until a real TPU is attached.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.segment_aggregate import ops as seg_ops
+from repro.kernels.semiring_contract import ops as sc_ops
+from repro.relational.relation import LRU, Predicate
+
+from . import semiring as sr
+from .factor import Factor, contract
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _kernel_cost_max() -> int:
+    """Max one-hot-matmul work (N·G·V or G·B·A) routed to Pallas off-TPU."""
+    return int(os.environ.get("REPRO_PLAN_KERNEL_COST", str(1 << 19)))
+
+
+def expand_rows_field(field: sr.Field, have: Sequence[str], want: Sequence[str],
+                      trailing: Sequence[int]) -> sr.Field:
+    """Insert size-1 axes so leaves go (N, *have_dims, *t) → (N, *want_dims, *t).
+
+    ``have`` must be a subsequence of ``want``; trailing statistic dims ride
+    along unchanged.  Shared by the compiled plans and the legacy sparse path.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(field)
+    out = []
+    for leaf, t in zip(leaves, trailing):
+        cur = list(leaf.shape)
+        new_shape = [cur[0]]
+        hi = 1
+        for a in want:
+            if a in have:
+                new_shape.append(cur[hi])
+                hi += 1
+            else:
+                new_shape.append(1)
+        new_shape += cur[hi:]
+        out.append(leaf.reshape(new_shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _field_struct(field: sr.Field) -> tuple:
+    return tuple((tuple(l.shape), str(l.dtype)) for l in jax.tree_util.tree_leaves(field))
+
+
+@dataclasses.dataclass
+class PlanStats:
+    """Cumulative plan-cache counters (exposed via ``Treant.cache_stats``)."""
+
+    plans_built: int = 0     # structural misses → new trace + compile
+    plan_hits: int = 0       # executions served by an existing compiled plan
+    kernel_execs: int = 0    # executions that ran a Pallas kernel path
+    fallback_execs: int = 0  # executions on the lax/einsum fallback path
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Plan:
+    fn: Callable
+    uses_kernel: bool
+
+
+# ---------------------------------------------------------------------------
+# sparse-bag plan: gather ⊗ rowwise → σ row mask → segment-⊕ → reshape
+# ---------------------------------------------------------------------------
+
+def _build_sparse_plan(
+    ring: sr.Semiring,
+    rel_attrs: tuple[str, ...],
+    doms: dict[str, int],
+    in_attrs_list: tuple[tuple[str, ...], ...],
+    pred_attrs: tuple[str, ...],
+    out_attrs: tuple[str, ...],
+    n: int,
+) -> _Plan:
+    rel_set = set(rel_attrs)
+    local_out = tuple(a for a in out_attrs if a in rel_set)
+    total = int(np.prod([doms[a] for a in local_out])) if local_out else 1
+
+    # static replay of the carried-γ evolution across incoming messages
+    steps: list[tuple[tuple, tuple, tuple, tuple, tuple]] = []
+    carried: tuple[str, ...] = ()
+    for m_attrs in in_attrs_list:
+        shared = tuple(a for a in m_attrs if a in rel_set)
+        extra = tuple(a for a in m_attrs if a not in rel_set)
+        want = carried + tuple(a for a in extra if a not in carried)
+        steps.append((m_attrs, shared, extra, carried, want))
+        carried = want
+    carried_dims = tuple(doms[a] for a in carried)
+    carried_out = [a for a in out_attrs if a not in rel_set]
+    assert set(carried_out) <= set(carried), (
+        f"carried attrs {carried_out} not available (have {list(carried)})"
+    )
+
+    op = ring.kernel_segment_op
+    vcols = int(np.prod(carried_dims)) if carried_dims else 1
+    cost = n * max(total, 1) * vcols
+    use_kernel = (
+        op is not None
+        and ring.dtype == jnp.float32
+        and all(t == 0 for t in ring.trailing)
+        and n > 0
+        and (_on_tpu() or cost <= _kernel_cost_max())
+    )
+    interpret = not _on_tpu()
+    out_shape = tuple(doms[a] for a in local_out)
+
+    def fn(vals, in_fields, in_idx, pred_masks, pred_codes, seg_idx):
+        for (m_attrs, shared, extra, have, want), field, idx in zip(
+            steps, in_fields, in_idx
+        ):
+            mp = Factor(m_attrs, field, ring).project_to(shared + extra)
+            dims = [doms[a] for a in shared]
+
+            def gather(leaf):
+                lead = leaf.reshape(
+                    (int(np.prod(dims)) if shared else 1,) + leaf.shape[len(shared):]
+                )
+                if shared:
+                    return jnp.take(lead, idx, axis=0)
+                return jnp.broadcast_to(lead, (n,) + lead.shape[1:])
+
+            leaves, treedef = jax.tree_util.tree_flatten(mp.field)
+            g = jax.tree_util.tree_unflatten(treedef, [gather(l) for l in leaves])
+            vals = ring.mul(
+                expand_rows_field(vals, have, want, ring.trailing),
+                expand_rows_field(g, extra, want, ring.trailing),
+            )
+        if pred_attrs:
+            # σ as a rowwise ⊗ with 0̄/1̄: gather each domain mask at the row
+            # codes on-device (the mask *content* is a traced arg, so new
+            # selections re-execute the same compiled plan)
+            rowm = pred_masks[0][pred_codes[0]]
+            for mask, codes in zip(pred_masks[1:], pred_codes[1:]):
+                rowm = rowm & mask[codes]
+            zeros = ring.zeros((n,) + carried_dims)
+            leaves, treedef = jax.tree_util.tree_flatten(vals)
+            zleaves = jax.tree_util.tree_leaves(zeros)
+            out = []
+            for leaf, z in zip(leaves, zleaves):
+                m = rowm.reshape((n,) + (1,) * (leaf.ndim - 1))
+                out.append(jnp.where(m, leaf, z))
+            vals = jax.tree_util.tree_unflatten(treedef, out)
+        if use_kernel:
+            leaves, treedef = jax.tree_util.tree_flatten(vals)
+            red = []
+            for leaf in leaves:
+                agg = seg_ops.aggregate_op(
+                    seg_idx, leaf.reshape((n, -1)), total, op=op, interpret=interpret
+                )
+                red.append(agg.reshape((total,) + leaf.shape[1:]))
+            field = jax.tree_util.tree_unflatten(treedef, red)
+        else:
+            field = ring.segment_reduce(vals, seg_idx, total)
+        field = jax.tree_util.tree_map(
+            lambda l: l.reshape(out_shape + l.shape[1:]), field
+        )
+        return Factor(local_out + carried, field, ring).project_to(out_attrs)
+
+    return _Plan(fn=jax.jit(fn), uses_kernel=use_kernel)
+
+
+# ---------------------------------------------------------------------------
+# dense-bag plan: σ selects → contract (Pallas matmul / einsum / generic)
+# ---------------------------------------------------------------------------
+
+def _matmul_split(structs, out: tuple[str, ...]):
+    """Decompose a 2-factor contraction as (free1, contracted) × (contracted,
+    free2) if no shared attr survives to the output (no batch dims)."""
+    (a1, d1), (a2, d2) = structs
+    doms = {**dict(zip(a1, d1)), **dict(zip(a2, d2))}
+    shared = tuple(a for a in a1 if a in set(a2))
+    out_set = set(out)
+    if not shared or (out_set & set(shared)):
+        return None
+    free1 = tuple(a for a in a1 if a in out_set)
+    free2 = tuple(a for a in a2 if a in out_set)
+    cost = int(
+        np.prod([doms[a] for a in free1] or [1])
+        * np.prod([doms[a] for a in shared])
+        * np.prod([doms[a] for a in free2] or [1])
+    )
+    return shared, free1, free2, doms, cost
+
+
+def _build_dense_plan(
+    ring: sr.Semiring,
+    structs: tuple[tuple[tuple[str, ...], tuple[int, ...]], ...],
+    pred_spec: tuple[tuple[str, int], ...],
+    out_attrs: tuple[str, ...],
+) -> _Plan:
+    avail = {a for attrs, _ in structs for a in attrs}
+    out = tuple(a for a in out_attrs if a in avail)
+    split = None
+    if (
+        ring.is_arithmetic
+        and len(ring.trailing) == 1
+        and ring.dtype == jnp.float32
+        and len(structs) == 2
+    ):
+        cand = _matmul_split(structs, out)
+        if cand is not None and (_on_tpu() or cand[4] <= _kernel_cost_max()):
+            split = cand
+    interpret = not _on_tpu()
+
+    def fn(fields, pred_masks):
+        factors = [Factor(attrs, f, ring) for (attrs, _), f in zip(structs, fields)]
+        for (attr, fidx), mask in zip(pred_spec, pred_masks):
+            factors[fidx] = factors[fidx].select(attr, mask)
+        if split is not None:
+            shared, free1, free2, doms, _ = split
+            g1 = factors[0].project_to(free1 + shared)
+            g2 = factors[1].project_to(shared + free2)
+            f1sz = int(np.prod([doms[a] for a in free1])) if free1 else 1
+            f2sz = int(np.prod([doms[a] for a in free2])) if free2 else 1
+            csz = int(np.prod([doms[a] for a in shared]))
+            o = sc_ops.contract_op(
+                g1.field.reshape((f1sz, csz)),
+                g2.field.reshape((csz, f2sz)),
+                None,
+                interpret=interpret,
+            )
+            field = o.reshape(
+                tuple(doms[a] for a in free1) + tuple(doms[a] for a in free2)
+            )
+            return Factor(free1 + free2, field, ring).project_to(out)
+        return contract(factors, out, ring)
+
+    return _Plan(fn=jax.jit(fn), uses_kernel=split is not None)
+
+
+# ---------------------------------------------------------------------------
+# the cache
+# ---------------------------------------------------------------------------
+
+class PlanCache:
+    """Compiled-executable cache for bag contractions (one per engine/ring).
+
+    Holds four LRU-bounded device-resident caches: compiled plans, per-row
+    lifts, densified base factors, and predicate domain masks.  All keys are
+    content-addressed by (relation, version, …) or predicate digest, so no
+    invalidation is ever needed — updates allocate new slots and old versions
+    age out.
+    """
+
+    def __init__(
+        self,
+        ring: sr.Semiring,
+        plan_capacity: int = 256,
+        lift_capacity: int = 128,
+        factor_capacity: int = 128,
+        mask_capacity: int = 512,
+    ):
+        self.ring = ring
+        self._plans = LRU(plan_capacity)
+        self._lifts = LRU(lift_capacity)
+        self._factors = LRU(factor_capacity)
+        self._masks = LRU(mask_capacity)
+        self.stats = PlanStats()
+
+    # -- device-resident input caches ---------------------------------------
+    def mask_dev(self, pred: Predicate) -> jax.Array:
+        m = self._masks.get(pred.digest)
+        if m is None:
+            m = jnp.asarray(pred.mask)
+            self._masks.put(pred.digest, m)
+        return m
+
+    def lift_cached(self, key: tuple, compute: Callable[[], sr.Field]) -> sr.Field:
+        v = self._lifts.get(key)
+        if v is None:
+            v = compute()
+            self._lifts.put(key, v)
+        return v
+
+    def factor_cached(self, key: tuple, compute: Callable[[], Factor]) -> Factor:
+        v = self._factors.get(key)
+        if v is None:
+            v = compute()
+            self._factors.put(key, v)
+        return v
+
+    # -- plan execution ------------------------------------------------------
+    def _account(self, entry: _Plan, traced: bool, stats) -> None:
+        if traced:
+            self.stats.plans_built += 1
+        else:
+            self.stats.plan_hits += 1
+        if entry.uses_kernel:
+            self.stats.kernel_execs += 1
+        else:
+            self.stats.fallback_execs += 1
+        if stats is not None:
+            stats.plan_traces += int(traced)
+            stats.plan_hits += int(not traced)
+            stats.kernel_execs += int(entry.uses_kernel)
+
+    def run_sparse(
+        self,
+        catalog,
+        rel,
+        vals: sr.Field,
+        incoming: Sequence[Factor],
+        preds: Sequence[Predicate],
+        out_attrs: tuple[str, ...],
+        stats=None,
+    ) -> Factor:
+        key = (
+            "sparse",
+            self.ring.name,
+            rel.attrs,
+            tuple(rel.domains[a] for a in rel.attrs),
+            rel.num_rows,
+            tuple((m.attrs, m.domain_shape) for m in incoming),
+            tuple(p.attr for p in preds),
+            tuple(out_attrs),
+            _field_struct(vals),
+        )
+        entry = self._plans.get(key)
+        traced = entry is None
+        if traced:
+            doms = dict(rel.domains)
+            for m in incoming:
+                doms.update(m.domains)
+            entry = _build_sparse_plan(
+                self.ring, rel.attrs, doms, tuple(m.attrs for m in incoming),
+                tuple(p.attr for p in preds), tuple(out_attrs), rel.num_rows,
+            )
+            self._plans.put(key, entry)
+        rel_set = set(rel.attrs)
+        in_fields, in_idx = [], []
+        for m in incoming:
+            shared = tuple(a for a in m.attrs if a in rel_set)
+            in_fields.append(m.field)
+            in_idx.append(catalog.dev_flat_codes(rel, shared)[0] if shared else None)
+        pred_masks = tuple(self.mask_dev(p) for p in preds)
+        pred_codes = tuple(catalog.dev_flat_codes(rel, (p.attr,))[0] for p in preds)
+        local_out = tuple(a for a in out_attrs if a in rel_set)
+        seg_idx, _ = catalog.dev_flat_codes(rel, local_out)
+        out = entry.fn(
+            vals, tuple(in_fields), tuple(in_idx), pred_masks, pred_codes, seg_idx
+        )
+        self._account(entry, traced, stats)
+        return out
+
+    def run_dense(
+        self,
+        factors: Sequence[Factor],
+        preds: Sequence[Predicate],
+        out_attrs: tuple[str, ...],
+        stats=None,
+    ) -> Factor:
+        structs = tuple((f.attrs, f.domain_shape) for f in factors)
+        avail = {a for f in factors for a in f.attrs}
+        pred_spec = []
+        for p in preds:
+            if p.attr not in avail:  # pragma: no cover — placement guarantees
+                raise KeyError(f"σ({p.attr}) not available in bag")
+            pred_spec.append(
+                (p.attr, next(i for i, f in enumerate(factors) if p.attr in f.attrs))
+            )
+        pred_spec = tuple(pred_spec)
+        key = ("dense", self.ring.name, structs, pred_spec, tuple(out_attrs))
+        entry = self._plans.get(key)
+        traced = entry is None
+        if traced:
+            entry = _build_dense_plan(self.ring, structs, pred_spec, tuple(out_attrs))
+            self._plans.put(key, entry)
+        out = entry.fn(
+            tuple(f.field for f in factors), tuple(self.mask_dev(p) for p in preds)
+        )
+        self._account(entry, traced, stats)
+        return out
+
+    def __len__(self):
+        return len(self._plans)
+
+    def reset_stats(self):
+        self.stats = PlanStats()

@@ -21,6 +21,7 @@ derived from them.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 from typing import Mapping, Sequence
 
@@ -103,8 +104,10 @@ class Query:
     def predicates_on(self, attr: str) -> tuple[Predicate, ...]:
         return tuple(p for p in self.predicates if p.attr == attr)
 
-    @property
+    @functools.cached_property
     def digest(self) -> str:
+        # cached: signature derivation hashes this on every edge of every
+        # message-passing step (the instance is frozen, so it never changes)
         h = hashlib.sha1()
         h.update(repr((
             self.ring_name, self.measure, self.group_by,

@@ -65,6 +65,10 @@ class Semiring:
     # ⊕-segment-reduction over the leading (row) axis; None → segment_sum
     # per leaf (valid whenever ⊕ is +).
     _segment: Callable[[Field, jax.Array, int], Field] | None = None
+    # ⊕ as a segment_aggregate Pallas-kernel op name ("sum"/"min"/"max"),
+    # or None when the ring must take the lax fallback path (compound rings,
+    # non-f32 dtypes).  Consumed by core.plans when compiling message plans.
+    kernel_segment_op: str | None = None
 
     # -- public API ---------------------------------------------------------
     def mul(self, a: Field, b: Field) -> Field:
@@ -144,6 +148,7 @@ def _arith(name: str, dtype) -> Semiring:
         trailing=(0,),
         is_arithmetic=True,
         has_add_inverse=True,
+        kernel_segment_op="sum" if dtype == jnp.float32 else None,
     )
 
 
@@ -170,6 +175,7 @@ def _tropical(name: str, reducer, zero_val) -> Semiring:
         trailing=(0,),
         is_arithmetic=False,
         _segment=lambda v, ids, n: seg(v, ids, n),
+        kernel_segment_op="min" if reducer is jnp.minimum else "max",
     )
 
 

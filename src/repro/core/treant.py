@@ -66,13 +66,14 @@ class Treant:
         lifts: Mapping[str, Callable] | None = None,
         max_cache_bytes: int | None = None,
         dense_rows_threshold: int = 0,
+        use_plans: bool = True,
     ):
         self.catalog = catalog
         self.jt = jt or jt_from_catalog(catalog)
         self.store = MessageStore(max_bytes=max_cache_bytes)
         self.engine = CJTEngine(
             self.jt, catalog, ring, lifts=lifts, store=self.store,
-            dense_rows_threshold=dense_rows_threshold,
+            dense_rows_threshold=dense_rows_threshold, use_plans=use_plans,
         )
         # (session, viz) -> state; viz -> dashboard query
         self._dashboards: dict[str, Query] = {}
@@ -200,10 +201,16 @@ class Treant:
 
     # -- introspection ---------------------------------------------------------------
     def cache_stats(self) -> dict:
-        return {
+        out = {
             "messages": len(self.store),
             "bytes": self.store.nbytes,
             "hits": self.store.hits,
             "misses": self.store.misses,
             "widen_hits": self.store.widen_hits,
+            "widen_scans": self.store.widen_scans,
+            "widen_scan_steps": self.store.widen_scan_steps,
         }
+        if self.engine.plans is not None:
+            out["plans"] = self.engine.plans.stats.as_dict()
+            out["plans_cached"] = len(self.engine.plans)
+        return out

@@ -20,7 +20,9 @@ side of the machinery lives in ``core.calibration.CJTEngine.apply_delta``.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
+from collections import OrderedDict
 from typing import Callable, Mapping, Sequence
 
 import jax
@@ -35,6 +37,44 @@ def _digest_array(a: np.ndarray) -> str:
     return hashlib.sha1(np.ascontiguousarray(a).tobytes()).hexdigest()[:16]
 
 
+class LRU:
+    """Tiny bounded mapping with least-recently-used eviction.
+
+    Shared by the device-resident code caches below, the compiled plan cache
+    (core.plans) and CJTEngine's signature memo — anywhere an unbounded
+    per-call dict would leak across a long-lived Treant session.
+    """
+
+    def __init__(self, capacity: int):
+        assert capacity > 0
+        self.capacity = capacity
+        self._data: OrderedDict = OrderedDict()
+
+    def get(self, key, default=None):
+        try:
+            self._data.move_to_end(key)
+            return self._data[key]
+        except KeyError:
+            return default
+
+    def put(self, key, value):
+        self._data[key] = value
+        self._data.move_to_end(key)
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+
+    __setitem__ = put
+
+    def __contains__(self, key):
+        return key in self._data
+
+    def __len__(self):
+        return len(self._data)
+
+    def clear(self):
+        self._data.clear()
+
+
 @dataclasses.dataclass(frozen=True)
 class Predicate:
     """σ annotation: a boolean mask over one attribute's domain (paper §3.3).
@@ -46,8 +86,10 @@ class Predicate:
     mask: np.ndarray  # bool (domain,)
     label: str = ""
 
-    @property
+    @functools.cached_property
     def digest(self) -> str:
+        # cached: recomputing the mask sha1 per signature lookup dominates
+        # warm interaction latency (the mask is treated as immutable)
         return f"{self.attr}:{_digest_array(self.mask)}"
 
     def __hash__(self):
@@ -292,8 +334,28 @@ class Catalog:
     def __init__(self, relations: Sequence[Relation] = ()):
         self._store: dict[tuple[str, str], Relation] = {}
         self._latest: dict[str, str] = {}
+        # device-resident flat-code cache keyed by (relation, version, attrs):
+        # hoists the per-call np.ravel_multi_index + host→device transfer out
+        # of the message hot path (compiled plans gather through these).
+        self._dev_codes: LRU = LRU(capacity=512)
         for r in relations:
             self.put(r)
+
+    def dev_flat_codes(self, rel: Relation, attrs: Sequence[str]) -> tuple[jax.Array, int]:
+        """Device-resident ``rel.flat_codes(attrs)``, cached across calls.
+
+        Codes are immutable per (name, version), so the cache never needs
+        invalidation — new versions simply occupy new slots (LRU-bounded).
+        """
+        key = (rel.name, rel.version, tuple(attrs))
+        hit = self._dev_codes.get(key)
+        if hit is None:
+            idx, total = rel.flat_codes(attrs)
+            if total > np.iinfo(np.int32).max:  # pragma: no cover — huge domains
+                raise ValueError(f"flat domain {total} overflows int32 codes")
+            hit = (jnp.asarray(idx.astype(np.int32)), total)
+            self._dev_codes.put(key, hit)
+        return hit
 
     def put(self, rel: Relation, make_latest: bool = True) -> None:
         """Store a relation version; ``make_latest=False`` registers auxiliary

@@ -1,0 +1,296 @@
+"""Compiled message plans (core.plans): parity, metamorphic and cache tests.
+
+- Parity: the compiled/Pallas path must match the legacy un-jitted reference
+  path across non-tile-divisible N/G, min/max segment ops, trailing statistic
+  dims (MOMENTS) and predicate masks.
+- Metamorphic: with integer-valued measures (exactly representable in f32,
+  so every summation order yields the same bits) ``execute`` must be
+  **bit-identical** with the plan cache on vs off.
+- Caching: structural reuse across versions/masks, bounded signature memo,
+  Σ-widening probe stats.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401 — import order (core before relational)
+from repro.core import CJTEngine, MessageStore, Query, Treant, jt_from_catalog
+from repro.core import semiring as sr
+from repro.core.factor import Factor
+from repro.relational.relation import LRU, Catalog, Relation, mask_in
+
+N_FACT = 600  # > one 512-row kernel tile → exercises row padding
+
+
+def star_catalog(n_fact: int = N_FACT, seed: int = 0) -> Catalog:
+    """Tiny star: F(a,b)+m ← S(b,c), T(a,d).  Domains straddle the 8-lane
+    tile minimum (5 < 8 ≤ 13) so the kernel's group padding is exercised;
+    measures are small integers so f32 sums are exact (bitwise-stable)."""
+    rng = np.random.default_rng(seed)
+    doms = {"a": 13, "b": 7, "c": 10, "d": 5}
+
+    def codes(attrs, n):
+        return {x: rng.integers(0, doms[x], n).astype(np.int32) for x in attrs}
+
+    f = Relation("F", ("a", "b"), codes(("a", "b"), n_fact), doms,
+                 measures={"m": rng.integers(0, 16, n_fact).astype(np.float32)})
+    s = Relation("S", ("b", "c"), codes(("b", "c"), 77), doms,
+                 measures={"w": rng.integers(0, 8, 77).astype(np.float32)})
+    t = Relation("T", ("a", "d"), codes(("a", "d"), 29), doms)
+    return Catalog([f, s, t])
+
+
+def engines(cat, ring, **kw):
+    jt = jt_from_catalog(cat)
+    ref = CJTEngine(jt, cat, ring, use_plans=False, **kw)
+    pln = CJTEngine(jt, cat, ring, use_plans=True, **kw)
+    return ref, pln
+
+
+def assert_factors_equal(f1: Factor, f2: Factor, exact: bool):
+    assert f1.attrs == f2.attrs
+    l1 = jax.tree_util.tree_leaves(f1.field)
+    l2 = jax.tree_util.tree_leaves(f2.field)
+    assert len(l1) == len(l2)
+    for a, b in zip(l1, l2):
+        a, b = np.asarray(a), np.asarray(b)
+        if exact:
+            np.testing.assert_array_equal(a, b)
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# parity: compiled path ≡ reference path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("group_by", [(), ("c",), ("c", "d")])
+def test_sparse_parity_sum_nondivisible(group_by):
+    cat = star_catalog()
+    ref, pln = engines(cat, sr.SUM)
+    q = Query.make(cat, ring="sum", measure=("F", "m"), group_by=group_by)
+    f1, _ = ref.execute(q)
+    f2, s2 = pln.execute(q)
+    assert_factors_equal(f1, f2, exact=True)
+    assert s2.plan_traces > 0 and s2.kernel_execs > 0
+
+
+@pytest.mark.parametrize("ring,name", [(sr.TROPICAL_MIN, "tropical_min"),
+                                       (sr.TROPICAL_MAX, "tropical_max")])
+def test_sparse_parity_minmax_kernel_ops(ring, name):
+    cat = star_catalog(seed=3)
+    ref, pln = engines(cat, ring)
+    q = Query.make(cat, ring=name, measure=("F", "m"), group_by=("c",))
+    f1, _ = ref.execute(q)
+    f2, s2 = pln.execute(q)
+    # min/max are order-insensitive: exact equality regardless of tiling
+    assert_factors_equal(f1, f2, exact=True)
+    assert s2.kernel_execs > 0
+
+
+def test_sparse_parity_moments_trailing_dims():
+    """MOMENTS (compound (c,s,q) element) takes the lax fallback path but
+    must still flow through the compiled plan with its tuple field intact."""
+    cat = star_catalog(seed=5)
+    ref, pln = engines(cat, sr.MOMENTS)
+    q = Query.make(cat, ring="moments", measure=("F", "m"), group_by=("c",))
+    f1, _ = ref.execute(q)
+    f2, s2 = pln.execute(q)
+    assert len(jax.tree_util.tree_leaves(f2.field)) == 3
+    assert_factors_equal(f1, f2, exact=True)
+    assert s2.plan_traces > 0 and s2.kernel_execs == 0  # compound ring → fallback
+
+
+def test_sparse_parity_predicate_masks():
+    cat = star_catalog(seed=7)
+    ref, pln = engines(cat, sr.SUM)
+    base = Query.make(cat, ring="sum", measure=("F", "m"), group_by=("b",))
+    q = base.with_predicate(mask_in(10, [1, 3, 9], attr="c"))
+    q = q.with_predicate(mask_in(5, [0, 2], attr="d"))
+    f1, _ = ref.execute(q)
+    f2, _ = pln.execute(q)
+    assert_factors_equal(f1, f2, exact=True)
+
+
+def test_dense_two_factor_semiring_contract_route():
+    """With everything densified, bag contraction takes the dense plan; the
+    2-factor arithmetic case must route through the semiring_contract kernel
+    and agree with the legacy einsum path bit-for-bit on integer data."""
+    cat = star_catalog(seed=11)
+    ref, pln = engines(cat, sr.SUM, dense_rows_threshold=10**9)
+    q = Query.make(cat, ring="sum", measure=("F", "m"), group_by=("c",))
+    f1, _ = ref.execute(q)
+    f2, s2 = pln.execute(q)
+    assert_factors_equal(f1, f2, exact=True)
+    assert s2.kernel_execs > 0
+
+
+# ---------------------------------------------------------------------------
+# metamorphic: plan cache on ≡ off, bit-identical
+# ---------------------------------------------------------------------------
+
+def test_metamorphic_execute_bit_identical_plans_on_vs_off():
+    cat = star_catalog(seed=13)
+    queries = []
+    for ring_name, measure in [("count", None), ("sum", ("F", "m")),
+                               ("moments", ("F", "m"))]:
+        q0 = Query.make(cat, ring=ring_name, measure=measure, group_by=("c",))
+        queries += [
+            q0,
+            q0.with_group_by("c", "d"),
+            q0.with_predicate(mask_in(7, [0, 2, 5], attr="b")),
+            q0.with_removed("T"),
+        ]
+    ring_of = {"count": sr.COUNT, "sum": sr.SUM, "moments": sr.MOMENTS}
+    for q in queries:
+        ref, pln = engines(cat, ring_of[q.ring_name])
+        f1, _ = ref.execute(q)
+        f2, _ = pln.execute(q)
+        assert_factors_equal(f1, f2, exact=True)
+
+
+# ---------------------------------------------------------------------------
+# structural plan reuse
+# ---------------------------------------------------------------------------
+
+def test_version_bump_reuses_compiled_plan():
+    """A measure perturbation bumps every Prop-2 signature but keeps the
+    structure: the second execution must add zero new plan traces."""
+    cat = star_catalog(seed=17)
+    jt = jt_from_catalog(cat)
+    eng = CJTEngine(jt, cat, sr.SUM)
+    q = Query.make(cat, ring="sum", measure=("F", "m"), group_by=("c",))
+    eng.execute(q)
+    built = eng.plans.stats.plans_built
+    cat.put(cat.get("F").perturb_measure("m", 0.5, seed=1, version="v1"))
+    q1 = q.with_version("F", "v1")
+    _, s1 = eng.execute(q1)
+    assert eng.plans.stats.plans_built == built
+    assert s1.plan_traces == 0 and s1.plan_hits > 0
+
+
+def test_new_predicate_mask_reuses_compiled_plan():
+    cat = star_catalog(seed=19)
+    jt = jt_from_catalog(cat)
+    eng = CJTEngine(jt, cat, sr.SUM)
+    q0 = Query.make(cat, ring="sum", measure=("F", "m"), group_by=("c",))
+    eng.execute(q0.with_predicate(mask_in(5, [0, 1], attr="d")))
+    built = eng.plans.stats.plans_built
+    _, s = eng.execute(q0.with_predicate(mask_in(5, [2, 4], attr="d")))
+    assert eng.plans.stats.plans_built == built  # same structure, new σ mask
+    assert s.plan_traces == 0
+
+
+def test_delta_maintenance_runs_through_plans():
+    cat = star_catalog(seed=23)
+    tre = Treant(cat, ring=sr.SUM)
+    q = Query.make(cat, ring="sum", measure=("F", "m"), group_by=("c",))
+    tre.register_dashboard("viz", q)
+    rng = np.random.default_rng(29)
+    f = cat.get("F")
+    new_rel, delta = f.append_rows(
+        {a: rng.integers(0, f.domains[a], 8).astype(np.int32) for a in f.attrs},
+        {"m": rng.integers(0, 16, 8).astype(np.float32)},
+    )
+    res = tre.update(new_rel, delta)
+    assert res.queries_maintained == 1 and res.queries_fallback == 0
+    got = tre.read("u", "viz").factor
+    # oracle: rebuild from scratch on the merged relation, legacy path
+    cat2 = Catalog([new_rel, cat.get("S"), cat.get("T")])
+    ref = CJTEngine(jt_from_catalog(cat2), cat2, sr.SUM, use_plans=False)
+    want, _ = ref.execute(Query.make(cat2, ring="sum", measure=("F", "m"),
+                                     group_by=("c",)))
+    assert_factors_equal(want, got, exact=True)
+    assert tre.cache_stats()["plans"]["kernel_execs"] > 0
+
+
+# ---------------------------------------------------------------------------
+# bounded caches + Σ-widening probe index
+# ---------------------------------------------------------------------------
+
+def test_sig_memo_is_bounded():
+    cat = star_catalog(seed=31)
+    jt = jt_from_catalog(cat)
+    eng = CJTEngine(jt, cat, sr.COUNT)
+    eng._sig_memo = LRU(capacity=16)
+    q0 = Query.make(cat, ring="count")
+    for lo in range(8):  # 8 distinct interaction queries
+        eng.execute(q0.with_predicate(mask_in(10, [lo], attr="c")))
+    assert len(eng._sig_memo) <= 16
+
+
+def test_widen_probe_short_circuit_and_stats():
+    store = MessageStore()
+    wide = Factor(("a", "b"), jnp.arange(12, dtype=jnp.float32).reshape(4, 3), sr.SUM)
+    store.put("base", ("a", "b"), wide)
+    # γ outside the widen union: no scan at all
+    assert store.get("base", ("z",)) is None
+    assert store.widen_scans == 0 and store.widen_scan_steps == 0
+    # γ subset: scanned, narrowed, counted
+    got = store.get("base", ("a",))
+    assert got is not None and got.attrs == ("a",)
+    np.testing.assert_allclose(np.asarray(got.field),
+                               np.asarray(wide.field).sum(axis=1))
+    assert store.widen_hits == 1
+    assert store.widen_scans == 1 and store.widen_scan_steps >= 1
+    # narrowing stored the result: the repeat probe is an exact hit, no scan
+    scans = store.widen_scans
+    assert store.get("base", ("a",)) is not None
+    assert store.widen_scans == scans
+
+
+def test_widen_probe_prefers_smallest_superset():
+    store = MessageStore()
+    big = Factor(("a", "b", "c"),
+                 jnp.ones((4, 3, 2), jnp.float32), sr.SUM)
+    small = Factor(("a", "b"), jnp.full((4, 3), 2.0, jnp.float32), sr.SUM)
+    store.put("base", ("a", "b", "c"), big)
+    store.put("base", ("a", "b"), small)
+    got = store.get("base", ("a",))
+    # smallest superset (a,b) narrows first: sum over b of the 2.0 factor
+    np.testing.assert_allclose(np.asarray(got.field), np.full((4,), 6.0))
+
+
+def test_widen_index_dropped_on_eviction():
+    """Evicting a message must also drop its Σ-widening index entries —
+    otherwise a long update stream grows the probe index without bound."""
+    f = Factor(("a",), jnp.ones((64,), jnp.float32), sr.SUM)
+    store = MessageStore(max_bytes=2 * 64 * 4)  # room for 2 factors
+    for i in range(8):
+        store.put(f"base{i}", ("a",), f)
+    assert len(store) == 2
+    assert len(store._widen) == 2
+    assert len(store._sig_index) == 2
+    assert sum(len(v) for v in store._widen_bysize.values()) == 2
+    # evicted entries no longer advertise as contained
+    assert not store.contains("base0", ("a",))
+    assert store.contains("base7", ("a",))
+
+
+def test_store_snapshot_restore_keeps_widen_index():
+    store = MessageStore()
+    store.put("base", ("a", "b"),
+              Factor(("a", "b"), jnp.ones((2, 2), jnp.float32), sr.SUM))
+    snap = store.snapshot()
+    store.put("other", ("c",), Factor(("c",), jnp.ones((2,), jnp.float32), sr.SUM))
+    store.restore(snap)
+    assert store.get("base", ("a",)) is not None  # widen index rebuilt
+    assert store.get("other", ("c",)) is None
+
+
+def test_catalog_dev_codes_cached_and_lru_bounded():
+    cat = star_catalog(seed=37)
+    rel = cat.get("F")
+    idx1, total1 = cat.dev_flat_codes(rel, ("a", "b"))
+    idx2, total2 = cat.dev_flat_codes(rel, ("a", "b"))
+    assert idx1 is idx2 and total1 == total2 == 13 * 7
+    want = np.ravel_multi_index(
+        (rel.codes["a"].astype(np.int64), rel.codes["b"].astype(np.int64)), (13, 7)
+    )
+    np.testing.assert_array_equal(np.asarray(idx1), want)
+    cat._dev_codes = LRU(capacity=2)
+    for attrs in [("a",), ("b",), ("a", "b")]:
+        cat.dev_flat_codes(rel, attrs)
+    assert len(cat._dev_codes) <= 2
