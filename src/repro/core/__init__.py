@@ -9,7 +9,12 @@ from .hypertree import (  # noqa: F401
 from .query import Query  # noqa: F401
 from .calibration import CJTEngine, MessageStore, ExecStats, DeltaStats  # noqa: F401
 from .plans import PlanCache, PlanStats  # noqa: F401
-from .treant import Treant, InteractionResult, UpdateResult  # noqa: F401
+from .dashboard import (  # noqa: F401
+    ApplyResult, ClearFilter, DashboardSpec, Drill, InteractionResult,
+    Rollup, Session, SetFilter, SwapMeasure, ThinkTimeScheduler,
+    ToggleRelation, Undo, VizSpec,
+)
+from .treant import Treant, UpdateResult  # noqa: F401
 from . import steiner  # noqa: F401
 from .ml import FactorizedLinearRegression, FeatureSpec, FitResult  # noqa: F401
 from .cube import build_cube, naive_cube_cost, CubeReport  # noqa: F401

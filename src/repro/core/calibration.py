@@ -94,6 +94,12 @@ class MessageStore:
         self.max_bytes = max_bytes
         self._data: OrderedDict[str, Factor] = OrderedDict()
         self._pinned: set[str] = set()
+        # cross-viz sharing accounting: while ``tag`` is set (the dashboard
+        # layer sets it to the executing viz name), puts record the producer
+        # and hits on another producer's message count as cross-tag hits
+        self.tag: str | None = None
+        self._producer: dict[str, str] = {}
+        self.cross_tag_hits = 0
         # (edge, base_sig) -> {γ tuple -> full sig}: Σ-compensation index
         self._widen: dict[str, dict[tuple[str, ...], str]] = {}
         # derived probe index: per base_sig, entries sorted by |γ| (smallest
@@ -123,6 +129,7 @@ class MessageStore:
         if f is not None:
             self._data.move_to_end(sig)
             self.hits += 1
+            self._note_cross_hit(sig)
             return f
         # Σ compensation: narrow a cached wider-γ message by marginalization.
         # Indexed by |γ|: strict supersets are larger, so the scan starts past
@@ -138,11 +145,17 @@ class MessageStore:
                 if gset <= set(g2) and sig2 in self._data:
                     wide = self._data[sig2]
                     narrowed = wide.marginalize(set(g2) - gset)
+                    self._note_cross_hit(sig2)
                     self.put(base_sig, gamma, narrowed)
                     self.widen_hits += 1
                     return narrowed
         self.misses += 1
         return None
+
+    def _note_cross_hit(self, sig: str) -> None:
+        owner = self._producer.get(sig)
+        if self.tag is not None and owner is not None and owner != self.tag:
+            self.cross_tag_hits += 1
 
     def contains(self, base_sig: str, gamma: tuple[str, ...]) -> bool:
         if self.full_sig(base_sig, gamma) in self._data:
@@ -156,6 +169,8 @@ class MessageStore:
         sig = self.full_sig(base_sig, gamma)
         if sig not in self._data:
             self.nbytes += factor_nbytes(f)
+        if self.tag is not None:
+            self._producer.setdefault(sig, self.tag)
         self._data[sig] = f
         self._data.move_to_end(sig)
         per_base = self._widen.setdefault(base_sig, {})
@@ -249,6 +264,7 @@ class MessageStore:
                 continue
             f = self._data.pop(sig)
             self.nbytes -= factor_nbytes(f)
+            self._producer.pop(sig, None)
             self._drop_widen(sig)
 
     def __len__(self):
@@ -266,6 +282,7 @@ class MessageStore:
             {k: dict(v) for k, v in self._widen.items()},
             set(self._pinned), self.nbytes,
             (self.hits, self.misses, self.widen_hits),
+            (dict(self._producer), self.cross_tag_hits),
         )
 
     def restore(self, snap):
@@ -274,6 +291,7 @@ class MessageStore:
             set(snap[2]), snap[3], snap[4],
         )
         self.hits, self.misses, self.widen_hits = stats
+        self._producer, self.cross_tag_hits = dict(snap[5][0]), snap[5][1]
         self._widen_bysize = {
             b: sorted((len(g), g, s) for g, s in d.items())
             for b, d in self._widen.items()
@@ -307,6 +325,9 @@ class ExecStats:
     plan_traces: int = 0
     plan_hits: int = 0
     kernel_execs: int = 0
+    # realized Steiner tree (§3.4.2): bags touched by recomputed messages
+    # plus the absorption root — 1 when everything was served from cache
+    steiner_size: int = 0
 
 
 @dataclasses.dataclass
@@ -652,6 +673,10 @@ class CJTEngine:
         root = root or self.choose_root(q, placement)
         f = self.absorb(q, root, placement, stats)
         out = f.project_to(q.group_by)
+        # the cache misses ARE the Steiner tree (§3.4.2): report its realized
+        # size directly instead of planning it a second time (Treant used to)
+        touched = {b for edge in stats.recomputed_edges for b in edge}
+        stats.steiner_size = len(touched | {root})
         if sync:
             jax.block_until_ready(out.field)
         return out, stats

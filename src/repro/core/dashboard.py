@@ -1,0 +1,631 @@
+"""Declarative dashboard sessions: typed interaction events, crossfilter
+fan-out, and a shared think-time scheduler (paper §4, serving layer).
+
+The paper's Treant serves whole *dashboards* — many linked visualizations
+whose interaction queries differ incrementally from one another.  This module
+is the public surface for that workload:
+
+- :class:`DashboardSpec` declares named vizzes (:class:`VizSpec`: measure,
+  ring, group-by, local σ) over one catalog/join graph.
+- ``Treant.open_session(spec)`` returns a :class:`Session` handle holding the
+  shared *crossfilter* state (one active filter per attribute, Mosaic-style
+  linked selection) plus per-viz view state (drill path, measure, toggled
+  relations).
+- Typed events (:class:`SetFilter`, :class:`ClearFilter`, :class:`Drill`,
+  :class:`Rollup`, :class:`SwapMeasure`, :class:`ToggleRelation`,
+  :class:`Undo`) are applied via :meth:`Session.apply`, which derives the
+  per-viz :class:`~repro.core.query.Query` objects and fans execution out to
+  every viz whose query actually changed.  All vizzes share one engine /
+  :class:`~repro.core.calibration.MessageStore` / plan cache, so a message
+  materialized for one viz serves its siblings (Prop-2 signatures are
+  γ-independent below the carry, which is what makes crossfilter fan-out
+  cheap); the fan-out dispatches every viz asynchronously and blocks once.
+- :class:`ThinkTimeScheduler` replaces the old single `_calibrator` slot: a
+  priority queue of pending calibrations across all (session, viz) pairs.
+  An interaction preempts *only* the pending calibration of the viz(zes) it
+  changed — background progress on every other viz survives (the old API
+  silently discarded it).  ``Session.idle(budget_messages=...,
+  budget_seconds=...)`` drains the queue most-recently-interacted first;
+  preempting a budget keeps the iterator position *and* every message
+  already materialized (§4.2.1).
+- ``Session.sql(viz, text)`` routes the restricted SQL front-end
+  (:mod:`repro.relational.sql`) into the same layer.
+
+Query derivation contract (the event layer's correctness spine, tested by
+digest equality against hand-built chains): for each viz,
+
+    base → with_measure(swap) → with_group_by(spec γ + drills)
+         → with_predicate(filter) per crossfilter attr (source viz excluded)
+         → relation toggles
+
+``Query.with_predicate`` replaces by attribute and keeps the σ tuple sorted
+by digest, so the chain order cannot change the digest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import TYPE_CHECKING, Iterator, Mapping
+
+import jax
+
+from repro.relational.relation import Predicate, mask_in, mask_range
+from .calibration import CJTEngine, ExecStats
+from .query import Query
+
+if TYPE_CHECKING:  # pragma: no cover — import cycle guard (treant imports us)
+    from .treant import Treant
+
+
+# ---------------------------------------------------------------------------
+# Declarative spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VizSpec:
+    """One visualization: an SPJA aggregate view over the shared join graph.
+
+    ``crossfilter=False`` opts the viz out of linked selection (it keeps its
+    local σ only and is never re-rendered by SetFilter/ClearFilter events).
+    """
+
+    name: str
+    measure: tuple[str, str] | None = None     # (relation, column)
+    ring: str = "count"
+    group_by: tuple[str, ...] = ()
+    predicates: tuple[Predicate, ...] = ()     # local σ, always applied
+    removed: tuple[str, ...] = ()              # R̄: relations excluded up front
+    crossfilter: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class DashboardSpec:
+    """A named set of linked vizzes over one catalog."""
+
+    vizzes: tuple[VizSpec, ...]
+
+    def __post_init__(self):
+        names = [v.name for v in self.vizzes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate viz names in spec: {names}")
+
+    def viz(self, name: str) -> VizSpec:
+        for v in self.vizzes:
+            if v.name == name:
+                return v
+        raise KeyError(f"no viz {name!r} in spec")
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(v.name for v in self.vizzes)
+
+
+# ---------------------------------------------------------------------------
+# Typed interaction events
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SetFilter:
+    """Set the session-wide crossfilter on ``attr``.
+
+    Either ``values`` (IN-list) or ``lo``/``hi`` (half-open range, like
+    ``mask_range``).  ``source`` names the viz that originated the brush:
+    per crossfilter convention it keeps showing its own unfiltered dimension,
+    so the filter is applied to every *other* crossfilter viz.
+    """
+
+    attr: str
+    values: tuple[int, ...] = ()
+    lo: int | None = None
+    hi: int | None = None
+    source: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ClearFilter:
+    attr: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Drill:
+    """Add ``attr`` to one viz's group-by (drill-down)."""
+
+    viz: str
+    attr: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Rollup:
+    """Remove ``attr`` (default: the most recent γ attr) from one viz."""
+
+    viz: str
+    attr: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapMeasure:
+    viz: str
+    relation: str
+    column: str
+    ring: str = "sum"
+
+
+@dataclasses.dataclass(frozen=True)
+class ToggleRelation:
+    """Flip a relation in/out of the join (R̄); all vizzes unless ``viz``."""
+
+    relation: str
+    viz: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Undo:
+    """Revert the last ``Session.apply`` event (declarative state only)."""
+
+
+Event = (SetFilter, ClearFilter, Drill, Rollup, SwapMeasure, ToggleRelation, Undo)
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class InteractionResult:
+    """One viz's rendered aggregate plus execution accounting.
+
+    ``steiner_size`` is realized from the engine's own ExecStats (bags
+    touched by recomputation ∪ root) rather than planned separately.
+    ``latency_s`` is dispatch time for this viz; inside an event fan-out the
+    device sync happens once for all vizzes (see ApplyResult.latency_s).
+    """
+
+    factor: object
+    stats: ExecStats
+    latency_s: float
+    steiner_size: int
+
+
+@dataclasses.dataclass
+class ApplyResult:
+    """Outcome of one ``Session.apply``: which vizzes re-rendered and how."""
+
+    event: object
+    affected: tuple[str, ...]
+    results: dict[str, InteractionResult]
+    queries: dict[str, Query]
+    latency_s: float
+
+
+# ---------------------------------------------------------------------------
+# Think-time scheduler (replaces Treant._calibrator)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _CalTask:
+    session: str
+    viz: str
+    digest: str
+    query: Query
+    engine: CJTEngine
+    priority: int
+    gen: Iterator | None = None
+    done: int = 0
+
+
+class ThinkTimeScheduler:
+    """Priority queue of pending calibrations across all (session, viz) pairs.
+
+    Most-recently-interacted runs first.  ``schedule`` replaces a pending
+    task only when the query for that exact (session, viz) changed — that is
+    the *only* preemption; every other pair keeps its iterator position and
+    its partially materialized messages.  Exhausting a ``run`` budget parks
+    the current task without losing position (§4.2.1 preemptibility).
+    """
+
+    def __init__(self):
+        self._tasks: dict[tuple[str, str], _CalTask] = {}
+        self._seq = 0
+        self.preemptions = 0          # unfinished tasks replaced by a new query
+        self.invalidations = 0        # tasks dropped by data updates / close
+        self.completed = 0            # tasks fully calibrated
+        self.messages = 0             # edges processed across all runs
+        self._session_preemptions: dict[str, int] = {}
+
+    def schedule(self, session: str, viz: str, query: Query, engine: CJTEngine) -> None:
+        key = (session, viz)
+        self._seq += 1
+        t = self._tasks.get(key)
+        if t is not None:
+            if t.digest == query.digest:
+                t.priority = self._seq  # refresh recency, keep progress
+                return
+            self.preemptions += 1
+            self._session_preemptions[session] = (
+                self._session_preemptions.get(session, 0) + 1
+            )
+        self._tasks[key] = _CalTask(
+            session, viz, query.digest, query, engine, priority=self._seq
+        )
+
+    def pending(self, session: str | None = None) -> int:
+        if session is None:
+            return len(self._tasks)
+        return sum(1 for t in self._tasks.values() if t.session == session)
+
+    def session_preemptions(self, session: str) -> int:
+        return self._session_preemptions.get(session, 0)
+
+    def drop(self, session: str, viz: str | None = None) -> int:
+        keys = [
+            k for k in self._tasks
+            if k[0] == session and (viz is None or k[1] == viz)
+        ]
+        for k in keys:
+            del self._tasks[k]
+        self.invalidations += len(keys)
+        if viz is None:  # whole session gone: a reopened name starts fresh
+            self._session_preemptions.pop(session, None)
+        return len(keys)
+
+    def clear(self) -> int:
+        n = len(self._tasks)
+        self._tasks.clear()
+        self.invalidations += n
+        return n
+
+    def run(
+        self,
+        budget_messages: int | None = None,
+        budget_seconds: float | None = None,
+        session: str | None = None,
+        viz: str | None = None,
+    ) -> int:
+        """Drain matching tasks by priority; returns edges processed."""
+        done = 0
+        t0 = time.perf_counter()
+        while True:
+            cands = [
+                t for t in self._tasks.values()
+                if (session is None or t.session == session)
+                and (viz is None or t.viz == viz)
+            ]
+            if not cands:
+                return done
+            task = max(cands, key=lambda t: t.priority)
+            if task.gen is None:
+                task.gen = task.engine.calibrate_iter(task.query)
+            store = task.engine.store
+            # attribute materializations for cross-viz sharing stats; the
+            # session qualifier keeps same-named vizzes of different
+            # sessions distinct
+            store.tag = f"{task.session}:{task.viz}"
+            exhausted = False
+            try:
+                for _ in task.gen:
+                    done += 1
+                    task.done += 1
+                    self.messages += 1
+                    if budget_messages is not None and done >= budget_messages:
+                        exhausted = True
+                        break
+                    if (
+                        budget_seconds is not None
+                        and time.perf_counter() - t0 >= budget_seconds
+                    ):
+                        exhausted = True
+                        break
+                else:
+                    self._tasks.pop((task.session, task.viz), None)
+                    self.completed += 1
+            finally:
+                store.tag = None
+            if exhausted:
+                return done
+
+    def stats(self) -> dict:
+        return {
+            "pending": len(self._tasks),
+            "preemptions": self.preemptions,
+            "invalidations": self.invalidations,
+            "completed": self.completed,
+            "messages": self.messages,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Session
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _VizView:
+    spec: VizSpec | None
+    base: Query
+    group_by: tuple[str, ...]
+    measure: tuple[str, str, str] | None = None   # (relation, column, ring)
+    toggled: frozenset[str] = frozenset()
+    crossfilter: bool = True
+
+
+class Session:
+    """One user's live dashboard over a shared Treant.
+
+    Holds the crossfilter state and per-viz view state; derives each viz's
+    Query on demand (see module docstring for the derivation contract) and
+    executes through the Treant's shared engine/store so sessions and
+    sibling vizzes reuse each other's materialized messages.
+    """
+
+    def __init__(self, treant: "Treant", session_id: str,
+                 spec: DashboardSpec | None = None, calibrate: bool = True):
+        self._treant = treant
+        self.id = session_id
+        self.spec = spec
+        self._views: dict[str, _VizView] = {}
+        self._current: dict[str, Query] = {}
+        # attr -> (Predicate, source viz or None)
+        self._filters: dict[str, tuple[Predicate, str | None]] = {}
+        self._undo: list[tuple] = []
+        self.undo_depth = 64
+        self.events_applied = 0
+        if spec is not None:
+            for v in spec.vizzes:
+                base = Query.make(
+                    treant.catalog, ring=v.ring, measure=v.measure,
+                    group_by=v.group_by, predicates=v.predicates,
+                    removed=v.removed,
+                )
+                self._views[v.name] = _VizView(
+                    spec=v, base=base, group_by=tuple(v.group_by),
+                    crossfilter=v.crossfilter,
+                )
+                self._current[v.name] = base
+                if calibrate:  # offline stage: pin the base CJT (§4.1.1)
+                    treant.engine_for(base.ring_name, base.measure).calibrate(base, pin=True)
+
+    # -- plumbing -------------------------------------------------------------
+    @property
+    def catalog(self):
+        return self._treant.catalog
+
+    @property
+    def store(self):
+        return self._treant.store
+
+    @property
+    def scheduler(self) -> ThinkTimeScheduler:
+        return self._treant.scheduler
+
+    def _view(self, viz: str) -> _VizView:
+        try:
+            return self._views[viz]
+        except KeyError:
+            raise KeyError(f"no viz {viz!r} in session {self.id!r}") from None
+
+    def add_viz(self, name: str, base: Query, crossfilter: bool = True,
+                spec: VizSpec | None = None) -> None:
+        """Attach a viz from an explicit base query (legacy bridge)."""
+        if name in self._views:
+            return
+        self._views[name] = _VizView(
+            spec=spec, base=base, group_by=tuple(base.group_by),
+            crossfilter=crossfilter,
+        )
+        self._current[name] = base
+
+    def query_of(self, viz: str) -> Query:
+        """The viz's latest executed query."""
+        self._view(viz)
+        return self._current[viz]
+
+    @property
+    def vizzes(self) -> tuple[str, ...]:
+        return tuple(sorted(self._views))
+
+    # -- query derivation ------------------------------------------------------
+    def derive(self, viz: str) -> Query:
+        v = self._view(viz)
+        q = v.base
+        if v.measure is not None:
+            rel, col, ring = v.measure
+            q = q.with_measure(rel, col, ring=ring)
+        q = q.with_group_by(*v.group_by)
+        if v.crossfilter:
+            # the brushing viz keeps its full dimension (source exclusion)
+            q = q.with_filters([
+                pred for _attr, (pred, source) in sorted(self._filters.items())
+                if source != viz
+            ])
+        for rel in sorted(v.toggled):
+            q = q.with_relation_toggled(rel)
+        return q
+
+    def _predicate_of(self, ev: SetFilter) -> Predicate:
+        doms = self.catalog.domains()
+        if ev.attr not in doms:
+            raise KeyError(f"filter attr {ev.attr!r} not in catalog")
+        if ev.values:
+            return mask_in(doms[ev.attr], list(ev.values), attr=ev.attr)
+        if ev.lo is None or ev.hi is None:
+            raise ValueError("SetFilter needs values or a [lo, hi) range")
+        return mask_range(doms[ev.attr], ev.lo, ev.hi, attr=ev.attr)
+
+    # -- event application (the tentpole API) ---------------------------------
+    def apply(self, event) -> ApplyResult:
+        """Apply one typed event: update state, derive queries, fan out.
+
+        Only vizzes whose derived query digest changed are re-executed; each
+        re-executed viz's pending background calibration is preempted and
+        re-scheduled for the new query (no other viz's progress is touched).
+        """
+        if not isinstance(event, Event):
+            raise TypeError(f"not a dashboard event: {event!r}")
+        snapshot = self._snapshot()
+        if isinstance(event, Undo):
+            if not self._undo:
+                return ApplyResult(event, (), {}, dict(self._current), 0.0)
+            self._restore(self._undo.pop())
+        else:
+            self._mutate(event)
+            self._undo.append(snapshot)
+            del self._undo[: -self.undo_depth]
+        self.events_applied += 1
+        return self._fan_out(event)
+
+    def _mutate(self, event) -> None:
+        if isinstance(event, SetFilter):
+            if event.source is not None:
+                self._view(event.source)
+            self._filters[event.attr] = (self._predicate_of(event), event.source)
+        elif isinstance(event, ClearFilter):
+            self._filters.pop(event.attr, None)
+        elif isinstance(event, Drill):
+            v = self._view(event.viz)
+            if event.attr not in self.catalog.domains():
+                raise KeyError(f"drill attr {event.attr!r} not in catalog")
+            v.group_by = tuple(dict.fromkeys(v.group_by + (event.attr,)))
+        elif isinstance(event, Rollup):
+            v = self._view(event.viz)
+            if event.attr is None:
+                v.group_by = v.group_by[:-1]
+            else:
+                v.group_by = tuple(a for a in v.group_by if a != event.attr)
+        elif isinstance(event, SwapMeasure):
+            v = self._view(event.viz)
+            v.measure = (event.relation, event.column, event.ring)
+        elif isinstance(event, ToggleRelation):
+            targets = [event.viz] if event.viz is not None else list(self._views)
+            for name in targets:
+                v = self._view(name)
+                v.toggled = v.toggled ^ {event.relation}
+
+    def _fan_out(self, event) -> ApplyResult:
+        derived = {name: self.derive(name) for name in sorted(self._views)}
+        affected = tuple(
+            name for name, q in derived.items()
+            if q.digest != self._current[name].digest
+        )
+        results: dict[str, InteractionResult] = {}
+        pending: list[tuple[str, object]] = []
+        t0 = time.perf_counter()
+        for name in affected:
+            q = derived[name]
+            engine = self._treant.engine_for(q.ring_name, q.measure)
+            self.store.tag = f"{self.id}:{name}"
+            td = time.perf_counter()
+            try:
+                # async dispatch: block once for the whole fan-out below
+                factor, stats = engine.execute(q, sync=False)
+            finally:
+                self.store.tag = None
+            results[name] = InteractionResult(
+                factor, stats, time.perf_counter() - td, stats.steiner_size
+            )
+            self._current[name] = q
+            pending.append((name, factor))
+            self.scheduler.schedule(self.id, name, q, engine)
+        if pending:
+            jax.block_until_ready([f.field for _, f in pending])
+        return ApplyResult(
+            event, affected, results, derived, time.perf_counter() - t0
+        )
+
+    # -- undo state ------------------------------------------------------------
+    def _snapshot(self):
+        # declarative state only: _current deliberately stays untouched on
+        # restore so the fan-out sees the re-derived queries as changed and
+        # actually re-renders the undone vizzes
+        return (
+            dict(self._filters),
+            {n: (v.group_by, v.measure, v.toggled) for n, v in self._views.items()},
+        )
+
+    def _restore(self, snap) -> None:
+        filters, views = snap
+        self._filters = dict(filters)
+        for n, (gb, meas, tog) in views.items():
+            if n in self._views:
+                v = self._views[n]
+                v.group_by, v.measure, v.toggled = gb, meas, tog
+
+    # -- imperative bridges ----------------------------------------------------
+    def interact_query(self, viz: str, query: Query) -> InteractionResult:
+        """Execute an explicit Query as this viz's current view.
+
+        Legacy/SQL escape hatch: bypasses the declarative state (Undo does
+        not cover it) but shares the store, plans and scheduler — the viz's
+        pending calibration is preempted iff the query changed.
+        """
+        self._view(viz)
+        engine = self._treant.engine_for(query.ring_name, query.measure)
+        self.store.tag = f"{self.id}:{viz}"
+        t0 = time.perf_counter()
+        try:
+            factor, stats = engine.execute(query)
+        finally:
+            self.store.tag = None
+        dt = time.perf_counter() - t0
+        self._current[viz] = query
+        self.scheduler.schedule(self.id, viz, query, engine)
+        return InteractionResult(factor, stats, dt, stats.steiner_size)
+
+    def sql(self, viz: str, text: str, strict_from: bool = False) -> InteractionResult:
+        """Parse restricted SQL and execute it as this viz's current view."""
+        from repro.relational import sql as _sql  # local: avoids import cycle
+
+        return self.interact_query(viz, _sql.parse(text, self.catalog, strict_from))
+
+    def read(self, viz: str) -> InteractionResult:
+        """Re-execute the viz's current query (pure cache hits when warm)."""
+        q = self.query_of(viz)
+        engine = self._treant.engine_for(q.ring_name, q.measure)
+        self.store.tag = f"{self.id}:{viz}"
+        t0 = time.perf_counter()
+        try:
+            factor, stats = engine.execute(q)
+        finally:
+            self.store.tag = None
+        return InteractionResult(
+            factor, stats, time.perf_counter() - t0, stats.steiner_size
+        )
+
+    # -- think time ------------------------------------------------------------
+    def idle(
+        self,
+        budget_messages: int | None = None,
+        budget_seconds: float | None = None,
+    ) -> int:
+        """Spend user think-time calibrating this session's pending vizzes.
+
+        Most-recently-interacted viz first; preemptible — exhausting the
+        budget keeps iterator positions and all materialized messages.
+        Returns the number of edges processed.
+        """
+        return self.scheduler.run(
+            budget_messages=budget_messages, budget_seconds=budget_seconds,
+            session=self.id,
+        )
+
+    # -- filters / introspection ----------------------------------------------
+    @property
+    def filters(self) -> Mapping[str, Predicate]:
+        return {a: p for a, (p, _) in self._filters.items()}
+
+    def stats(self) -> dict:
+        """Session introspection: per-session scheduler counters plus the
+        shared store/scheduler totals (``*_total`` — Treant-wide, since
+        sessions deliberately share one store and one scheduler)."""
+        return {
+            "vizzes": len(self._views),
+            "events": self.events_applied,
+            "pending_calibrations": self.scheduler.pending(self.id),
+            "preemptions": self.scheduler.session_preemptions(self.id),
+            "scheduler_messages_total": self.scheduler.messages,
+            "cross_viz_hits_total": self.store.cross_tag_hits,
+            "undo_depth": len(self._undo),
+        }
+
+    def close(self) -> None:
+        self.scheduler.drop(self.id)
+        self._treant._sessions.pop(self.id, None)

@@ -94,6 +94,17 @@ class Query:
     def with_removed(self, rel: str) -> "Query":
         return dataclasses.replace(self, removed=self.removed | {rel})
 
+    def with_relation_toggled(self, rel: str) -> "Query":
+        """Flip ``rel`` in/out of R̄ (the dashboard ToggleRelation event)."""
+        return dataclasses.replace(self, removed=self.removed ^ {rel})
+
+    def with_filters(self, preds: Sequence[Predicate]) -> "Query":
+        """Apply several σ at once (one surviving predicate per attr)."""
+        q = self
+        for p in preds:
+            q = q.with_predicate(p)
+        return q
+
     def with_measure(self, rel: str, column: str, ring: str = "sum") -> "Query":
         return dataclasses.replace(self, measure=(rel, column), ring_name=ring)
 

@@ -91,6 +91,21 @@ def plan(engine: CJTEngine, q_old: Query, q_new: Query) -> SteinerPlan:
     return SteinerPlan(frozenset(bd), frozenset(nodes), frozenset(edges), best)
 
 
+def realized_size(stats, root: str | None = None) -> int:
+    """Size of the Steiner tree an execution actually realized.
+
+    The engine's cache misses are exactly the tree's directed edges, so the
+    realized size is the bag set touched by ``stats.recomputed_edges`` (plus
+    the absorption root when known).  ``CJTEngine.execute`` reports the same
+    number in ``ExecStats.steiner_size``; this helper exists for tests that
+    cross-check the planned tree (``plan``) against the realized one.
+    """
+    touched = {b for edge in stats.recomputed_edges for b in edge}
+    if root is not None:
+        touched.add(root)
+    return max(len(touched), 1)
+
+
 def directed_edges_into(plan_: SteinerPlan) -> set[tuple[str, str]]:
     """All directed edges whose messages an execution rooted inside the tree
     may need to recompute (both orientations of tree edges)."""

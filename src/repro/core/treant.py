@@ -1,12 +1,20 @@
 """Treant middleware (paper §4): dashboards, sessions, think-time calibration.
 
-Treant sits between dashboards and the relational layer.  Offline it
-registers *dashboard queries* (one per visualization) and calibrates their
-CJTs (pinned in the message store).  Online it executes *interaction queries*
-against the most-recent CJT of the same (session, visualization), then — in
-the user's think-time — calibrates the latest interaction query in a
-preemptible background pass so the *next* interaction is cheap (§4.2.1,
-Example 14).
+Treant sits between dashboards and the relational layer.  The public surface
+is the declarative session layer in :mod:`repro.core.dashboard`:
+``open_session(DashboardSpec)`` returns a :class:`~repro.core.dashboard.Session`
+whose typed events (SetFilter, Drill, …) fan out over linked vizzes sharing
+one engine / :class:`~repro.core.calibration.MessageStore` / plan cache, and
+whose think-time calibration runs on the shared
+:class:`~repro.core.dashboard.ThinkTimeScheduler` — a priority queue over all
+(session, viz) pairs where an interaction preempts *only* the viz it changed.
+
+``register_dashboard`` / ``interact`` / ``think_time`` / ``read`` are kept as
+thin **legacy wrappers** over that layer: each legacy session name maps to a
+Session whose vizzes are seeded from the registered dashboard queries.  They
+behave as before except that background calibration progress on one viz now
+survives interactions on another (the old single ``_calibrator`` slot
+silently discarded it).
 
 Live data is handled by ``Treant.update``: given a new relation version and
 its signed :class:`~repro.relational.relation.Delta`, every tracked query's
@@ -14,30 +22,40 @@ cached CJT is delta-maintained in place (``CJTEngine.apply_delta`` — old
 message ⊕ delta, stored under the bumped signature) and every stored query is
 re-snapshotted to the new version, so the next interaction reads fresh data
 at cache-hit speed.  Rings that cannot absorb a delta (MIN/MAX deletes) skip
-maintenance; their recalibration lands in the next ``think_time`` call.
+maintenance; their recalibration is re-queued on the scheduler and lands in
+the next ``think_time`` / ``Session.idle`` call.
+
+Multi-ring dashboards: the primary engine serves its own ring (and
+measure-free COUNT queries when the primary ring is SUM — the all-ones lift
+degenerates identically);
+any other ring named by a viz gets a lazily created sibling engine sharing
+the same MessageStore.  Prop-2 signatures include the ring name, so the
+shared store never serves one ring's message to another.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Mapping
 
 from repro.relational.relation import Catalog, Delta, Relation
 from . import semiring as sr
 from .calibration import CJTEngine, DeltaStats, ExecStats, MessageStore
-from .factor import Factor
+from .dashboard import (
+    ApplyResult,
+    DashboardSpec,
+    InteractionResult,
+    Session,
+    ThinkTimeScheduler,
+    VizSpec,
+)
 from .hypertree import JTree, jt_from_catalog
 from .query import Query
-from . import steiner
 
-
-@dataclasses.dataclass
-class InteractionResult:
-    factor: Factor
-    stats: ExecStats
-    latency_s: float
-    steiner_size: int
+__all__ = [
+    "Treant", "InteractionResult", "UpdateResult", "ApplyResult",
+    "DashboardSpec", "VizSpec", "Session", "ThinkTimeScheduler",
+]
 
 
 @dataclasses.dataclass
@@ -47,12 +65,6 @@ class UpdateResult:
     queries_maintained: int   # distinct cached CJTs updated via delta calibration
     queries_fallback: int     # CJTs that must recalibrate (no ⊕-inverse, σ moved)
     stats: list[DeltaStats]
-
-
-@dataclasses.dataclass
-class _VizState:
-    dashboard_query: Query
-    current: Query            # latest executed query (dashboard or interaction)
 
 
 class Treant:
@@ -71,66 +83,121 @@ class Treant:
         self.catalog = catalog
         self.jt = jt or jt_from_catalog(catalog)
         self.store = MessageStore(max_bytes=max_cache_bytes)
+        self._lifts = dict(lifts or {})
+        self._dense_rows_threshold = dense_rows_threshold
+        self._use_plans = use_plans
         self.engine = CJTEngine(
-            self.jt, catalog, ring, lifts=lifts, store=self.store,
+            self.jt, catalog, ring, lifts=self._lifts, store=self.store,
             dense_rows_threshold=dense_rows_threshold, use_plans=use_plans,
         )
-        # (session, viz) -> state; viz -> dashboard query
+        # ring name -> engine; siblings share the store (per-ring plan caches)
+        self._engines: dict[str, CJTEngine] = {ring.name: self.engine}
+        self.scheduler = ThinkTimeScheduler()
         self._dashboards: dict[str, Query] = {}
-        self._sessions: dict[tuple[str, str], _VizState] = {}
-        self._calibrator = None  # (generator, query digest)
+        self._sessions: dict[str, Session] = {}
+        self._session_seq = 0  # monotonic: closed sessions never recycle ids
 
-    # -- offline stage (§4.1.1) ------------------------------------------------
+    # -- engines ---------------------------------------------------------------
+    def engine_for(self, ring_name: str, measure=None) -> CJTEngine:
+        """Engine executing ``ring_name`` queries (shared MessageStore).
+
+        A *measure-free* COUNT collapses onto a SUM primary (the SUM lift is
+        then all-ones, so values and signatures are both count-correct); a
+        COUNT query carrying a measure must NOT — the SUM lift would sum the
+        measure column — so it gets the real COUNT engine.
+        """
+        primary = self.engine.ring.name
+        if ring_name == primary:
+            return self.engine
+        if primary == "sum" and ring_name == "count" and measure is None:
+            return self.engine
+        eng = self._engines.get(ring_name)
+        if eng is None:
+            eng = CJTEngine(
+                self.jt, self.catalog, sr.get(ring_name), lifts=self._lifts,
+                store=self.store, dense_rows_threshold=self._dense_rows_threshold,
+                use_plans=self._use_plans,
+            )
+            self._engines[ring_name] = eng
+        return eng
+
+    # -- declarative sessions (the primary API) --------------------------------
+    def open_session(
+        self, spec: DashboardSpec, name: str | None = None, calibrate: bool = True
+    ) -> Session:
+        """Open a dashboard session: derive per-viz base queries from the
+        spec and (by default) calibrate each base CJT offline, pinned."""
+        if name is None:
+            while f"sess{self._session_seq}" in self._sessions:
+                self._session_seq += 1
+            name = f"sess{self._session_seq}"
+            self._session_seq += 1
+        sid = name
+        if sid in self._sessions:
+            raise ValueError(f"session {sid!r} already open")
+        sess = Session(self, sid, spec, calibrate=calibrate)
+        self._sessions[sid] = sess
+        return sess
+
+    def session(self, name: str) -> Session:
+        return self._sessions[name]
+
+    def _legacy_session(self, name: str) -> Session:
+        """Spec-less session backing the legacy wrapper API."""
+        sess = self._sessions.get(name)
+        if sess is None:
+            sess = Session(self, name, spec=None)
+            self._sessions[name] = sess
+        return sess
+
+    # -- offline stage (§4.1.1) — legacy wrapper -------------------------------
     def register_dashboard(self, viz: str, query: Query) -> ExecStats:
-        """Store the dashboard query and calibrate its CJT offline (pinned)."""
+        """[legacy] Store the dashboard query and calibrate its CJT (pinned).
+
+        New code should declare vizzes in a DashboardSpec and use
+        ``open_session`` instead.
+        """
         self._dashboards[viz] = query
-        return self.engine.calibrate(query, pin=True)
+        return self.engine_for(query.ring_name, query.measure).calibrate(query, pin=True)
 
-    # -- online stage (§4.1.2) ---------------------------------------------------
-    def _state(self, session: str, viz: str) -> _VizState:
-        key = (session, viz)
-        if key not in self._sessions:
-            q0 = self._dashboards[viz]
-            self._sessions[key] = _VizState(dashboard_query=q0, current=q0)
-        return self._sessions[key]
+    def _legacy_viz(self, session: str, viz: str) -> Session:
+        sess = self._legacy_session(session)
+        if viz not in sess._views:
+            sess.add_viz(viz, self._dashboards[viz])  # KeyError if unregistered
+        return sess
 
+    # -- online stage (§4.1.2) — legacy wrappers -------------------------------
     def interact(self, session: str, viz: str, query: Query) -> InteractionResult:
-        """Execute an interaction query using the latest CJT for this viz."""
-        st = self._state(session, viz)
-        pln = steiner.plan(self.engine, st.current, query)
-        t0 = time.perf_counter()
-        factor, stats = self.engine.execute(query)
-        dt = time.perf_counter() - t0
-        # the new query preempts any in-flight background calibration
-        self._calibrator = None
-        st.current = query
-        return InteractionResult(factor, stats, dt, pln.size)
+        """[legacy] Execute an interaction query using the latest CJT for
+        this viz.  Preempts only this viz's pending background calibration."""
+        return self._legacy_viz(session, viz).interact_query(viz, query)
 
     def read(self, session: str, viz: str) -> InteractionResult:
-        st = self._state(session, viz)
-        t0 = time.perf_counter()
-        factor, stats = self.engine.execute(st.current)
-        return InteractionResult(factor, stats, time.perf_counter() - t0, 0)
+        return self._legacy_viz(session, viz).read(viz)
 
-    # -- data updates (delta calibration) ------------------------------------------
+    # -- data updates (delta calibration) ---------------------------------------
     def update(self, new_rel: Relation, delta: Delta) -> UpdateResult:
         """Apply a base-data update online, maintaining every cached CJT.
 
         ``new_rel`` is the post-update relation version produced by
         ``Relation.append_rows`` / ``delete_rows`` alongside ``delta``.  The
-        catalog gains the new version; each distinct tracked query (dashboard
-        queries and per-session current queries) whose snapshot matches
-        ``delta.old_version`` is delta-maintained (old message ⊕ ΔY, stored
-        under the bumped Prop-2 signature — pinned messages stay pinned), then
-        re-snapshotted to the new version.  Where maintenance is impossible
-        (ring without ⊕-inverse for a delete, σ-placement migration) nothing
-        stale survives either: the bumped signatures simply miss, and the
-        full recalibration is scheduled into the next ``think_time`` pass.
+        catalog gains the new version; each distinct tracked query (registered
+        dashboard queries plus every open session's base and current queries)
+        whose snapshot matches ``delta.old_version`` is delta-maintained (old
+        message ⊕ ΔY, stored under the bumped Prop-2 signature — pinned
+        messages stay pinned), then re-snapshotted to the new version.  Where
+        maintenance is impossible (ring without ⊕-inverse for a delete,
+        σ-placement migration) nothing stale survives either: the bumped
+        signatures simply miss, and the full recalibration is re-queued on
+        the scheduler for the next think-time pass.
         """
         assert new_rel.name == delta.relation and new_rel.version == delta.new_version
         self.catalog.put(new_rel)
         tracked = list(self._dashboards.values()) + [
-            q for st in self._sessions.values() for q in (st.dashboard_query, st.current)
+            view.base for sess in self._sessions.values()
+            for view in sess._views.values()
+        ] + [
+            q for sess in self._sessions.values() for q in sess._current.values()
         ]
         todo = {
             q.digest: q for q in tracked
@@ -139,7 +206,7 @@ class Treant:
         all_stats: list[DeltaStats] = []
         maintained = fallbacks = 0
         for q in todo.values():
-            _, st = self.engine.apply_delta(q, delta)
+            _, st = self.engine_for(q.ring_name, q.measure).apply_delta(q, delta)
             all_stats.append(st)
             fallbacks += int(st.fallback)
             # a query the update can't even reach (relation removed / outside
@@ -152,13 +219,17 @@ class Treant:
             return q
 
         self._dashboards = {v: bump(q) for v, q in self._dashboards.items()}
-        for st_ in self._sessions.values():
-            st_.dashboard_query = bump(st_.dashboard_query)
-            st_.current = bump(st_.current)
-        # any in-flight background calibration targets a stale snapshot;
-        # the next think_time() restarts against the updated query (cheap
-        # when maintenance succeeded, a full recalibration otherwise)
-        self._calibrator = None
+        for sess in self._sessions.values():
+            for view in sess._views.values():
+                view.base = bump(view.base)
+            sess._current = {v: bump(q) for v, q in sess._current.items()}
+        # every pending calibration targets a stale snapshot: invalidate and
+        # re-queue the sessions' (bumped) current queries — maintained ones
+        # complete in a few cache hits, fallbacks actually recalibrate
+        self.scheduler.clear()
+        for sess in self._sessions.values():
+            for viz, q in sess._current.items():
+                self.scheduler.schedule(sess.id, viz, q, self.engine_for(q.ring_name, q.measure))
         return UpdateResult(
             relation=delta.relation,
             new_version=delta.new_version,
@@ -167,7 +238,7 @@ class Treant:
             stats=all_stats,
         )
 
-    # -- think-time calibration (§4.2.1) -------------------------------------------
+    # -- think-time calibration (§4.2.1) — legacy wrapper -----------------------
     def think_time(
         self,
         session: str,
@@ -175,29 +246,22 @@ class Treant:
         budget_messages: int | None = None,
         budget_seconds: float | None = None,
     ) -> int:
-        """Calibrate the current interaction query in the background.
+        """[legacy] Calibrate this viz's current query in the background.
 
         Preemptible: stops when the budget is exhausted; every message
         materialized so far stays in the store and is immediately reusable
-        (Fig 15's stepped latency curve comes exactly from this).
-        Returns the number of edges processed.
+        (Fig 15's stepped latency curve comes exactly from this), and the
+        iterator position survives interactions on *other* vizzes.
+        Returns the number of edges processed.  New code should use
+        ``Session.idle`` which drains all of a session's pending vizzes.
         """
-        st = self._state(session, viz)
-        q = st.current
-        if self._calibrator is None or self._calibrator[1] != q.digest:
-            self._calibrator = (self.engine.calibrate_iter(q), q.digest)
-        gen, _ = self._calibrator
-        done = 0
-        t0 = time.perf_counter()
-        for _ in gen:
-            done += 1
-            if budget_messages is not None and done >= budget_messages:
-                break
-            if budget_seconds is not None and time.perf_counter() - t0 >= budget_seconds:
-                break
-        else:
-            self._calibrator = None  # fully calibrated
-        return done
+        sess = self._legacy_viz(session, viz)
+        q = sess._current[viz]
+        self.scheduler.schedule(session, viz, q, self.engine_for(q.ring_name, q.measure))
+        return self.scheduler.run(
+            budget_messages=budget_messages, budget_seconds=budget_seconds,
+            session=session, viz=viz,
+        )
 
     # -- introspection ---------------------------------------------------------------
     def cache_stats(self) -> dict:
@@ -209,6 +273,9 @@ class Treant:
             "widen_hits": self.store.widen_hits,
             "widen_scans": self.store.widen_scans,
             "widen_scan_steps": self.store.widen_scan_steps,
+            "cross_viz_hits": self.store.cross_tag_hits,
+            "scheduler": self.scheduler.stats(),
+            "sessions": len(self._sessions),
         }
         if self.engine.plans is not None:
             out["plans"] = self.engine.plans.stats.as_dict()

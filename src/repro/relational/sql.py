@@ -63,8 +63,27 @@ def parse(sql: str, catalog: Catalog, strict_from: bool = False) -> Query:
     if m.group("group"):
         group_by = tuple(a.strip() for a in m.group("group").split(",") if a.strip())
 
+    preds = parse_predicates(m.group("where") or "", catalog)
+
+    removed: list[str] = []
+    if strict_from:
+        mentioned = {r.strip() for r in frm.split(",")}
+        removed = [n for n in catalog.names() if n not in mentioned]
+
+    return Query.make(
+        catalog, ring=ring, measure=measure, group_by=group_by,
+        predicates=preds, removed=removed,
+    )
+
+
+def parse_predicates(where: str, catalog: Catalog) -> list:
+    """Parse a WHERE fragment into σ Predicates (IN / BETWEEN / =).
+
+    Shared by ``parse`` and the dashboard session layer
+    (``Session.sql``), so SQL-expressed filters and typed ``SetFilter``
+    events produce digest-identical predicates.
+    """
     preds = []
-    where = m.group("where") or ""
     consumed = ""
     doms = catalog.domains()
     for pm in _IN_RE.finditer(where):
@@ -81,16 +100,7 @@ def parse(sql: str, catalog: Catalog, strict_from: bool = False) -> Query:
             continue
         attr = pm.group(1)
         preds.append(mask_in(doms[attr], [int(pm.group(2))], attr=attr))
-
-    removed: list[str] = []
-    if strict_from:
-        mentioned = {r.strip() for r in frm.split(",")}
-        removed = [n for n in catalog.names() if n not in mentioned]
-
-    return Query.make(
-        catalog, ring=ring, measure=measure, group_by=group_by,
-        predicates=preds, removed=removed,
-    )
+    return preds
 
 
 def _find_measure(catalog: Catalog, col: str) -> tuple[str, str]:

@@ -1,0 +1,363 @@
+"""Declarative dashboard sessions: typed events, crossfilter fan-out, the
+shared think-time scheduler, and the legacy-wrapper compatibility contract.
+
+The scheduler regression test pins down the structural bug of the old API:
+``Treant._calibrator`` was a single global slot, so an interaction on viz B
+silently discarded viz A's partial think-time calibration (the iterator
+restarted from edge 0 on every preemption and, under a small budget, never
+reached the later edges).  The per-(session, viz) scheduler keeps A's
+iterator position; only the viz actually interacted with is preempted.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (
+    CJTEngine,
+    ClearFilter,
+    DashboardSpec,
+    Drill,
+    MessageStore,
+    Query,
+    Rollup,
+    SetFilter,
+    SwapMeasure,
+    ToggleRelation,
+    Treant,
+    Undo,
+    VizSpec,
+    jt_from_catalog,
+    steiner,
+)
+from repro.core import semiring as sr
+from repro.relational import schema, sql
+from repro.relational.relation import mask_in
+
+
+@pytest.fixture(scope="module")
+def flight():
+    cat = schema.flight(n_flights=8_000)
+    return cat, jt_from_catalog(cat)
+
+
+def flight_spec() -> DashboardSpec:
+    return DashboardSpec(vizzes=(
+        VizSpec("by_state", measure=("Flights", "dep_delay"), ring="sum",
+                group_by=("airport_state",)),
+        VizSpec("by_month", measure=("Flights", "dep_delay"), ring="sum",
+                group_by=("month",)),
+        VizSpec("by_size", measure=("Flights", "dep_delay"), ring="sum",
+                group_by=("airport_size",)),
+        VizSpec("by_carrier", measure=("Flights", "dep_delay"), ring="sum",
+                group_by=("carrier_group",)),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: the cross-viz preemption regression
+# ---------------------------------------------------------------------------
+
+def test_think_time_survives_other_viz_interaction(flight):
+    """Progress on viz A's background calibration must survive interactions
+    on viz B.  Fails against the legacy single-slot ``_calibrator`` (each B
+    interaction reset A's iterator, so a budget-2 pass only ever revisited
+    the first two edges); passes with the per-(session, viz) scheduler."""
+    cat, jt = flight
+    t = Treant(cat, ring=sr.SUM, jt=jt)
+    d = cat.domains()
+    qA = Query.make(cat, ring="sum", measure=("Flights", "dep_delay"),
+                    group_by=("airport_state",))
+    # count-ring dashboard: B's messages share no Prop-2 signatures with A's,
+    # so B interactions cannot accidentally calibrate A
+    qB = Query.make(cat, ring="count", group_by=("month",))
+    t.register_dashboard("A", qA)
+    t.register_dashboard("B", qB)
+    qA1 = qA.with_predicate(mask_in(d["carrier_group"], [0, 1], attr="carrier_group"))
+    t.interact("s", "A", qA1)
+    n_edges = len(t.jt.directed_edges())
+    for i in range(n_edges):
+        done = t.think_time("s", "A", budget_messages=2)
+        assert done <= 2
+        # a *different* B query every round: preempts B's pending task only
+        t.interact("s", "B", qB.with_predicate(mask_in(d["dow"], [i % 7], attr="dow")))
+    assert t.engine.is_calibrated(qA1)
+    # B was preempted repeatedly, A never was
+    assert t.scheduler.preemptions >= n_edges - 1
+    assert t.scheduler.completed >= 1
+
+
+def test_scheduler_budget_preserves_iterator_position(flight):
+    cat, jt = flight
+    t = Treant(cat, ring=sr.SUM, jt=jt)
+    q0 = Query.make(cat, ring="sum", measure=("Flights", "dep_delay"))
+    t.register_dashboard("v", q0)
+    d = cat.domains()
+    q1 = q0.with_predicate(mask_in(d["dow"], [0], attr="dow"))
+    t.interact("s", "v", q1)
+    n_edges = len(t.jt.directed_edges())
+    total = 0
+    while True:
+        got = t.think_time("s", "v", budget_messages=1)
+        if got == 0:  # exhausted generator detected → task completed
+            break
+        total += got
+    # budget-1 steps accumulate to exactly one full calibration pass
+    assert total == n_edges
+    assert t.engine.is_calibrated(q1)
+    assert t.scheduler.pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# Event layer ≡ hand-built query chains
+# ---------------------------------------------------------------------------
+
+ATTRS = ["carrier_group", "airport_size", "month", "dow"]
+DRILLS = ["month", "dow", "carrier_group"]
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_event_sequence_matches_hand_built_chains(seed):
+    """Any SetFilter/ClearFilter/Drill/Rollup sequence applied via
+    ``Session.apply`` derives queries digest-identical to hand-built
+    ``with_predicate`` / ``add_group_by`` chains."""
+    cat = schema.flight(n_flights=1_000, seed=seed % 5)
+    d = cat.domains()
+    t = Treant(cat, ring=sr.SUM)
+    spec = flight_spec()
+    sess = t.open_session(spec, calibrate=False)
+    rng = np.random.default_rng(seed)
+
+    filters: dict[str, list[int]] = {}
+    drills: dict[str, list[str]] = {v.name: [] for v in spec.vizzes}
+    for _ in range(6):
+        kind = rng.integers(4)
+        if kind == 0:
+            attr = ATTRS[rng.integers(len(ATTRS))]
+            vals = sorted({int(v) for v in rng.integers(0, d[attr], 2)})
+            sess.apply(SetFilter(attr, values=tuple(vals)))
+            filters[attr] = vals
+        elif kind == 1 and filters:
+            attr = sorted(filters)[rng.integers(len(filters))]
+            sess.apply(ClearFilter(attr))
+            del filters[attr]
+        elif kind == 2:
+            viz = spec.names[rng.integers(len(spec.names))]
+            a = DRILLS[rng.integers(len(DRILLS))]
+            sess.apply(Drill(viz, a))
+            if a not in drills[viz] and a not in spec.viz(viz).group_by:
+                drills[viz].append(a)
+        elif kind == 3:
+            viz = spec.names[rng.integers(len(spec.names))]
+            if drills[viz]:
+                a = drills[viz].pop()
+                sess.apply(Rollup(viz, a))
+
+    for v in spec.vizzes:
+        ref = Query.make(cat, ring=v.ring, measure=v.measure, group_by=v.group_by)
+        for a in drills[v.name]:
+            ref = ref.add_group_by(a)
+        for attr, vals in filters.items():
+            ref = ref.with_predicate(mask_in(d[attr], vals, attr=attr))
+        assert sess.query_of(v.name).digest == ref.digest, (
+            v.name, filters, drills[v.name]
+        )
+
+
+def test_undo_round_trip(flight):
+    cat, jt = flight
+    t = Treant(cat, ring=sr.SUM, jt=jt)
+    sess = t.open_session(flight_spec(), calibrate=False)
+    r1 = sess.apply(SetFilter("carrier_group", values=(0, 1), source="by_carrier"))
+    before = {v: sess.query_of(v).digest for v in sess.vizzes}
+    vals1 = np.asarray(r1.results["by_state"].factor.field, np.float64).copy()
+
+    r2 = sess.apply(SetFilter("carrier_group", values=(2, 3), source="by_carrier"))
+    assert sess.query_of("by_state").digest != before["by_state"]
+    r3 = sess.apply(Undo())
+    # undo re-renders exactly the vizzes the undone event had changed
+    assert set(r3.affected) == set(r2.affected)
+    assert {v: sess.query_of(v).digest for v in sess.vizzes} == before
+    np.testing.assert_allclose(
+        np.asarray(r3.results["by_state"].factor.field, np.float64), vals1, rtol=1e-5
+    )
+    # empty-stack Undo is a no-op
+    sess.apply(Undo())
+    assert sess.apply(Undo()).affected == ()
+
+
+# ---------------------------------------------------------------------------
+# Crossfilter fan-out semantics and correctness
+# ---------------------------------------------------------------------------
+
+def test_crossfilter_fan_out_excludes_source_and_matches_cold(flight):
+    cat, jt = flight
+    t = Treant(cat, ring=sr.SUM, jt=jt)
+    sess = t.open_session(flight_spec())
+    res = sess.apply(SetFilter("carrier_group", values=(0, 1), source="by_carrier"))
+    # every linked viz except the brushing one re-renders
+    assert set(res.affected) == {"by_state", "by_month", "by_size"}
+    assert sess.query_of("by_carrier").predicates == ()
+    for viz in res.affected:
+        q = sess.query_of(viz)
+        cold = CJTEngine(jt, cat, sr.SUM, store=MessageStore())
+        f_cold, _ = cold.execute(q)
+        np.testing.assert_allclose(
+            np.asarray(res.results[viz].factor.field, np.float64),
+            np.asarray(f_cold.field, np.float64), rtol=1e-4, atol=1e-3,
+        )
+
+
+def test_sibling_vizzes_share_messages(flight):
+    cat, jt = flight
+    t = Treant(cat, ring=sr.SUM, jt=jt)
+    sess = t.open_session(flight_spec())
+    sess.apply(SetFilter("airport_size", values=(1, 2), source="by_size"))
+    sess.idle()
+    sess.apply(SetFilter("airport_size", values=(0, 3), source="by_size"))
+    st_ = sess.stats()
+    # messages materialized under one viz's execution/calibration served a
+    # sibling (γ-independent Prop-2 signatures below the carry)
+    assert st_["cross_viz_hits_total"] > 0
+    assert st_["pending_calibrations"] > 0
+    assert set(st_) >= {
+        "vizzes", "events", "pending_calibrations", "preemptions",
+        "scheduler_messages_total", "cross_viz_hits_total",
+    }
+
+
+def test_preemption_counts_only_interacted_viz(flight):
+    cat, jt = flight
+    t = Treant(cat, ring=sr.SUM, jt=jt)
+    sess = t.open_session(flight_spec(), calibrate=False)
+    sess.apply(SetFilter("carrier_group", values=(0,), source="by_carrier"))
+    assert sess.stats()["preemptions"] == 0
+    # second filter changes the same three vizzes → their pending (never run)
+    # calibrations are replaced; by_carrier's is untouched
+    sess.apply(SetFilter("carrier_group", values=(1,), source="by_carrier"))
+    assert sess.stats()["preemptions"] == 3
+    assert t.scheduler.pending(sess.id) == 3
+
+
+def test_swap_measure_routes_to_sibling_ring_engine(flight):
+    cat, jt = flight
+    t = Treant(cat, ring=sr.SUM, jt=jt)
+    sess = t.open_session(flight_spec(), calibrate=False)
+    res = sess.apply(SwapMeasure("by_size", "Flights", "dep_delay", ring="tropical_min"))
+    assert res.affected == ("by_size",)
+    q = sess.query_of("by_size")
+    assert q.ring_name == "tropical_min"
+    cold = CJTEngine(jt, cat, sr.TROPICAL_MIN, store=MessageStore())
+    f_cold, _ = cold.execute(q)
+    np.testing.assert_allclose(
+        np.asarray(res.results["by_size"].factor.field, np.float64),
+        np.asarray(f_cold.field, np.float64), rtol=1e-5,
+    )
+    # the shared store holds both rings' messages without cross-serving
+    assert "tropical_min" in t._engines and t._engines["tropical_min"].store is t.store
+
+
+def test_count_with_measure_not_collapsed_onto_sum_engine(flight):
+    """A count-ring query carrying a measure must run on a real COUNT engine
+    (the SUM lift would sum the measure column); measure-free COUNT still
+    collapses onto the SUM primary and shares its store/plans."""
+    cat, jt = flight
+    t = Treant(cat, ring=sr.SUM, jt=jt)
+    q_cnt = Query.make(cat, ring="count", measure=("Flights", "dep_delay"),
+                       group_by=("carrier_group",))
+    t.register_dashboard("v", q_cnt)
+    r = t.interact("s", "v", q_cnt)
+    cold = CJTEngine(jt, cat, sr.COUNT, store=MessageStore())
+    f_cold, _ = cold.execute(q_cnt)
+    np.testing.assert_allclose(
+        np.asarray(r.factor.field, np.float64),
+        np.asarray(f_cold.field, np.float64), rtol=1e-5,
+    )
+    assert t.engine_for("count", ("Flights", "dep_delay")) is not t.engine
+    assert t.engine_for("count", None) is t.engine
+
+
+def test_toggle_relation_round_trip(flight):
+    cat, jt = flight
+    t = Treant(cat, ring=sr.SUM, jt=jt)
+    sess = t.open_session(flight_spec(), calibrate=False)
+    r1 = sess.apply(ToggleRelation("Dates", viz="by_state"))
+    assert sess.query_of("by_state").removed == frozenset({"Dates"})
+    assert r1.affected == ("by_state",)
+    r2 = sess.apply(ToggleRelation("Dates", viz="by_state"))
+    assert sess.query_of("by_state").removed == frozenset()
+    assert r2.affected == ("by_state",)
+
+
+# ---------------------------------------------------------------------------
+# SQL entry point
+# ---------------------------------------------------------------------------
+
+def test_session_sql_matches_parse(flight):
+    cat, jt = flight
+    t = Treant(cat, ring=sr.SUM, jt=jt)
+    sess = t.open_session(flight_spec(), calibrate=False)
+    text = ("SELECT airport_state, SUM(dep_delay) FROM Flights "
+            "WHERE month IN (1,2) AND airport_size BETWEEN 1 AND 2 "
+            "GROUP BY airport_state")
+    res = sess.sql("by_state", text)
+    ref = sql.parse(text, cat)
+    assert sess.query_of("by_state").digest == ref.digest
+    assert sess.query_of("by_state").predicates == ref.predicates
+    cold = CJTEngine(jt, cat, sr.SUM, store=MessageStore())
+    f_cold, _ = cold.execute(ref)
+    np.testing.assert_allclose(
+        np.asarray(res.factor.field, np.float64),
+        np.asarray(f_cold.field, np.float64), rtol=1e-4, atol=1e-3,
+    )
+    # sql predicates are digest-identical to typed SetFilter events
+    ev_pred = sess.apply(SetFilter("month", values=(1, 2))).queries["by_month"]
+    assert ref.predicates[1].digest in {p.digest for p in ev_pred.predicates}
+
+
+# ---------------------------------------------------------------------------
+# Engine-realized Steiner size (no duplicate planning)
+# ---------------------------------------------------------------------------
+
+def test_steiner_size_realized_from_exec_stats(flight):
+    cat, jt = flight
+    t = Treant(cat, ring=sr.SUM, jt=jt)
+    d = cat.domains()
+    q0 = Query.make(cat, ring="sum", measure=("Flights", "dep_delay"),
+                    group_by=("airport_state",))
+    t.register_dashboard("v", q0)
+    eng = t.engine
+    q1 = q0.with_predicate(mask_in(d["carrier_group"], [0], attr="carrier_group"))
+    pln = steiner.plan(eng, q0, q1)
+    res = t.interact("s", "v", q1)
+    # realized ⊆ planned: the engine recomputes only inside the planned tree
+    assert 1 <= res.steiner_size <= max(pln.size, 1) + 1
+    assert res.steiner_size == steiner.realized_size(res.stats, None) or (
+        res.stats.recomputed_edges == [] and res.steiner_size == 1
+    )
+    # read() now reports the realized size too (was hardcoded 0)
+    r = t.read("s", "v")
+    assert r.steiner_size == 1 and r.stats.messages_computed == 0
+
+
+# ---------------------------------------------------------------------------
+# Legacy wrappers over the new layer
+# ---------------------------------------------------------------------------
+
+def test_legacy_wrappers_still_work(flight):
+    cat, jt = flight
+    t = Treant(cat, ring=sr.SUM, jt=jt)
+    d = cat.domains()
+    q0 = Query.make(cat, ring="sum", measure=("Flights", "dep_delay"))
+    t.register_dashboard("v", q0)
+    q1 = q0.with_predicate(mask_in(d["month"], [3], attr="month"))
+    r_a = t.interact("alice", "v", q1)
+    r_b = t.interact("bob", "v", q1)       # same query, other session → cache
+    assert r_b.stats.messages_computed == 0
+    assert t.think_time("alice", "v", budget_messages=2) == 2
+    st_ = t.cache_stats()
+    assert st_["sessions"] == 2
+    assert st_["scheduler"]["pending"] >= 1
+    with pytest.raises(KeyError):
+        t.interact("alice", "unregistered", q1)
