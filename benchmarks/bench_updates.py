@@ -20,7 +20,7 @@ from repro.core import CJTEngine, MessageStore, Query, jt_from_catalog
 from repro.core import semiring as sr
 from repro.relational import schema
 
-from .common import emit, time_fn
+from .common import emit, seeded_rng, time_fn
 
 
 def _random_append(rel, frac, rng):
@@ -42,7 +42,7 @@ def _timed_apply_delta(eng, q, delta):
 def run_case(name: str, cat, fact: str, measure, group_by, frac: float = 0.01):
     jt = jt_from_catalog(cat)
     ring = sr.SUM
-    rng = np.random.default_rng(0)
+    rng = seeded_rng(f"updates/{name}")
 
     for kind in ("append", "delete"):
         eng = CJTEngine(jt, cat, ring)

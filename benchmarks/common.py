@@ -1,13 +1,29 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing, CSV emission, pinned RNG seeds.
+
+Every benchmark must draw randomness through :func:`seeded_rng` (or pass an
+explicit seed to the schema generators) so consecutive runs produce the same
+data: a BENCH_*.json delta must be attributable to a code change, never to
+sampling noise.
+"""
 
 from __future__ import annotations
 
 import time
+import zlib
 
 import jax
 import numpy as np
 
 ROWS: list[tuple[str, float, str]] = []
+
+# One global seed for the whole benchmark suite; per-call streams are derived
+# from it with a stable (process-independent) name hash.
+DEFAULT_SEED = 0
+
+
+def seeded_rng(name: str) -> np.random.Generator:
+    """Deterministic per-use RNG stream (stable across processes/runs)."""
+    return np.random.default_rng((DEFAULT_SEED, zlib.crc32(name.encode())))
 
 
 def block(x):

@@ -12,7 +12,7 @@ from .plans import PlanCache, PlanStats  # noqa: F401
 from .dashboard import (  # noqa: F401
     ApplyResult, ClearFilter, DashboardSpec, Drill, InteractionResult,
     Rollup, Session, SetFilter, SwapMeasure, ThinkTimeScheduler,
-    ToggleRelation, Undo, VizSpec,
+    ToggleRelation, Undo, VizSpec, speculate_filters,
 )
 from .treant import Treant, UpdateResult  # noqa: F401
 from . import steiner  # noqa: F401

@@ -61,7 +61,7 @@ import bisect
 import dataclasses
 import hashlib
 from collections import OrderedDict
-from typing import Callable, Iterable, Mapping
+from typing import Callable, Iterable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -71,7 +71,7 @@ from repro.relational.relation import LRU, Catalog, Delta, Predicate, Relation, 
 from . import semiring as sr
 from .factor import Factor, contract, ones_factor
 from .hypertree import JTree
-from .plans import PlanCache, expand_rows_field
+from .plans import AbsorbItem, PlanCache, absorb_batch_key, expand_rows_field
 from .query import Query
 
 
@@ -93,7 +93,10 @@ class MessageStore:
     def __init__(self, max_bytes: int | None = None):
         self.max_bytes = max_bytes
         self._data: OrderedDict[str, Factor] = OrderedDict()
-        self._pinned: set[str] = set()
+        # sig -> pin refcount: several vizzes/sessions pin the same shared
+        # message, and one session's close (unpin) must not strip a sibling
+        # session's eviction exemption.  Keys behave like the old set.
+        self._pinned: dict[str, int] = {}
         # cross-viz sharing accounting: while ``tag`` is set (the dashboard
         # layer sets it to the executing viz name), puts record the producer
         # and hits on another producer's message count as cross-tag hits
@@ -184,7 +187,7 @@ class MessageStore:
             self._sig_index[sig] = (base_sig, gamma)
         per_base[gamma] = sig
         if pin:
-            self._pinned.add(sig)
+            self._pinned[sig] = self._pinned.get(sig, 0) + 1
         self._evict()
 
     def _drop_widen(self, sig: str) -> None:
@@ -214,7 +217,8 @@ class MessageStore:
             self._widen_attrs.pop(base_sig, None)
 
     def pin(self, base_sig: str, gamma: tuple[str, ...]):
-        self._pinned.add(self.full_sig(base_sig, gamma))
+        sig = self.full_sig(base_sig, gamma)
+        self._pinned[sig] = self._pinned.get(sig, 0) + 1
 
     def is_pinned(self, base_sig: str, gamma: tuple[str, ...]) -> bool:
         """Pinned exactly, or through a pinned wider-γ variant (Σ-widening)."""
@@ -226,7 +230,14 @@ class MessageStore:
         )
 
     def unpin(self, base_sig: str, gamma: tuple[str, ...]):
-        self._pinned.discard(self.full_sig(base_sig, gamma))
+        """Drop one pin reference; the sig stays pinned while other holders
+        remain (refcounted — floors at zero)."""
+        sig = self.full_sig(base_sig, gamma)
+        c = self._pinned.get(sig, 0) - 1
+        if c > 0:
+            self._pinned[sig] = c
+        else:
+            self._pinned.pop(sig, None)
 
     def apply_delta(
         self, old_base: str, new_base: str, gamma: tuple[str, ...], delta: Factor
@@ -247,12 +258,42 @@ class MessageStore:
             self.misses -= 1  # probe, not a serving miss
             return None
         new = old.add(delta)
-        self.put(new_base, gamma, new, pin=self.is_pinned(old_base, gamma))
-        self.unpin(old_base, gamma)
+        # migrate the whole pin refcount (several sessions may hold it); a
+        # pin held only through a wider-γ variant contributes one reference.
+        # Pin BEFORE put so a byte-bounded store cannot evict the new entry
+        # inside put()'s eviction sweep (same pin-first discipline as
+        # calibrate_iter).
+        moved = self._pinned.pop(self.full_sig(old_base, gamma), 0)
+        if moved == 0 and self.is_pinned(old_base, gamma):
+            moved = 1
+        if moved:
+            new_sig = self.full_sig(new_base, gamma)
+            self._pinned[new_sig] = self._pinned.get(new_sig, 0) + moved
+        self.put(new_base, gamma, new)
         return new
 
     def unpin_all(self):
         self._pinned.clear()
+
+    def drop_producer(self, prefix: str) -> int:
+        """Session GC: drop unpinned entries whose producer tag starts with
+        ``prefix`` (tags are ``"{session}:{viz}"``, so a session passes
+        ``f"{sid}:"``).  Entries another consumer still pins survive; untagged
+        entries (offline base calibration) are shared and never dropped here.
+        Purely an eviction policy — the store is a cache, so correctness is
+        unaffected and a later query simply recomputes."""
+        sigs = [s for s, owner in self._producer.items() if owner.startswith(prefix)]
+        n = 0
+        for sig in sigs:
+            if sig in self._pinned:
+                continue
+            self._producer.pop(sig, None)
+            f = self._data.pop(sig, None)
+            if f is not None:
+                self.nbytes -= factor_nbytes(f)
+                self._drop_widen(sig)
+                n += 1
+        return n
 
     def _evict(self):
         if self.max_bytes is None:
@@ -270,6 +311,12 @@ class MessageStore:
     def __len__(self):
         return len(self._data)
 
+    def block_until_ready(self) -> None:
+        """Barrier on every cached factor: message passing dispatches
+        asynchronously, so think-time calibration can leave device work in
+        flight — benchmarks drain it here before starting a timer."""
+        jax.block_until_ready([f.field for f in self._data.values()])
+
     def reset_stats(self):
         self.hits = self.misses = self.widen_hits = 0
         self.widen_scans = self.widen_scan_steps = 0
@@ -280,7 +327,7 @@ class MessageStore:
         return (
             OrderedDict(self._data),
             {k: dict(v) for k, v in self._widen.items()},
-            set(self._pinned), self.nbytes,
+            dict(self._pinned), self.nbytes,
             (self.hits, self.misses, self.widen_hits),
             (dict(self._producer), self.cross_tag_hits),
         )
@@ -288,7 +335,7 @@ class MessageStore:
     def restore(self, snap):
         self._data, self._widen, self._pinned, self.nbytes, stats = (
             OrderedDict(snap[0]), {k: dict(v) for k, v in snap[1].items()},
-            set(snap[2]), snap[3], snap[4],
+            dict(snap[2]), snap[3], snap[4],
         )
         self.hits, self.misses, self.widen_hits = stats
         self._producer, self.cross_tag_hits = dict(snap[5][0]), snap[5][1]
@@ -325,6 +372,13 @@ class ExecStats:
     plan_traces: int = 0
     plan_hits: int = 0
     kernel_execs: int = 0
+    # batched absorption (execute_many): 1 when this query's absorption rode
+    # a vmapped sibling batch; batch_width is that batch's total width
+    batched_absorptions: int = 0
+    batch_width: int = 0
+    # result served from the session's speculative-prefetch cache: nothing
+    # executed at all (no store probes, no plan dispatch)
+    prefetch_hits: int = 0
     # realized Steiner tree (§3.4.2): bags touched by recomputed messages
     # plus the absorption root — 1 when everything was served from cache
     steiner_size: int = 0
@@ -373,6 +427,10 @@ class CJTEngine:
         # Prop-2 signature memo, LRU-bounded: keyed by (query digest, edge),
         # so a long-lived session's interaction stream cannot leak memory
         self._sig_memo: LRU = LRU(capacity=8192)
+        # σ-placement memo: placement is a pure function of (σ digests, R̄,
+        # versions) — a crossfilter fan-out derives N sibling queries with
+        # identical annotations, so they share one placement computation
+        self._placement_memo: LRU = LRU(capacity=1024)
 
     # -- annotation placement (§3.3, §3.4.2 shrinking) ------------------------
     def place_predicates(self, q: Query) -> dict[str, tuple[Predicate, ...]]:
@@ -383,6 +441,12 @@ class CJTEngine:
         bags) while keeping placement a pure function of the query, which the
         Prop-2 signatures require.
         """
+        key = (
+            tuple(p.digest for p in q.predicates), q.removed, q.rel_versions,
+        )
+        hit = self._placement_memo.get(key)
+        if hit is not None:
+            return hit
         placed: dict[str, list[Predicate]] = {}
         for p in q.predicates:
             cands = self.jt.bags_with_attr(p.attr)
@@ -390,7 +454,9 @@ class CJTEngine:
                 raise KeyError(f"predicate attr {p.attr} not in any bag")
             cands = sorted(cands, key=lambda b: (self._bag_rows(q, b), b))
             placed.setdefault(cands[0], []).append(p)
-        return {b: tuple(sorted(ps, key=lambda p: p.digest)) for b, ps in placed.items()}
+        out = {b: tuple(sorted(ps, key=lambda p: p.digest)) for b, ps in placed.items()}
+        self._placement_memo.put(key, out)
+        return out
 
     def _bag_rows(self, q: Query, bag: str) -> int:
         rels = [r for r in self.jt.relations_of(bag) if r not in q.removed]
@@ -409,8 +475,13 @@ class CJTEngine:
         return _h("bag", bag, rel_part, pred_part, meas, q.ring_name, q.lift_tag)
 
     def subtree_sig(self, q: Query, u: str, v: str, placement) -> str:
-        """Structural hash of the annotated subtree rooted at u, cut at (u,v)."""
-        key = (q.digest, u, v)
+        """Structural hash of the annotated subtree rooted at u, cut at (u,v).
+
+        Memo-keyed by the γ-independent ``Query.sig_key``: sibling vizzes of
+        one crossfilter fan-out (same σ, different γ) resolve to the same
+        subtree signatures, so the whole fan-out derives them once.
+        """
+        key = (q.sig_key, u, v)
         hit = self._sig_memo.get(key)
         if hit is not None:
             return hit
@@ -428,11 +499,18 @@ class CJTEngine:
         Separator attrs are kept by every message regardless of γ, so they
         are excluded from the carry — a query grouping by separator attrs
         then reuses base-calibration messages verbatim (this is what makes
-        the Fig 5b empty-bag view free to query).
+        the Fig 5b empty-bag view free to query).  Memoized alongside the
+        signature memo: root choice evaluates it once per (root, edge) pair.
         """
+        key = (q.group_by, "γ", u, v)
+        hit = self._sig_memo.get(key)
+        if hit is not None:
+            return hit
         sub = self.jt.subtree_attrs(u, v)
         sep = set(self.jt.separator(u, v))
-        return tuple(sorted((set(q.group_by) & sub) - sep))
+        out = tuple(sorted((set(q.group_by) & sub) - sep))
+        self._sig_memo[key] = out
+        return out
 
     def edge_sig(self, q: Query, u: str, v: str, placement) -> str:
         """Message identity (Prop. 2): depends on u's annotated subtree and the
@@ -637,25 +715,69 @@ class CJTEngine:
 
     # -- root choice (§3.3.3) ---------------------------------------------------
     def estimate_edge_cost(self, q: Query, u: str, v: str, placement) -> float:
-        base = self.edge_sig(q, u, v, placement)
-        gamma = self.gamma_carry(q, u, v)
-        if self.store.contains(base, gamma):
+        """Cost of materializing Y(u→v): 0 when cached, else rows + out size.
+
+        The signature/γ/size derivation is fused into one memo entry keyed by
+        the γ-independent ``sig_key`` + ``group_by`` (both determine every
+        component); only the store-containment probe runs live, since the
+        store changes between calls.
+        """
+        key = (q.sig_key, q.group_by, "est", u, v)
+        hit = self._sig_memo.get(key)
+        if hit is None:
+            base = self.edge_sig(q, u, v, placement)
+            gamma = self.gamma_carry(q, u, v)
+            out_attrs = tuple(dict.fromkeys(self.jt.separator(u, v) + gamma))
+            out_size = 1.0
+            for a in out_attrs:
+                out_size *= self.jt.domains[a]
+            hit = (
+                self.store.full_sig(base, gamma), base, gamma,
+                self._bag_rows(q, u) + out_size,
+            )
+            self._sig_memo[key] = hit
+        full, base, gamma, miss_cost = hit
+        if full in self.store._data or self.store.contains(base, gamma):
             return 0.0
-        out_attrs = tuple(dict.fromkeys(self.jt.separator(u, v) + gamma))
-        out_size = float(np.prod([self.jt.domains[a] for a in out_attrs])) if out_attrs else 1.0
-        return self._bag_rows(q, u) + out_size
+        return miss_cost
+
+    def _bags_by_rows(self, q: Query) -> list[tuple[int, str]]:
+        """Candidate roots in ascending underlying-row order (memoized per
+        version/R̄ snapshot — placement and γ don't change bag sizes)."""
+        key = ("rootorder", q.rel_versions, q.removed)
+        hit = self._placement_memo.get(key)
+        if hit is None:
+            hit = sorted((self._bag_rows(q, b), b) for b in self.jt.bags)
+            self._placement_memo.put(key, hit)
+        return hit
 
     def choose_root(self, q: Query, placement=None) -> str:
+        """argmin over bags of (edges to recompute + absorption rows).
+
+        Candidates are scanned in ascending row order, so with a warm store
+        the first bag whose traversal is fully cached wins after a single
+        scan (every later candidate already costs ≥ its own rows ≥ this
+        root's total) — the warm-event fast path.  Each directed edge is
+        estimated at most once per call.  Ties break toward fewer rows, then
+        bag name (a pure function of query + store state, as Prop-2 needs).
+        """
         placement = self.place_predicates(q) if placement is None else placement
+        edge_cost: dict[tuple[str, str], float] = {}
         best, best_cost = None, None
-        for root in sorted(self.jt.bags):
-            cost = sum(
-                self.estimate_edge_cost(q, a, b, placement)
-                for a, b in self.jt.traversal_to_root(root)
-            )
-            cost += self._bag_rows(q, root)
-            if best_cost is None or cost < best_cost:
-                best, best_cost = root, cost
+        for rows, root in self._bags_by_rows(q):
+            if best_cost is not None and rows >= best_cost:
+                break
+            cost = float(rows)
+            for a, b in self.jt.traversal_to_root(root):
+                c = edge_cost.get((a, b))
+                if c is None:
+                    edge_cost[(a, b)] = c = self.estimate_edge_cost(q, a, b, placement)
+                cost += c
+                if best_cost is not None and cost >= best_cost:
+                    break
+            else:
+                if best_cost is None or cost < best_cost:
+                    best, best_cost = root, cost
         return best
 
     # -- public API ---------------------------------------------------------------
@@ -680,6 +802,99 @@ class CJTEngine:
         if sync:
             jax.block_until_ready(out.field)
         return out, stats
+
+    def execute_many(
+        self,
+        queries: Sequence[Query],
+        sync: bool = True,
+        tags: Sequence[str | None] | None = None,
+    ) -> list[tuple[Factor, ExecStats]]:
+        """Execute several queries, batching structurally-identical absorptions.
+
+        The crossfilter fan-out path: each query's message passing runs
+        sequentially (warm events are pure store hits there), but the final
+        root absorptions — the dominant warm-event cost, one plan dispatch
+        per viz — are grouped by :func:`~repro.core.plans.absorb_batch_key`
+        and every group of siblings executes as ONE vmapped jitted call
+        (``PlanCache.run_sparse_batch``).  ``tags[i]`` is set as the store's
+        producer tag while query i's messages materialize (cross-viz-hit
+        accounting), matching what ``Session._fan_out`` did per viz.
+
+        Batched and sequential execution are metamorphically equivalent:
+        padding is the ⊕-identity and the store evolves in the same query
+        order, so results are bit-identical on integer-exact data
+        (``tests/test_batched_plans.py``).  Dense/densified bags and
+        ``use_plans=False`` engines simply fall back to per-query absorption.
+        """
+        results: list[Factor | None] = [None] * len(queries)
+        all_stats: list[ExecStats] = []
+        roots: list[str] = []
+        deferred: list[tuple[int, AbsorbItem]] = []
+        for i, q in enumerate(queries):
+            stats = ExecStats()
+            all_stats.append(stats)
+            placement = self.place_predicates(q)
+            root = self.choose_root(q, placement)
+            roots.append(root)
+            old_tag = self.store.tag
+            if tags is not None and tags[i] is not None:
+                self.store.tag = tags[i]
+            try:
+                incoming = [
+                    self.message(q, u, root, placement, stats)
+                    for u in self.jt.neighbors(root)
+                ]
+            finally:
+                self.store.tag = old_tag
+            keep = tuple(q.group_by)
+            avail = set(self.jt.subtree_attrs(root, None))
+            out_attrs = tuple(a for a in dict.fromkeys(keep) if a in avail)
+            rel_names = [r for r in self.jt.relations_of(root) if r not in q.removed]
+            rels = [self.catalog.get(r, q.version_of(r)) for r in rel_names]
+            sparse = (
+                len(rels) == 1
+                and rels[0].num_rows > self.dense_rows_threshold
+                and self.plans is not None
+                and len(queries) > 1
+            )
+            if sparse:
+                stats.rows_scanned += rels[0].num_rows
+                deferred.append((i, AbsorbItem(
+                    rel=rels[0], vals=self._lift(q, rels[0]),
+                    incoming=tuple(incoming),
+                    preds=placement.get(root, ()), out_attrs=out_attrs,
+                )))
+            else:
+                results[i] = self._bag_contract(
+                    q, root, incoming, out_attrs, placement, stats
+                )
+        groups: dict[tuple, list[tuple[int, AbsorbItem]]] = {}
+        for i, item in deferred:
+            groups.setdefault(absorb_batch_key(self.ring, item), []).append((i, item))
+        for members in groups.values():
+            if len(members) == 1:
+                i, item = members[0]
+                results[i] = self.plans.run_sparse(
+                    self.catalog, item.rel, item.vals, list(item.incoming),
+                    list(item.preds), item.out_attrs, all_stats[i],
+                )
+            else:
+                fs = self.plans.run_sparse_batch(
+                    self.catalog, [item for _, item in members],
+                    [all_stats[i] for i, _ in members],
+                )
+                for (i, _), f in zip(members, fs):
+                    results[i] = f
+        outs: list[tuple[Factor, ExecStats]] = []
+        for i, q in enumerate(queries):
+            out = results[i].project_to(q.group_by)
+            stats = all_stats[i]
+            touched = {b for edge in stats.recomputed_edges for b in edge}
+            stats.steiner_size = len(touched | {roots[i]})
+            outs.append((out, stats))
+        if sync:
+            jax.block_until_ready([f.field for f, _ in outs])
+        return outs
 
     def calibrate(self, q: Query, root: str | None = None, pin: bool = False) -> ExecStats:
         stats = ExecStats()
@@ -707,6 +922,21 @@ class CJTEngine:
                 self.store.pin(base, self.gamma_carry(q, u, v))
             self.message(q, u, v, placement, stats)
             yield (u, v)
+
+    def unpin_query(self, q: Query, root: str | None = None) -> int:
+        """Release this query's calibration pins (Session GC: a closed
+        session's base CJT must become evictable).  Messages stay cached and
+        servable — only the eviction exemption is dropped.  Returns the
+        number of previously-pinned edges released."""
+        placement = self.place_predicates(q)
+        n = 0
+        for u, v in self.jt.directed_edges():
+            base = self.edge_sig(q, u, v, placement)
+            gamma = self.gamma_carry(q, u, v)
+            if self.store.full_sig(base, gamma) in self.store._pinned:
+                n += 1
+            self.store.unpin(base, gamma)
+        return n
 
     # -- delta calibration (data updates) ---------------------------------------
     def delta_message(

@@ -28,6 +28,21 @@ is the public surface for that workload:
   budget_seconds=...)`` drains the queue most-recently-interacted first;
   preempting a budget keeps the iterator position *and* every message
   already materialized (§4.2.1).
+- **Batched fan-out**: the per-event re-render dispatches every changed viz
+  through ``CJTEngine.execute_many`` (one engine call per ring), which
+  stacks the sibling absorptions sharing a batch signature into one vmapped
+  compiled plan (:mod:`repro.core.plans`) — a warm ``SetFilter`` costs one
+  plan dispatch instead of one per linked viz.  ``Treant(batch_fanout=False)``
+  (or ``REPRO_BATCH_FANOUT=0``) restores the per-viz dispatch path.
+- **Speculative σ prefetch**: ``Session.idle(speculate=k)`` spends leftover
+  think-time on the *likely next* interaction — :func:`speculate_filters`
+  derives up to ``k`` neighboring σ values of the most recent ``SetFilter``
+  (adjacent brush windows for ranges, shifted sibling value sets for
+  IN-lists, Mosaic-style), and the scheduler pre-executes the would-be
+  fan-out for each, materializing its messages in the shared store and
+  parking the absorbed per-viz results in the session's prefetch cache.  A
+  follow-up brush on a prefetched σ is served entirely from that cache:
+  zero store probes, zero plan executions (``ExecStats.prefetch_hits``).
 - ``Session.sql(viz, text)`` routes the restricted SQL front-end
   (:mod:`repro.relational.sql`) into the same layer.
 
@@ -167,6 +182,52 @@ class Undo:
 Event = (SetFilter, ClearFilter, Drill, Rollup, SwapMeasure, ToggleRelation, Undo)
 
 
+def speculate_filters(ev: SetFilter, domain: int, k: int) -> list[SetFilter]:
+    """Up to ``k`` likely-next σ values for the same dimension, nearest first.
+
+    Brushes move locally: a range filter's neighbors are the adjacent windows
+    of the same width (clipped at the domain edges); an IN-list's neighbors
+    are the value set shifted by whole spans (sibling domain values).  The
+    candidate list is deterministic — alternating +/- by distance — so
+    prefetch behavior is reproducible and testable.
+    """
+    out: list[SetFilter] = []
+    seen = set()
+
+    def emit(cand: SetFilter) -> None:
+        key = (cand.values, cand.lo, cand.hi)
+        if key not in seen:
+            seen.add(key)
+            out.append(cand)
+
+    if ev.values:
+        vals = sorted(set(ev.values))
+        span = vals[-1] - vals[0] + 1
+        for step in range(1, 2 * k + 2):
+            for off in (step * span, -step * span):
+                shifted = tuple(v + off for v in vals)
+                if all(0 <= v < domain for v in shifted):
+                    emit(dataclasses.replace(ev, values=shifted))
+                if len(out) >= k:
+                    return out
+            if abs(step * span) > domain:
+                break
+        return out
+    if ev.lo is None or ev.hi is None:
+        return out
+    width = max(ev.hi - ev.lo, 1)
+    for step in range(1, 2 * k + 2):
+        for off in (step * width, -step * width):
+            lo, hi = max(ev.lo + off, 0), min(ev.hi + off, domain)
+            if lo < hi and (lo, hi) != (ev.lo, ev.hi):
+                emit(dataclasses.replace(ev, lo=lo, hi=hi))
+            if len(out) >= k:
+                return out
+        if step * width > domain:
+            break
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Results
 # ---------------------------------------------------------------------------
@@ -176,9 +237,12 @@ class InteractionResult:
     """One viz's rendered aggregate plus execution accounting.
 
     ``steiner_size`` is realized from the engine's own ExecStats (bags
-    touched by recomputation ∪ root) rather than planned separately.
-    ``latency_s`` is dispatch time for this viz; inside an event fan-out the
-    device sync happens once for all vizzes (see ApplyResult.latency_s).
+    touched by recomputation ∪ root) rather than planned separately (0 when
+    the result came from the speculative-prefetch cache — nothing executed).
+    ``latency_s`` is dispatch time for this viz; under batched fan-out the
+    sibling group shares one dispatch, so grouped vizzes report the same
+    value, and the device sync happens once for all vizzes (see
+    ApplyResult.latency_s).
     """
 
     factor: object
@@ -231,6 +295,8 @@ class ThinkTimeScheduler:
         self.invalidations = 0        # tasks dropped by data updates / close
         self.completed = 0            # tasks fully calibrated
         self.messages = 0             # edges processed across all runs
+        self.speculative_queries = 0  # prefetch queries executed during idle
+        self.speculative_messages = 0  # messages those queries materialized
         self._session_preemptions: dict[str, int] = {}
 
     def schedule(self, session: str, viz: str, query: Query, engine: CJTEngine) -> None:
@@ -324,6 +390,38 @@ class ThinkTimeScheduler:
             if exhausted:
                 return done
 
+    def speculate(
+        self, session: str, items: list[tuple[str, Query, CJTEngine]]
+    ) -> dict[tuple[str, str], object]:
+        """Speculative mode: pre-execute likely-next fan-out queries.
+
+        ``items`` are (viz, derived query, engine) triples for σ values the
+        user has not selected yet.  Queries are grouped per engine and run
+        through ``execute_many`` — the same batched absorption path a real
+        event takes — with the session:viz producer tag, so the messages they
+        materialize land in the shared store exactly as a real interaction's
+        would.  Returns ``{(viz, query digest): absorbed factor}`` for the
+        session to park in its prefetch cache.
+        """
+        by_engine: dict[int, tuple[CJTEngine, list[tuple[str, Query]]]] = {}
+        for viz, q, eng in items:
+            by_engine.setdefault(id(eng), (eng, []))[1].append((viz, q))
+        out: dict[tuple[str, str], object] = {}
+        pending = []
+        for eng, group in by_engine.values():
+            results = eng.execute_many(
+                [q for _, q in group], sync=False,
+                tags=[f"{session}:{viz}" for viz, _ in group],
+            )
+            for (viz, q), (factor, stats) in zip(group, results):
+                out[(viz, q.digest)] = factor
+                pending.append(factor)
+                self.speculative_messages += stats.messages_computed
+            self.speculative_queries += len(group)
+        if pending:
+            jax.block_until_ready([f.field for f in pending])
+        return out
+
     def stats(self) -> dict:
         return {
             "pending": len(self._tasks),
@@ -331,6 +429,8 @@ class ThinkTimeScheduler:
             "invalidations": self.invalidations,
             "completed": self.completed,
             "messages": self.messages,
+            "speculative_queries": self.speculative_queries,
+            "speculative_messages": self.speculative_messages,
         }
 
 
@@ -369,6 +469,13 @@ class Session:
         self._undo: list[tuple] = []
         self.undo_depth = 64
         self.events_applied = 0
+        # speculative σ prefetch: (viz, query digest) -> absorbed Factor,
+        # filled by idle(speculate=), served (and popped) by _fan_out
+        self._prefetched: dict[tuple[str, str], object] = {}
+        self.prefetch_capacity = 128
+        self.prefetch_hits = 0
+        self._last_filter: SetFilter | None = None
+        self._pinned_vizzes: set[str] = set()
         if spec is not None:
             for v in spec.vizzes:
                 base = Query.make(
@@ -383,6 +490,7 @@ class Session:
                 self._current[v.name] = base
                 if calibrate:  # offline stage: pin the base CJT (§4.1.1)
                     treant.engine_for(base.ring_name, base.measure).calibrate(base, pin=True)
+                    self._pinned_vizzes.add(v.name)
 
     # -- plumbing -------------------------------------------------------------
     @property
@@ -478,8 +586,12 @@ class Session:
             if event.source is not None:
                 self._view(event.source)
             self._filters[event.attr] = (self._predicate_of(event), event.source)
+            self._last_filter = event  # speculation anchor (idle(speculate=))
         elif isinstance(event, ClearFilter):
             self._filters.pop(event.attr, None)
+            # don't speculate around a dimension the user just abandoned
+            if self._last_filter is not None and self._last_filter.attr == event.attr:
+                self._last_filter = None
         elif isinstance(event, Drill):
             v = self._view(event.viz)
             if event.attr not in self.catalog.domains():
@@ -509,22 +621,58 @@ class Session:
         results: dict[str, InteractionResult] = {}
         pending: list[tuple[str, object]] = []
         t0 = time.perf_counter()
+        # serve speculatively-prefetched results first: the whole fan-out for
+        # this σ was already executed during think-time, so the viz costs
+        # zero store probes and zero plan executions now
+        to_run: list[str] = []
         for name in affected:
             q = derived[name]
+            hit = self._prefetched.pop((name, q.digest), None)
+            if hit is not None:
+                self.prefetch_hits += 1
+                results[name] = InteractionResult(
+                    hit, ExecStats(prefetch_hits=1), 0.0, 0
+                )
+                self._current[name] = q
+                self.scheduler.schedule(
+                    self.id, name, q,
+                    self._treant.engine_for(q.ring_name, q.measure),
+                )
+            else:
+                to_run.append(name)
+        # group the rest per engine; batch_fanout dispatches each group as
+        # ONE execute_many call (sibling absorptions share a vmapped plan),
+        # otherwise fall back to the per-viz dispatch path
+        by_engine: dict[int, tuple[CJTEngine, list[str]]] = {}
+        for name in to_run:
+            q = derived[name]
             engine = self._treant.engine_for(q.ring_name, q.measure)
-            self.store.tag = f"{self.id}:{name}"
+            by_engine.setdefault(id(engine), (engine, []))[1].append(name)
+        for engine, names in by_engine.values():
             td = time.perf_counter()
-            try:
+            if self._treant.batch_fanout and len(names) > 1:
                 # async dispatch: block once for the whole fan-out below
-                factor, stats = engine.execute(q, sync=False)
-            finally:
-                self.store.tag = None
-            results[name] = InteractionResult(
-                factor, stats, time.perf_counter() - td, stats.steiner_size
-            )
-            self._current[name] = q
-            pending.append((name, factor))
-            self.scheduler.schedule(self.id, name, q, engine)
+                group = engine.execute_many(
+                    [derived[n] for n in names], sync=False,
+                    tags=[f"{self.id}:{n}" for n in names],
+                )
+            else:
+                group = []
+                for name in names:
+                    self.store.tag = f"{self.id}:{name}"
+                    try:
+                        group.append(engine.execute(derived[name], sync=False))
+                    finally:
+                        self.store.tag = None
+            dt = time.perf_counter() - td
+            for name, (factor, stats) in zip(names, group):
+                q = derived[name]
+                results[name] = InteractionResult(
+                    factor, stats, dt, stats.steiner_size
+                )
+                self._current[name] = q
+                pending.append((name, factor))
+                self.scheduler.schedule(self.id, name, q, engine)
         if pending:
             jax.block_until_ready([f.field for _, f in pending])
         return ApplyResult(
@@ -544,6 +692,13 @@ class Session:
     def _restore(self, snap) -> None:
         filters, views = snap
         self._filters = dict(filters)
+        # undone brush: stop speculating on it — also when the restore
+        # reverts to an *older* σ on the same attr, not just to no σ
+        lf = self._last_filter
+        if lf is not None:
+            cur = self._filters.get(lf.attr)
+            if cur is None or cur[0].digest != self._predicate_of(lf).digest:
+                self._last_filter = None
         for n, (gb, meas, tog) in views.items():
             if n in self._views:
                 v = self._views[n]
@@ -595,17 +750,73 @@ class Session:
         self,
         budget_messages: int | None = None,
         budget_seconds: float | None = None,
+        speculate: int = 0,
     ) -> int:
         """Spend user think-time calibrating this session's pending vizzes.
 
         Most-recently-interacted viz first; preemptible — exhausting the
         budget keeps iterator positions and all materialized messages.
-        Returns the number of edges processed.
+        ``speculate=k`` then spends *remaining* think-time pre-materializing
+        the fan-out for up to ``k`` neighboring σ values of the most recent
+        ``SetFilter`` (adjacent brush windows / shifted sibling value sets),
+        so a follow-up brush on one of them is served entirely from the
+        prefetch cache.  Speculation only starts while the budget has slack
+        (calibration comes first); once started, a candidate fan-out runs to
+        completion — it is not edge-preemptible like calibration.  Returns
+        the number of calibration edges processed (speculative work is
+        reported via ``stats()`` instead).
         """
-        return self.scheduler.run(
+        t0 = time.perf_counter()
+        done = self.scheduler.run(
             budget_messages=budget_messages, budget_seconds=budget_seconds,
             session=self.id,
         )
+        budget_left = (
+            budget_seconds is None or time.perf_counter() - t0 < budget_seconds
+        ) and (budget_messages is None or done < budget_messages)
+        if speculate > 0 and budget_left:
+            self._speculate(speculate)
+        return done
+
+    def _speculate(self, k: int) -> int:
+        """Pre-execute the fan-out for up to ``k`` neighbor σ values of the
+        last SetFilter; park the absorbed results in the prefetch cache."""
+        ev = self._last_filter
+        if ev is None:
+            return 0
+        doms = self.catalog.domains()
+        items: list[tuple[str, Query, CJTEngine]] = []
+        saved = self._filters.get(ev.attr)
+        try:
+            for cand in speculate_filters(ev, doms[ev.attr], k):
+                # derive through the real contract with the candidate σ
+                # swapped in, so digests match the eventual real event's
+                self._filters[ev.attr] = (self._predicate_of(cand), cand.source)
+                for name in sorted(self._views):
+                    view = self._views[name]
+                    if not view.crossfilter or name == cand.source:
+                        continue
+                    q = self.derive(name)
+                    key = (name, q.digest)
+                    if (
+                        q.digest == self._current[name].digest
+                        or key in self._prefetched
+                    ):
+                        continue
+                    items.append(
+                        (name, q, self._treant.engine_for(q.ring_name, q.measure))
+                    )
+        finally:
+            if saved is None:
+                self._filters.pop(ev.attr, None)
+            else:
+                self._filters[ev.attr] = saved
+        if not items:
+            return 0
+        self._prefetched.update(self.scheduler.speculate(self.id, items))
+        while len(self._prefetched) > self.prefetch_capacity:
+            self._prefetched.pop(next(iter(self._prefetched)))
+        return len(items)
 
     # -- filters / introspection ----------------------------------------------
     @property
@@ -624,8 +835,30 @@ class Session:
             "scheduler_messages_total": self.scheduler.messages,
             "cross_viz_hits_total": self.store.cross_tag_hits,
             "undo_depth": len(self._undo),
+            "prefetched": len(self._prefetched),
+            "prefetch_hits": self.prefetch_hits,
+            "speculative_queries_total": self.scheduler.speculative_queries,
         }
 
     def close(self) -> None:
+        """Tear the session down without leaking store state (ROADMAP GC item).
+
+        Drops pending calibrations, *unpins* every base CJT pinned at open
+        (pins otherwise outlive the session forever — the store could never
+        evict them), and evicts the unpinned messages this session's
+        interactions produced (producer tags ``"{sid}:*"``).  Untagged
+        offline-calibration messages stay cached for other sessions; a
+        reopened identical dashboard re-pins the same signatures at
+        cache-hit speed.
+        """
         self.scheduler.drop(self.id)
+        for name in self._pinned_vizzes:
+            view = self._views.get(name)
+            if view is None:
+                continue
+            q = view.base
+            self._treant.engine_for(q.ring_name, q.measure).unpin_query(q)
+        self._pinned_vizzes.clear()
+        self.store.drop_producer(f"{self.id}:")
+        self._prefetched.clear()
         self._treant._sessions.pop(self.id, None)

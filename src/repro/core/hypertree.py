@@ -33,16 +33,39 @@ class JTree:
     empty_bags: frozenset[str] = frozenset()  # bags mapped to 𝕀
 
     # -- structure queries ---------------------------------------------------
+    # All queries below are pure functions of the (immutable) tree structure
+    # and sit on the per-interaction hot path (root choice + signature
+    # derivation evaluate them per edge per query), so they memoize into a
+    # lazily-created per-instance dict.  insert_empty_bag / attach_relation
+    # construct fresh JTree objects, never mutate one, so entries are stable.
+    def _memo(self) -> dict:
+        memo = self.__dict__.get("_memo_cache")
+        if memo is None:
+            object.__setattr__(self, "_memo_cache", memo := {})
+        return memo
+
     def neighbors(self, u: str) -> tuple[str, ...]:
         return self.adj[u]
 
     def separator(self, u: str, v: str) -> tuple[str, ...]:
-        su = set(self.bags[v])
-        return tuple(a for a in self.bags[u] if a in su)
+        memo = self._memo()
+        key = ("sep", u, v)
+        hit = memo.get(key)
+        if hit is None:
+            su = set(self.bags[v])
+            memo[key] = hit = tuple(a for a in self.bags[u] if a in su)
+        return hit
 
     def relations_of(self, bag: str) -> tuple[str, ...]:
         """X⁻¹(bag)."""
-        return tuple(sorted(r for r, b in self.mapping.items() if b == bag))
+        memo = self._memo()
+        key = ("rels", bag)
+        hit = memo.get(key)
+        if hit is None:
+            memo[key] = hit = tuple(
+                sorted(r for r, b in self.mapping.items() if b == bag)
+            )
+        return hit
 
     def directed_edges(self) -> list[tuple[str, str]]:
         out = []
@@ -64,9 +87,14 @@ class JTree:
         return tuple(out)
 
     def subtree_attrs(self, u: str, away_from: str | None) -> frozenset[str]:
-        return frozenset(
-            a for b in self.subtree_bags(u, away_from) for a in self.bags[b]
-        )
+        memo = self._memo()
+        key = ("sattrs", u, away_from)
+        hit = memo.get(key)
+        if hit is None:
+            memo[key] = hit = frozenset(
+                a for b in self.subtree_bags(u, away_from) for a in self.bags[b]
+            )
+        return hit
 
     def path(self, u: str, v: str) -> list[str]:
         parent = {u: None}
@@ -90,6 +118,11 @@ class JTree:
 
     def traversal_to_root(self, root: str) -> list[tuple[str, str]]:
         """Tra(root): directed edges (child→parent) in upward order (leaves first)."""
+        memo = self._memo()
+        key = ("tra", root)
+        hit = memo.get(key)
+        if hit is not None:
+            return list(hit)
         order: list[tuple[str, str]] = []
 
         def visit(u: str, parent: str | None):
@@ -99,6 +132,7 @@ class JTree:
                     order.append((v, u))
 
         visit(root, None)
+        memo[key] = tuple(order)
         return order
 
     # -- validation (paper §2: the three JT properties) ----------------------

@@ -27,6 +27,21 @@ it at hardware speed:
   Off-TPU the one-hot-matmul kernels do O(N·G) work, so they are cost-gated
   (``REPRO_PLAN_KERNEL_COST``): small bags exercise the kernels, huge fact
   bags stay on the O(N) lax path until a real TPU is attached.
+- **Batched plans.**  A crossfilter event fans one interaction out to every
+  linked viz, and each viz's warm-path work collapses to a single absorption
+  at the σ'd bag — N structurally-identical contractions that differ only in
+  γ (which group-by attr the incoming message carries) and σ masks.
+  ``PlanCache.run_sparse_batch`` stacks such siblings into ONE jitted call:
+  members are grouped by :func:`absorb_batch_key` (root relation, incoming
+  attr pattern with off-bag γ attrs canonicalized to positional
+  placeholders, σ arity, out-attr pattern), γ-carried dims are padded to the
+  group max with the ring's ⊕-identity (0̄ is ⊗-absorbing, so padding can
+  never leak into valid slots), and the single-element plan body is
+  ``jax.vmap``-ed over the stacked axis.  Stacking, padding and per-member
+  slicing all happen *inside* the traced function, so a whole fan-out costs
+  one dispatch instead of one per viz.  Kernel routing is unchanged: the
+  vmapped body still lowers f32 SUM/COUNT and tropical rows to
+  ``segment_aggregate`` under the same cost gate.
 """
 
 from __future__ import annotations
@@ -54,6 +69,18 @@ def _on_tpu() -> bool:
 def _kernel_cost_max() -> int:
     """Max one-hot-matmul work (N·G·V or G·B·A) routed to Pallas off-TPU."""
     return int(os.environ.get("REPRO_PLAN_KERNEL_COST", str(1 << 19)))
+
+
+def use_plans_default() -> bool:
+    """Env-gated default for compiled plans (CI matrix: REPRO_USE_PLANS=0/1
+    keeps the legacy un-jitted fallback path covered)."""
+    return os.environ.get("REPRO_USE_PLANS", "1").lower() not in ("0", "false")
+
+
+def batch_fanout_default() -> bool:
+    """Env-gated default for batched crossfilter fan-out (REPRO_BATCH_FANOUT);
+    benchmarks A/B the batched vs per-viz dispatch path through this knob."""
+    return os.environ.get("REPRO_BATCH_FANOUT", "1").lower() not in ("0", "false")
 
 
 def expand_rows_field(field: sr.Field, have: Sequence[str], want: Sequence[str],
@@ -92,6 +119,10 @@ class PlanStats:
     plan_hits: int = 0       # executions served by an existing compiled plan
     kernel_execs: int = 0    # executions that ran a Pallas kernel path
     fallback_execs: int = 0  # executions on the lax/einsum fallback path
+    # batched absorption plans (run_sparse_batch)
+    batched_execs: int = 0        # vmapped batched calls dispatched
+    batched_absorptions: int = 0  # absorptions served by those calls (Σ widths)
+    batch_width: int = 0          # widest batch observed (max, not a sum)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -107,7 +138,7 @@ class _Plan:
 # sparse-bag plan: gather ⊗ rowwise → σ row mask → segment-⊕ → reshape
 # ---------------------------------------------------------------------------
 
-def _build_sparse_plan(
+def _sparse_plan_fn(
     ring: sr.Semiring,
     rel_attrs: tuple[str, ...],
     doms: dict[str, int],
@@ -115,7 +146,9 @@ def _build_sparse_plan(
     pred_attrs: tuple[str, ...],
     out_attrs: tuple[str, ...],
     n: int,
-) -> _Plan:
+) -> tuple[Callable, bool]:
+    """The raw (un-jitted) single-contraction body shared by the scalar plan
+    (jit directly) and the batched plan (pad + stack + vmap, then jit)."""
     rel_set = set(rel_attrs)
     local_out = tuple(a for a in out_attrs if a in rel_set)
     total = int(np.prod([doms[a] for a in local_out])) if local_out else 1
@@ -200,7 +233,168 @@ def _build_sparse_plan(
         )
         return Factor(local_out + carried, field, ring).project_to(out_attrs)
 
+    return fn, use_kernel
+
+
+def _build_sparse_plan(
+    ring: sr.Semiring,
+    rel_attrs: tuple[str, ...],
+    doms: dict[str, int],
+    in_attrs_list: tuple[tuple[str, ...], ...],
+    pred_attrs: tuple[str, ...],
+    out_attrs: tuple[str, ...],
+    n: int,
+) -> _Plan:
+    fn, use_kernel = _sparse_plan_fn(
+        ring, rel_attrs, doms, in_attrs_list, pred_attrs, out_attrs, n
+    )
     return _Plan(fn=jax.jit(fn), uses_kernel=use_kernel)
+
+
+# ---------------------------------------------------------------------------
+# batched absorption plans: pad γ dims → stack → vmap, one dispatch per group
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AbsorbItem:
+    """One pending sparse-bag absorption, deferred so siblings can batch.
+
+    ``rel`` is the (single) relation of the absorption bag, ``vals`` its
+    per-row lift, ``incoming`` the cached/computed messages from every
+    neighbor, ``preds`` the σ placed on this bag, ``out_attrs`` the
+    separator-free absorption output (γ restricted to the subtree).
+    """
+
+    rel: object                      # relational.Relation
+    vals: sr.Field
+    incoming: tuple[Factor, ...]
+    preds: tuple[Predicate, ...]
+    out_attrs: tuple[str, ...]
+
+
+def _canon_absorption(item: AbsorbItem) -> tuple[tuple, tuple, dict[str, str]]:
+    """Canonicalize off-bag (γ-carried) attrs to positional placeholders.
+
+    Two absorptions batch iff they differ only in *which* off-bag attr each
+    structural slot carries (and its domain size) — e.g. sibling vizzes
+    grouping by ``airport_state`` vs ``month``.  Placeholders are assigned in
+    first-appearance order scanning incoming messages then out_attrs, so the
+    coincidence pattern (one attr appearing in several slots) is preserved.
+    """
+    rel_set = set(item.rel.attrs)
+    ph: dict[str, str] = {}
+
+    def c(a: str) -> str:
+        if a in rel_set:
+            return a
+        if a not in ph:
+            ph[a] = f"·{len(ph)}"
+        return ph[a]
+
+    in_canon = tuple(tuple(c(a) for a in m.attrs) for m in item.incoming)
+    out_canon = tuple(c(a) for a in item.out_attrs)
+    return in_canon, out_canon, ph
+
+
+def absorb_batch_key(ring: sr.Semiring, item: AbsorbItem) -> tuple:
+    """Grouping key for batchable absorptions (the *batch signature*).
+
+    Everything the shared (in_axes=None) plan inputs depend on must be here:
+    the relation version (row codes → in_idx/pred_codes/seg_idx), the rel
+    attr order and domains, σ attrs, the canonical incoming/out patterns and
+    the lift's field structure.  Placeholder domain sizes are deliberately
+    absent — they are padded per group and only key the *trace*.
+    """
+    in_canon, out_canon, _ = _canon_absorption(item)
+    rel = item.rel
+    return (
+        "sparse_batch", ring.name, rel.key, rel.attrs,
+        tuple(rel.domains[a] for a in rel.attrs), rel.num_rows,
+        in_canon, tuple(p.attr for p in item.preds), out_canon,
+        _field_struct(item.vals),
+    )
+
+
+def _pad_value(zero_leaf) -> float | bool:
+    """The constant ⊕-identity fill for one field leaf (identity fields are
+    constant-valued in every ring here: 0.0, ±inf, False)."""
+    flat = np.asarray(zero_leaf).reshape(-1)
+    return flat[0].item() if flat.size else 0.0
+
+
+def _build_batched_sparse_plan(
+    ring: sr.Semiring,
+    rel_attrs: tuple[str, ...],
+    doms: dict[str, int],
+    in_attrs_list: tuple[tuple[str, ...], ...],
+    pred_attrs: tuple[str, ...],
+    out_attrs: tuple[str, ...],
+    n: int,
+    member_dims: tuple[dict[str, int], ...],
+) -> _Plan:
+    """Compile B structurally-identical absorptions as ONE jitted call.
+
+    ``in_attrs_list``/``out_attrs`` use canonical placeholder names; ``doms``
+    maps placeholders to the *padded* (group-max) sizes; ``member_dims[i]``
+    maps placeholders to member i's actual sizes.  Padding, stacking and the
+    per-member output slicing all live inside the traced function, so the
+    host dispatches exactly one executable per batch — the whole point.
+    """
+    fn, use_kernel = _sparse_plan_fn(
+        ring, rel_attrs, doms, in_attrs_list, pred_attrs, out_attrs, n
+    )
+    nmembers = len(member_dims)
+    rel_set = set(rel_attrs)
+    pad_vals = [_pad_value(z) for z in jax.tree_util.tree_leaves(ring.zeros(()))]
+
+    def _stack(fields):
+        return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *fields)
+
+    def _pad_message(j: int, field: sr.Field) -> sr.Field:
+        m_attrs = in_attrs_list[j]
+        leaves, treedef = jax.tree_util.tree_flatten(field)
+        out = []
+        for leaf, t, pv in zip(leaves, ring.trailing, pad_vals):
+            pads = [
+                (0, (doms[a] - leaf.shape[k]) if a not in rel_set else 0)
+                for k, a in enumerate(m_attrs)
+            ] + [(0, 0)] * t
+            out.append(jnp.pad(leaf, pads, constant_values=pv)
+                       if any(p[1] for p in pads) else leaf)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def bfn(vals_list, in_fields_list, in_idx, pred_masks_list, pred_codes, seg_idx):
+        vals = _stack(vals_list)
+        in_fields = tuple(
+            _stack([_pad_message(j, member[j]) for member in in_fields_list])
+            for j in range(len(in_attrs_list))
+        )
+        pred_masks = tuple(
+            jnp.stack([pm[k] for pm in pred_masks_list])
+            for k in range(len(pred_attrs))
+        )
+        batched = jax.vmap(fn, in_axes=(0, 0, None, 0, None, None))(
+            vals, in_fields, in_idx, pred_masks, pred_codes, seg_idx
+        )
+        # slice each member's valid region back out of the padded stack
+        outs = []
+        leaves, treedef = jax.tree_util.tree_flatten(batched.field)
+        for i in range(nmembers):
+            sliced = []
+            for leaf, t in zip(leaves, ring.trailing):
+                idx = tuple(
+                    [i]
+                    + [slice(0, member_dims[i].get(a, doms[a]))
+                       for a in batched.attrs]
+                    + [slice(None)] * t
+                )
+                sliced.append(leaf[idx])
+            outs.append(Factor(
+                batched.attrs, jax.tree_util.tree_unflatten(treedef, sliced), ring
+            ))
+        return tuple(outs)
+
+    return _Plan(fn=jax.jit(bfn), uses_kernel=use_kernel)
 
 
 # ---------------------------------------------------------------------------
@@ -385,6 +579,94 @@ class PlanCache:
         )
         self._account(entry, traced, stats)
         return out
+
+    def run_sparse_batch(
+        self,
+        catalog,
+        items: Sequence[AbsorbItem],
+        stats_list: Sequence | None = None,
+    ) -> list[Factor]:
+        """Execute a group of batch-compatible absorptions as one vmapped call.
+
+        Every item must share the same :func:`absorb_batch_key` (the caller
+        groups); members differ only in γ-carried attrs/domains, σ mask
+        contents and incoming-factor values.  Returns per-member factors
+        bit-compatible with ``run_sparse`` on integer-exact data (padding is
+        the ⊕-identity, which ⊗ absorbs and ⊕ ignores).
+        """
+        assert len(items) >= 2, "batch of one: use run_sparse"
+        rel = items[0].rel
+        canons = [_canon_absorption(it) for it in items]
+        in_canon, out_canon, _ = canons[0]
+        member_dims = []
+        for it, (_, _, ph) in zip(items, canons):
+            adoms: dict[str, int] = {}
+            for m in it.incoming:
+                adoms.update(m.domains)
+            member_dims.append({p: adoms[a] for a, p in ph.items()})
+        # canonical member order (by γ-dim signature): the trace key bakes in
+        # the per-member dims positionally, so without sorting every
+        # permutation of the same sibling set (e.g. when prefetch hits carve
+        # different subsets out of a fan-out) would retrace + recompile
+        order = sorted(
+            range(len(items)), key=lambda i: tuple(sorted(member_dims[i].items()))
+        )
+        items = [items[o] for o in order]
+        member_dims = tuple(member_dims[o] for o in order)
+        if stats_list is not None:
+            stats_list = [stats_list[o] for o in order]
+        inverse = {o: i for i, o in enumerate(order)}
+        padded = {
+            p: max(md[p] for md in member_dims) for p in (member_dims[0] or {})
+        }
+        doms = dict(rel.domains)
+        doms.update(padded)
+        pred_attrs = tuple(p.attr for p in items[0].preds)
+        key = absorb_batch_key(self.ring, items[0]) + (
+            tuple(tuple(sorted(md.items())) for md in member_dims),
+        )
+        entry = self._plans.get(key)
+        traced = entry is None
+        if traced:
+            entry = _build_batched_sparse_plan(
+                self.ring, rel.attrs, doms, in_canon, pred_attrs, out_canon,
+                rel.num_rows, member_dims,
+            )
+            self._plans.put(key, entry)
+        rel_set = set(rel.attrs)
+        in_idx = tuple(
+            catalog.dev_flat_codes(rel, tuple(a for a in m.attrs if a in rel_set))[0]
+            if any(a in rel_set for a in m.attrs) else None
+            for m in items[0].incoming
+        )
+        pred_codes = tuple(
+            catalog.dev_flat_codes(rel, (p.attr,))[0] for p in items[0].preds
+        )
+        local_out = tuple(a for a in items[0].out_attrs if a in rel_set)
+        seg_idx, _ = catalog.dev_flat_codes(rel, local_out)
+        outs = entry.fn(
+            tuple(it.vals for it in items),
+            tuple(tuple(m.field for m in it.incoming) for it in items),
+            in_idx,
+            tuple(tuple(self.mask_dev(p) for p in it.preds) for it in items),
+            pred_codes,
+            seg_idx,
+        )
+        width = len(items)
+        self.stats.batched_execs += 1
+        self.stats.batched_absorptions += width
+        self.stats.batch_width = max(self.stats.batch_width, width)
+        results = []
+        for it, f, stats in zip(items, outs, stats_list or [None] * width):
+            # rename canonical placeholders back to the member's real attrs
+            results.append(Factor(it.out_attrs, f.field, self.ring))
+            self._account(entry, traced, stats)
+            traced = False  # one trace per batched call, not per member
+            if stats is not None:
+                stats.batched_absorptions += 1
+                stats.batch_width = max(stats.batch_width, width)
+        # undo the canonical sort: caller expects its own member order
+        return [results[inverse[o]] for o in range(width)]
 
     def run_dense(
         self,

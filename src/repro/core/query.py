@@ -127,6 +127,24 @@ class Query:
         )).encode())
         return h.hexdigest()[:16]
 
+    @functools.cached_property
+    def sig_key(self) -> str:
+        """γ-independent digest (``digest`` minus ``group_by``).
+
+        Proposition-2 signatures hash the annotated subtree and the
+        separator — never γ (the group-by only selects which carry a message
+        keeps).  Signature memos key on this so sibling crossfilter vizzes
+        (same σ, different γ) and Drill/Rollup variants share one signature
+        derivation instead of recomputing identical hashes per viz.
+        """
+        h = hashlib.sha1()
+        h.update(repr((
+            self.ring_name, self.measure,
+            tuple(p.digest for p in self.predicates),
+            self.rel_versions, tuple(sorted(self.removed)), self.lift_tag,
+        )).encode())
+        return h.hexdigest()[:16]
+
     def annotation_summary(self) -> str:  # pragma: no cover — debugging aid
         parts = [f"γ={list(self.group_by)}"]
         parts += [f"σ({p.label or p.attr})" for p in self.predicates]

@@ -41,6 +41,7 @@ from typing import Callable, Mapping
 from repro.relational.relation import Catalog, Delta, Relation
 from . import semiring as sr
 from .calibration import CJTEngine, DeltaStats, ExecStats, MessageStore
+from .plans import PlanStats, batch_fanout_default, use_plans_default
 from .dashboard import (
     ApplyResult,
     DashboardSpec,
@@ -78,14 +79,23 @@ class Treant:
         lifts: Mapping[str, Callable] | None = None,
         max_cache_bytes: int | None = None,
         dense_rows_threshold: int = 0,
-        use_plans: bool = True,
+        use_plans: bool | None = None,
+        batch_fanout: bool | None = None,
     ):
+        # None → env defaults: REPRO_USE_PLANS gates compiled plans (the CI
+        # matrix runs both legs), REPRO_BATCH_FANOUT gates the vmapped
+        # sibling-absorption batching (benchmarks A/B against per-viz dispatch)
+        if use_plans is None:
+            use_plans = use_plans_default()
+        if batch_fanout is None:
+            batch_fanout = batch_fanout_default()
         self.catalog = catalog
         self.jt = jt or jt_from_catalog(catalog)
         self.store = MessageStore(max_bytes=max_cache_bytes)
         self._lifts = dict(lifts or {})
         self._dense_rows_threshold = dense_rows_threshold
         self._use_plans = use_plans
+        self.batch_fanout = batch_fanout
         self.engine = CJTEngine(
             self.jt, catalog, ring, lifts=self._lifts, store=self.store,
             dense_rows_threshold=dense_rows_threshold, use_plans=use_plans,
@@ -205,13 +215,28 @@ class Treant:
         }
         all_stats: list[DeltaStats] = []
         maintained = fallbacks = 0
+        fallback_digests: set[str] = set()
         for q in todo.values():
             _, st = self.engine_for(q.ring_name, q.measure).apply_delta(q, delta)
             all_stats.append(st)
             fallbacks += int(st.fallback)
+            if st.fallback:
+                fallback_digests.add(q.digest)
             # a query the update can't even reach (relation removed / outside
             # the JT) is neither maintained nor a fallback
             maintained += int(not st.fallback and st.delta_messages > 0)
+        # fallback CJTs get no pin migration (apply_delta maintained nothing),
+        # but their base queries are version-bumped below — a later
+        # Session.close would then unpin the *new* sigs (no-ops) and leak the
+        # old-version pins forever.  Release them now, while the pre-bump
+        # base still derives the pinned signatures; the recalibration queued
+        # on the scheduler below rebuilds the CJT unpinned.
+        for sess in self._sessions.values():
+            for viz in sorted(sess._pinned_vizzes):
+                base = sess._views[viz].base
+                if base.digest in fallback_digests:
+                    self.engine_for(base.ring_name, base.measure).unpin_query(base)
+                    sess._pinned_vizzes.discard(viz)
 
         def bump(q: Query) -> Query:
             if q.version_of(delta.relation) == delta.old_version:
@@ -225,9 +250,12 @@ class Treant:
             sess._current = {v: bump(q) for v, q in sess._current.items()}
         # every pending calibration targets a stale snapshot: invalidate and
         # re-queue the sessions' (bumped) current queries — maintained ones
-        # complete in a few cache hits, fallbacks actually recalibrate
+        # complete in a few cache hits, fallbacks actually recalibrate.
+        # Prefetched results snapshot the old versions too: their digests can
+        # never be served again, so drop them rather than let them linger.
         self.scheduler.clear()
         for sess in self._sessions.values():
+            sess._prefetched.clear()
             for viz, q in sess._current.items():
                 self.scheduler.schedule(sess.id, viz, q, self.engine_for(q.ring_name, q.measure))
         return UpdateResult(
@@ -277,7 +305,19 @@ class Treant:
             "scheduler": self.scheduler.stats(),
             "sessions": len(self._sessions),
         }
-        if self.engine.plans is not None:
-            out["plans"] = self.engine.plans.stats.as_dict()
-            out["plans_cached"] = len(self.engine.plans)
+        # aggregate plan counters over the primary AND sibling-ring engines
+        # (multi-ring dashboards execute on several PlanCaches); batch_width
+        # is a max, everything else sums
+        caches = [e.plans for e in self._engines.values() if e.plans is not None]
+        if caches:
+            agg = PlanStats()
+            for c in caches:
+                for k, v in c.stats.as_dict().items():
+                    setattr(
+                        agg, k,
+                        max(agg.batch_width, v) if k == "batch_width"
+                        else getattr(agg, k) + v,
+                    )
+            out["plans"] = agg.as_dict()
+            out["plans_cached"] = sum(len(c) for c in caches)
         return out

@@ -184,8 +184,10 @@ def test_new_predicate_mask_reuses_compiled_plan():
 
 
 def test_delta_maintenance_runs_through_plans():
+    # explicit use_plans=True: the REPRO_USE_PLANS=0 CI leg must not turn
+    # this into a plans-off engine (the assertions below count kernel execs)
     cat = star_catalog(seed=23)
-    tre = Treant(cat, ring=sr.SUM)
+    tre = Treant(cat, ring=sr.SUM, use_plans=True)
     q = Query.make(cat, ring="sum", measure=("F", "m"), group_by=("c",))
     tre.register_dashboard("viz", q)
     rng = np.random.default_rng(29)
