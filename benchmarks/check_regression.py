@@ -1,0 +1,254 @@
+"""CI perf-regression gate: compare a fresh BENCH_dashboard.json against the
+committed baseline snapshot in ``benchmarks/baselines/``.
+
+The smoke bench uploads ``BENCH_*.json`` artifacts on every CI run, but until
+this gate nothing ever *compared* them — a silent warm-event regression
+could land unnoticed.  This script fails (exit 1) when a gated metric
+regresses beyond its per-metric tolerance:
+
+- latency metrics (``warm_event``) regress when they grow;
+- speedup-ratio metrics (``event_speedup``, ``prefetch_speedup``, …)
+  regress when they shrink.
+
+It is **scale-aware**: ratio metrics that only separate from noise at full
+scale (``batch_speedup`` is ~1.0 at the CI smoke scale 0.05, where per-event
+work is sub-millisecond) carry a ``min_scale`` and are skipped below it —
+the nightly full-scale workflow is where they are recorded.
+
+Usage::
+
+    python -m benchmarks.check_regression                 # CI gate
+    python -m benchmarks.check_regression --self-test     # prove it fires
+    python -m benchmarks.check_regression --write-baseline  # refresh snapshot
+
+Baseline refresh procedure (see ROADMAP.md): after an *intentional* perf
+change, regenerate the smoke-scale summary on the matrix leg and commit it::
+
+    REPRO_BENCH_SCALE=0.05 REPRO_USE_PLANS=1 \
+        PYTHONPATH=src python -m benchmarks.run dashboard
+    PYTHONPATH=src python -m benchmarks.check_regression --write-baseline
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import shutil
+import sys
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    """Gate spec for one BENCH metric (values are the emitted us_per_call
+    column; ratio metrics are emitted as ratio/1e6 so the value IS the
+    ratio)."""
+
+    lower_is_better: bool
+    tolerance: float          # fractional regression allowed (0.20 = 20%)
+    min_scale: float = 0.0    # skip below this REPRO_BENCH_SCALE
+
+
+# Per-metric tolerances.  The three headline metrics fail the PR on >20%
+# regression; ratio metrics meaningful only at full scale are nightly-gated.
+GATED: dict[str, Metric] = {
+    "crossfilter/warm_event": Metric(lower_is_better=True, tolerance=0.20),
+    "crossfilter/event_speedup": Metric(lower_is_better=False, tolerance=0.20),
+    "crossfilter/prefetch_speedup": Metric(lower_is_better=False, tolerance=0.20),
+    "crossfilter/batch_speedup": Metric(
+        lower_is_better=False, tolerance=0.20, min_scale=1.0
+    ),
+    "crossfilter/offline_batch_speedup": Metric(
+        lower_is_better=False, tolerance=0.20, min_scale=1.0
+    ),
+}
+
+
+def plans_leg() -> str:
+    return "1" if os.environ.get("REPRO_USE_PLANS", "1").lower() not in (
+        "0", "false"
+    ) else "0"
+
+
+def default_baseline(scale: float) -> str:
+    """Baselines are keyed by plans leg AND scale band: absolute latencies
+    at smoke scale are not comparable to full scale, and the full-scale
+    snapshot (nightly gate) holds only the host-robust ratio metrics."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    suffix = ".scale1" if scale >= 1.0 else ""
+    return os.path.join(
+        here, "baselines", f"BENCH_dashboard.plans{plans_leg()}{suffix}.json"
+    )
+
+
+def compare(
+    fresh: dict, baseline: dict, scale: float
+) -> tuple[list[str], list[str]]:
+    """Returns (failures, report lines)."""
+    failures: list[str] = []
+    report: list[str] = []
+    for name, spec in GATED.items():
+        if scale < spec.min_scale:
+            report.append(
+                f"SKIP  {name}: scale {scale} < {spec.min_scale} "
+                f"(full-scale-only ratio metric)"
+            )
+            continue
+        if name not in baseline:
+            report.append(f"SKIP  {name}: not in baseline")
+            continue
+        if name not in fresh:
+            failures.append(f"{name}: missing from fresh summary")
+            report.append(f"FAIL  {name}: missing from fresh summary")
+            continue
+        base, now = float(baseline[name]), float(fresh[name])
+        if spec.lower_is_better:
+            limit = base * (1.0 + spec.tolerance)
+            bad = now > limit
+            delta = (now - base) / base if base else 0.0
+        else:
+            limit = base * (1.0 - spec.tolerance)
+            bad = now < limit
+            delta = (base - now) / base if base else 0.0
+        verdict = "FAIL" if bad else "ok"
+        report.append(
+            f"{verdict:>4}  {name}: baseline={base:.3f} fresh={now:.3f} "
+            f"limit={limit:.3f} (regression {delta * 100:+.1f}%, "
+            f"tol {spec.tolerance * 100:.0f}%)"
+        )
+        if bad:
+            failures.append(
+                f"{name}: {now:.3f} vs baseline {base:.3f} "
+                f"(> {spec.tolerance * 100:.0f}% regression)"
+            )
+    return failures, report
+
+
+def self_test(fresh: dict | None, baseline: dict | None) -> int:
+    """Dry run proving the gate fires: a deliberate tolerance-violating
+    baseline edit must produce failures, and an in-tolerance wiggle must
+    not.  Uses the real summaries when available, synthetic ones otherwise
+    (so the self-test runs before any bench has ever executed)."""
+    if not baseline:
+        baseline = {
+            "crossfilter/warm_event": 20_000.0,
+            "crossfilter/event_speedup": 50.0,
+            "crossfilter/prefetch_speedup": 6.0,
+            "crossfilter/batch_speedup": 1.6,
+            "crossfilter/offline_batch_speedup": 1.6,
+        }
+    if not fresh:
+        fresh = dict(baseline)
+    ok = True
+
+    # 1) identical summaries: must pass at every scale
+    failures, _ = compare(dict(baseline), dict(baseline), scale=1.0)
+    if failures:
+        print(f"self-test: clean comparison failed: {failures}")
+        ok = False
+
+    # 2) deliberate tolerance-violating edit on each gated metric: must fail
+    for name, spec in GATED.items():
+        if name not in baseline:
+            continue
+        bad = dict(fresh) if name in fresh else dict(baseline)
+        factor = (1.0 + 2 * spec.tolerance) if spec.lower_is_better else (
+            1.0 - 2 * spec.tolerance
+        )
+        bad[name] = float(baseline[name]) * factor
+        failures, _ = compare(bad, baseline, scale=max(spec.min_scale, 1.0))
+        if not any(name in f for f in failures):
+            print(f"self-test: gate did NOT fire on a 2x-tolerance "
+                  f"regression of {name}")
+            ok = False
+        # within tolerance: must not fire
+        mild = dict(bad)
+        mild_factor = (1.0 + spec.tolerance / 2) if spec.lower_is_better else (
+            1.0 - spec.tolerance / 2
+        )
+        mild[name] = float(baseline[name]) * mild_factor
+        failures, _ = compare(mild, baseline, scale=max(spec.min_scale, 1.0))
+        if any(name in f for f in failures):
+            print(f"self-test: gate fired inside tolerance for {name}")
+            ok = False
+
+    # 3) scale-awareness: a full-scale-only metric must be skipped (not
+    # failed) at the smoke scale even when catastrophically regressed
+    bad = dict(baseline)
+    bad["crossfilter/batch_speedup"] = 0.01
+    failures, _ = compare(bad, baseline, scale=0.05)
+    if any("batch_speedup" in f for f in failures):
+        print("self-test: full-scale-only metric gated at smoke scale")
+        ok = False
+
+    print(f"self-test: {'PASS — the gate fires' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", default="BENCH_dashboard.json",
+                    help="freshly produced bench summary")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline (default: benchmarks/baselines/"
+                         "BENCH_dashboard.plans<REPRO_USE_PLANS>.json)")
+    ap.add_argument("--scale", type=float,
+                    default=float(os.environ.get("REPRO_BENCH_SCALE", "1.0")),
+                    help="bench scale the fresh summary was produced at")
+    ap.add_argument("--self-test", action="store_true",
+                    help="prove the gate fires on a deliberate regression")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="copy --fresh over the baseline (refresh procedure)")
+    args = ap.parse_args()
+
+    baseline_path = args.baseline or default_baseline(args.scale)
+
+    def load(path):
+        if not os.path.exists(path):
+            return None
+        with open(path) as fh:
+            return json.load(fh)
+
+    if args.self_test:
+        return self_test(load(args.fresh), load(baseline_path))
+
+    if args.write_baseline:
+        if args.scale >= 1.0:
+            print("the full-scale baseline is a hand-curated ratio subset — "
+                  "edit it directly (see benchmarks/baselines/README.md)")
+            return 1
+        if not os.path.exists(args.fresh):
+            print(f"no fresh summary at {args.fresh}; run the bench first")
+            return 1
+        os.makedirs(os.path.dirname(baseline_path), exist_ok=True)
+        shutil.copyfile(args.fresh, baseline_path)
+        print(f"baseline refreshed: {baseline_path}")
+        return 0
+
+    fresh = load(args.fresh)
+    if fresh is None:
+        print(f"no fresh summary at {args.fresh}; run "
+              f"`python -m benchmarks.run dashboard` first")
+        return 1
+    baseline = load(baseline_path)
+    if baseline is None:
+        # a missing baseline is not a regression (e.g. a brand-new matrix
+        # leg) — but say so loudly and point at the refresh procedure
+        print(f"WARNING: no baseline at {baseline_path}; skipping the gate. "
+              f"Commit one via --write-baseline.")
+        return 0
+    failures, report = compare(fresh, baseline, args.scale)
+    print(f"perf-regression gate: {args.fresh} vs {baseline_path} "
+          f"(scale {args.scale})")
+    for line in report:
+        print(f"  {line}")
+    if failures:
+        print(f"REGRESSION: {len(failures)} gated metric(s) out of tolerance")
+        return 1
+    print("gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

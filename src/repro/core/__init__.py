@@ -7,7 +7,9 @@ from .hypertree import (  # noqa: F401
     is_acyclic, CyclicSchemaError,
 )
 from .query import Query  # noqa: F401
-from .calibration import CJTEngine, MessageStore, ExecStats, DeltaStats  # noqa: F401
+from .calibration import (  # noqa: F401
+    CalibrationPlan, CJTEngine, MessageStore, ExecStats, DeltaStats,
+)
 from .plans import PlanCache, PlanStats  # noqa: F401
 from .dashboard import (  # noqa: F401
     ApplyResult, ClearFilter, DashboardSpec, Drill, InteractionResult,

@@ -58,8 +58,10 @@ plan hit/trace/kernel counters surface in ``ExecStats`` and
 from __future__ import annotations
 
 import bisect
+import contextlib
 import dataclasses
 import hashlib
+import time
 from collections import OrderedDict
 from typing import Callable, Iterable, Mapping, Sequence
 
@@ -71,7 +73,14 @@ from repro.relational.relation import LRU, Catalog, Delta, Predicate, Relation, 
 from . import semiring as sr
 from .factor import Factor, contract, ones_factor
 from .hypertree import JTree
-from .plans import AbsorbItem, PlanCache, absorb_batch_key, expand_rows_field
+from .plans import (
+    AbsorbItem,
+    PlanCache,
+    absorb_batch_key,
+    batch_calibration_default,
+    calibration_union_budget,
+    expand_rows_field,
+)
 from .query import Query
 
 
@@ -258,14 +267,15 @@ class MessageStore:
             self.misses -= 1  # probe, not a serving miss
             return None
         new = old.add(delta)
-        # migrate the whole pin refcount (several sessions may hold it); a
-        # pin held only through a wider-γ variant contributes one reference.
-        # Pin BEFORE put so a byte-bounded store cannot evict the new entry
-        # inside put()'s eviction sweep (same pin-first discipline as
-        # calibrate_iter).
+        # migrate the whole DIRECT pin refcount (several sessions may hold
+        # it).  A message pinned only through a wider-γ variant migrates
+        # when that wider query is itself maintained — minting a fresh
+        # direct pin here would orphan it (no holder ever unpins a sig it
+        # never pinned; with union-carry calibration every maintained
+        # narrow query would leak one pin per update).  Pin BEFORE put so a
+        # byte-bounded store cannot evict the new entry inside put()'s
+        # eviction sweep (same pin-first discipline as calibrate_iter).
         moved = self._pinned.pop(self.full_sig(old_base, gamma), 0)
-        if moved == 0 and self.is_pinned(old_base, gamma):
-            moved = 1
         if moved:
             new_sig = self.full_sig(new_base, gamma)
             self._pinned[new_sig] = self._pinned.get(new_sig, 0) + moved
@@ -382,6 +392,13 @@ class ExecStats:
     # realized Steiner tree (§3.4.2): bags touched by recomputed messages
     # plus the absorption root — 1 when everything was served from cache
     steiner_size: int = 0
+    # level-batched calibration: vmapped level-batch calls this query's
+    # calibration rode (and the widest), plus how many message dispatches the
+    # pass issued in total — per-edge: one per computed message; batched: one
+    # per level group (a batch dispatch is attributed to its first member)
+    level_batched_execs: int = 0
+    level_batch_width: int = 0
+    calibration_dispatches: int = 0
 
 
 @dataclasses.dataclass
@@ -393,6 +410,35 @@ class DeltaStats:
     edges_maintained: int = 0    # cached messages updated as old ⊕ Δ
     edges_skipped: int = 0       # outward edges with nothing cached to maintain
     fallback: bool = False       # ring cannot absorb the delta (e.g. MIN delete)
+
+
+@dataclasses.dataclass
+class CalibrationPlan:
+    """Parked position of one query's level-synchronous calibration pass.
+
+    ``levels`` is the JT's level schedule for ``root`` (upward then downward;
+    see ``JTree.calibration_levels``); ``pos``/``offset`` track progress at
+    level / intra-level granularity, so the pass can be resumed by either the
+    batched level executor or the per-edge budget stepper — both leave every
+    already-materialized message servable (§4.2.1 preemptibility).
+    """
+
+    query: Query
+    placement: Mapping[str, tuple[Predicate, ...]]
+    root: str
+    levels: tuple[tuple[tuple[str, str], ...], ...]
+    pin: bool = False
+    pos: int = 0      # completed levels
+    offset: int = 0   # edges completed inside levels[pos]
+
+    @property
+    def done(self) -> bool:
+        return self.pos >= len(self.levels)
+
+    def edges_left(self) -> int:
+        if self.done:
+            return 0
+        return sum(len(lv) for lv in self.levels[self.pos:]) - self.offset
 
 
 class CJTEngine:
@@ -408,6 +454,7 @@ class CJTEngine:
         dense_rows_threshold: int = 0,
         use_plans: bool = True,
         plan_cache: PlanCache | None = None,
+        batch_calibration: bool | None = None,
     ):
         self.jt = jt
         self.catalog = catalog
@@ -424,6 +471,12 @@ class CJTEngine:
                 f"plan_cache ring {plan_cache.ring.name!r} != engine ring {ring.name!r}"
             )
         self.plans = (plan_cache or PlanCache(ring)) if use_plans else None
+        # level-batched calibration passes (None → REPRO_BATCH_CALIBRATION);
+        # without compiled plans the flag is inert and calibration degrades to
+        # the per-edge loop
+        if batch_calibration is None:
+            batch_calibration = batch_calibration_default()
+        self.batch_calibration = batch_calibration
         # Prop-2 signature memo, LRU-bounded: keyed by (query digest, edge),
         # so a long-lived session's interaction stream cannot leak memory
         self._sig_memo: LRU = LRU(capacity=8192)
@@ -639,14 +692,20 @@ class CJTEngine:
         """Factorized sparse path: gather ⊗ rowwise, segment-⊕ to out_attrs.
 
         With plans enabled this is one compiled executable re-run with
-        device-cached codes; the body below is the un-jitted reference path.
+        device-cached codes; ``_sparse_reference`` is the un-jitted reference
+        path (also the tiered-compile eager leg of batched calibration).
         """
-        ring = self.ring
         vals = self._lift(q, rel)  # leaves: (N, *trailing)
         if self.plans is not None:
             return self.plans.run_sparse(
                 self.catalog, rel, vals, incoming, preds, tuple(out_attrs), stats
             )
+        return self._sparse_reference(rel, vals, incoming, preds, out_attrs)
+
+    def _sparse_reference(
+        self, rel: Relation, vals: sr.Field, incoming, preds, out_attrs
+    ) -> Factor:
+        ring = self.ring
         n = rel.num_rows
         carried: list[str] = []
         carried_dims: list[int] = []
@@ -896,8 +955,16 @@ class CJTEngine:
             jax.block_until_ready([f.field for f, _ in outs])
         return outs
 
-    def calibrate(self, q: Query, root: str | None = None, pin: bool = False) -> ExecStats:
+    def calibrate(
+        self, q: Query, root: str | None = None, pin: bool = False,
+        batch: bool | None = None,
+    ) -> ExecStats:
         stats = ExecStats()
+        if self._batch_enabled(batch):
+            plan = self.calibration_plan(q, root=root, pin=pin)
+            while not plan.done:
+                self.run_calibration_level([plan], [stats])
+            return stats
         for _ in self.calibrate_iter(q, root=root, pin=pin, stats=stats):
             pass
         return stats
@@ -908,20 +975,297 @@ class CJTEngine:
         """Algorithm 1: upward then downward passes; yields after each edge.
 
         Preemptible: abandoning the iterator keeps all already-materialized
-        messages in the store (think-time calibration, §4.2.1).
+        messages in the store (think-time calibration, §4.2.1).  This is the
+        per-edge reference loop; see ``calibrate_levels_iter`` for the
+        level-batched form.
         """
         placement = self.place_predicates(q)
         root = root or self.choose_root(q, placement)
         upward = self.jt.traversal_to_root(root)
         downward = [(v, u) for (u, v) in reversed(upward)]
+        stats = stats if stats is not None else ExecStats()
         for (u, v) in upward + downward:
             if pin:
                 # pin BEFORE materializing so a tight LRU can't evict the
                 # message between put() and pin()
                 base = self.edge_sig(q, u, v, placement)
                 self.store.pin(base, self.gamma_carry(q, u, v))
+            before = stats.messages_computed
             self.message(q, u, v, placement, stats)
+            self._count_dispatches(stats, stats.messages_computed - before)
             yield (u, v)
+
+    # -- level-batched calibration (think-time batching, §4.2.1) ---------------
+    def _batch_enabled(self, batch: bool | None = None) -> bool:
+        if batch is None:
+            batch = self.batch_calibration
+        return bool(batch) and self.plans is not None
+
+    def _count_dispatches(self, stats: ExecStats | None, k: int) -> None:
+        """Account ``k`` calibration message dispatches (per-edge: one per
+        computed message; batched: one per level group)."""
+        if k <= 0:
+            return
+        if stats is not None:
+            stats.calibration_dispatches += k
+        if self.plans is not None:
+            self.plans.stats.calibration_dispatches += k
+
+    def calibration_plan(
+        self, q: Query, root: str | None = None, pin: bool = False
+    ) -> CalibrationPlan:
+        """Derive the level-synchronous schedule for one calibration pass."""
+        placement = self.place_predicates(q)
+        root = root or self.choose_root(q, placement)
+        return CalibrationPlan(
+            q, placement, root, self.jt.calibration_levels(root), pin
+        )
+
+    def step_calibration(
+        self, plan: CalibrationPlan, max_edges: int | None = None, stats=None,
+        deadline: float | None = None,
+    ) -> int:
+        """Advance a parked pass edge-by-edge (exact budget granularity).
+
+        The scheduler's budgeted path: level batching would overshoot a
+        tight message budget, so budgeted runs step single messages and
+        park mid-level — the level executor resumes from the same position.
+        ``deadline`` (a ``time.perf_counter`` timestamp) is re-checked after
+        every edge, so a seconds budget preempts without the caller having
+        to re-enter (and re-prioritize) per edge.
+        """
+        n = 0
+        stats = stats if stats is not None else ExecStats()
+        while not plan.done and (max_edges is None or n < max_edges):
+            u, v = plan.levels[plan.pos][plan.offset]
+            if plan.pin:
+                base = self.edge_sig(plan.query, u, v, plan.placement)
+                self.store.pin(base, self.gamma_carry(plan.query, u, v))
+            before = stats.messages_computed
+            self.message(plan.query, u, v, plan.placement, stats)
+            self._count_dispatches(stats, stats.messages_computed - before)
+            plan.offset += 1
+            n += 1
+            if plan.offset >= len(plan.levels[plan.pos]):
+                plan.pos += 1
+                plan.offset = 0
+            if deadline is not None and time.perf_counter() >= deadline:
+                break
+        return n
+
+    @contextlib.contextmanager
+    def _tagged(self, tag: str | None):
+        """Temporarily set the store's producer tag (cross-viz accounting)."""
+        if tag is None:
+            yield
+            return
+        old = self.store.tag
+        self.store.tag = tag
+        try:
+            yield
+        finally:
+            self.store.tag = old
+
+    def _message_item(self, q: Query, u: str, v: str, placement, stats, tag) -> AbsorbItem | None:
+        """Build the deferred batch item for message Y(u→v), or None when the
+        bag takes the dense path (then the caller computes directly)."""
+        if self.plans is None:
+            return None
+        rel_names = [r for r in self.jt.relations_of(u) if r not in q.removed]
+        if len(rel_names) != 1:
+            return None
+        rel = self.catalog.get(rel_names[0], q.version_of(rel_names[0]))
+        if rel.num_rows <= self.dense_rows_threshold:
+            return None
+        gamma = self.gamma_carry(q, u, v)
+        out_attrs = tuple(dict.fromkeys(self.jt.separator(u, v) + gamma))
+        before = stats.messages_computed if stats else 0
+        with self._tagged(tag):
+            # previous levels put these; recursion recomputes an evicted one
+            incoming = tuple(
+                self.message(q, i, u, placement, stats)
+                for i in self.jt.neighbors(u) if i != v
+            )
+        if stats:
+            self._count_dispatches(stats, stats.messages_computed - before)
+            stats.rows_scanned += rel.num_rows
+        return AbsorbItem(
+            rel=rel, vals=self._lift(q, rel), incoming=incoming,
+            preds=placement.get(u, ()), out_attrs=out_attrs,
+        )
+
+    def run_calibration_level(
+        self,
+        plans: Sequence[CalibrationPlan],
+        stats_list: Sequence[ExecStats] | None = None,
+        tags: Sequence[str | None] | None = None,
+    ) -> int:
+        """Advance every unfinished plan by one level, batching across plans.
+
+        All messages inside one level are independent, so the level executes
+        as a unit: duplicates across sibling plans (equal Prop-2 signature +
+        γ) materialize once, messages sharing an ``absorb_batch_key`` batch
+        signature execute as ONE vmapped jitted call
+        (``PlanCache.run_message_batch`` — γ-domain padding with the
+        ⊕-identity, exactly like batched absorption), and dense/densified
+        bags fall back to the per-edge message path.  Returns the number of
+        edges advanced; a partially-stepped level (``plan.offset``) is
+        finished first.
+        """
+        live = [i for i, p in enumerate(plans) if not p.done]
+        if not live:
+            return 0
+        if stats_list is None:
+            stats_list = [ExecStats() for _ in plans]
+        n = 0
+        todo: list[tuple[int, str, str, str, tuple[str, ...]]] = []
+        for i in live:
+            p = plans[i]
+            level = p.levels[p.pos][p.offset:]
+            for (u, v) in level:
+                base = self.edge_sig(p.query, u, v, p.placement)
+                gamma = self.gamma_carry(p.query, u, v)
+                if p.pin:
+                    # pin-before-materialize, as in calibrate_iter
+                    self.store.pin(base, gamma)
+                todo.append((i, u, v, base, gamma))
+            p.pos += 1
+            p.offset = 0
+            n += len(level)
+        deferred: list[tuple[int, str, str, str, tuple[str, ...], AbsorbItem]] = []
+        pending_sigs: set[str] = set()
+        for i, u, v, base, gamma in todo:
+            st = stats_list[i]
+            tag = tags[i] if tags is not None else None
+            p = plans[i]
+            with self._tagged(tag):
+                cached = self.store.get(base, gamma)
+            if cached is not None:
+                st.messages_reused += 1
+                continue
+            if self.store.full_sig(base, gamma) in pending_sigs:
+                # a sibling plan materializes this exact message below
+                st.messages_reused += 1
+                continue
+            item = self._message_item(p.query, u, v, p.placement, st, tag)
+            if item is None:
+                # dense/densified fallback goes through message(), which
+                # re-probes the sig our level probe above already counted —
+                # compensate so miss accounting matches the per-edge loop
+                self.store.misses -= 1
+                before = st.messages_computed
+                with self._tagged(tag):
+                    self.message(p.query, u, v, p.placement, st)
+                self._count_dispatches(st, st.messages_computed - before)
+                continue
+            pending_sigs.add(self.store.full_sig(base, gamma))
+            deferred.append((i, u, v, base, gamma, item))
+        groups: dict[tuple, list] = {}
+        for rec in deferred:
+            groups.setdefault(absorb_batch_key(self.ring, rec[5]), []).append(rec)
+        for members in groups.values():
+            sts = [stats_list[m[0]] for m in members]
+            if len(members) == 1:
+                _, _, _, _, _, item = members[0]
+                fs = [self.plans.run_sparse(
+                    self.catalog, item.rel, item.vals, list(item.incoming),
+                    list(item.preds), item.out_attrs, sts[0],
+                )]
+            else:
+                fs = self.plans.run_message_batch(
+                    self.catalog, [m[5] for m in members], sts,
+                )
+            self._count_dispatches(sts[0], 1)
+            for (i, u, v, base, gamma, _), f in zip(members, fs):
+                st = stats_list[i]
+                tag = tags[i] if tags is not None else None
+                with self._tagged(tag):
+                    self.store.put(base, gamma, f)
+                st.messages_computed += 1
+                st.recomputed_edges.append((u, v))
+        return n
+
+    def calibrate_levels_iter(
+        self, q: Query, root: str | None = None, pin: bool = False, stats=None
+    ) -> Iterable[tuple[tuple[str, str], ...]]:
+        """Level-batched Algorithm 1: yields the edge tuple of each completed
+        level (upward levels deepest-first, then downward).  Preemptible at
+        level granularity — abandoning the iterator keeps every completed
+        level's messages servable (§4.2.1)."""
+        plan = self.calibration_plan(q, root=root, pin=pin)
+        stats_list = [stats if stats is not None else ExecStats()]
+        while not plan.done:
+            level = plan.levels[plan.pos]
+            self.run_calibration_level([plan], stats_list)
+            yield level
+
+    def _gamma_lanes(self, gamma: Sequence[str]) -> int:
+        lanes = 1
+        for a in gamma:
+            lanes *= self.jt.domains.get(a, 1)
+        return lanes
+
+    def _union_carry(self, queries: Sequence[Query]) -> list[Query]:
+        """Fuse same-``sig_key`` queries into union-γ calibration passes.
+
+        One message carrying γ₁∪γ₂ serves both queries: Prop-2 base
+        signatures are γ-independent, and the store narrows a wider-γ cached
+        message by ⊕-marginalization on lookup (Σ-compensation, §3.4.2) — so
+        calibrating the union calibrates every member.  Greedy first-fit
+        bounded by ``calibration_union_budget()`` caps the γ-domain product
+        of the widest message a fused pass materializes.
+        """
+        budget = calibration_union_budget()
+        slots: list[tuple[str, Query, tuple[str, ...]]] = []
+        for q in queries:
+            placed = False
+            for j, (sk, rep, union) in enumerate(slots):
+                if sk != q.sig_key:
+                    continue
+                merged = tuple(dict.fromkeys(union + q.group_by))
+                if merged == union or self._gamma_lanes(merged) <= budget:
+                    slots[j] = (sk, rep, merged)
+                    placed = True
+                    break
+            if not placed:
+                slots.append((q.sig_key, q, tuple(q.group_by)))
+        out, seen = [], set()
+        for _, rep, union in slots:
+            eff = rep.with_group_by(*union)
+            if eff.digest not in seen:
+                seen.add(eff.digest)
+                out.append(eff)
+        return out
+
+    def calibrate_many(
+        self, queries: Sequence[Query], pin: bool = False,
+        batch: bool | None = None,
+    ) -> tuple[list[ExecStats], list[Query]]:
+        """Calibrate several queries' CJTs together (dashboard offline stage).
+
+        With batched calibration enabled, sibling queries fuse into
+        union-carry passes (``_union_carry``), every pass shares one root —
+        calibration touches all 2(n−1) directed edges regardless of root, so
+        a common root aligns the level schedules — and the passes advance
+        level-synchronously through ``run_calibration_level``, batching
+        same-signature messages across passes into vmapped calls.  Returns
+        ``(stats per effective pass, effective queries)``; pins land on the
+        *effective* queries, which the caller must hold for unpinning.
+        """
+        if not queries:
+            return [], []
+        if not self._batch_enabled(batch):
+            return (
+                [self.calibrate(q, pin=pin, batch=False) for q in queries],
+                list(queries),
+            )
+        effective = self._union_carry(queries)
+        root = self.choose_root(effective[0])
+        plans = [self.calibration_plan(q, root=root, pin=pin) for q in effective]
+        stats_list = [ExecStats() for _ in effective]
+        while any(not p.done for p in plans):
+            self.run_calibration_level(plans, stats_list)
+        return stats_list, effective
 
     def unpin_query(self, q: Query, root: str | None = None) -> int:
         """Release this query's calibration pins (Session GC: a closed

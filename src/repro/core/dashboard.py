@@ -61,12 +61,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import TYPE_CHECKING, Iterator, Mapping
+from typing import TYPE_CHECKING, Mapping
 
 import jax
 
 from repro.relational.relation import Predicate, mask_in, mask_range
-from .calibration import CJTEngine, ExecStats
+from .calibration import CalibrationPlan, CJTEngine, ExecStats
 from .query import Query
 
 if TYPE_CHECKING:  # pragma: no cover — import cycle guard (treant imports us)
@@ -182,6 +182,15 @@ class Undo:
 Event = (SetFilter, ClearFilter, Drill, Rollup, SwapMeasure, ToggleRelation, Undo)
 
 
+def _group_by_engine(pairs):
+    """Group ``(engine, item)`` pairs into ``[(engine, [items…])]`` in
+    first-appearance order (CJTEngine instances hash by identity)."""
+    groups: dict[CJTEngine, list] = {}
+    for eng, item in pairs:
+        groups.setdefault(eng, []).append(item)
+    return list(groups.items())
+
+
 def speculate_filters(ev: SetFilter, domain: int, k: int) -> list[SetFilter]:
     """Up to ``k`` likely-next σ values for the same dimension, nearest first.
 
@@ -274,18 +283,22 @@ class _CalTask:
     query: Query
     engine: CJTEngine
     priority: int
-    gen: Iterator | None = None
+    plan: CalibrationPlan | None = None
     done: int = 0
 
 
 class ThinkTimeScheduler:
     """Priority queue of pending calibrations across all (session, viz) pairs.
 
-    Most-recently-interacted runs first.  ``schedule`` replaces a pending
-    task only when the query for that exact (session, viz) changed — that is
-    the *only* preemption; every other pair keeps its iterator position and
-    its partially materialized messages.  Exhausting a ``run`` budget parks
-    the current task without losing position (§4.2.1 preemptibility).
+    Priority is *cost-weighted* (ROADMAP "scheduler cost model"): the task
+    with the cheapest estimated remaining work runs first —
+    shortest-job-first maximizes fully-calibrated vizzes per think-time
+    budget — with recency (most recently interacted) as the tie-break.
+    ``schedule`` replaces a pending task only when the query for that exact
+    (session, viz) changed — that is the *only* preemption; every other pair
+    keeps its parked position and its partially materialized messages.
+    Exhausting a ``run`` budget parks the current task without losing
+    position (§4.2.1 preemptibility).
     """
 
     def __init__(self):
@@ -341,6 +354,20 @@ class ThinkTimeScheduler:
         self.invalidations += n
         return n
 
+    def _remaining_cost(self, t: _CalTask) -> float:
+        """Estimated un-materialized work left on this task's CJT: Σ of
+        ``estimate_edge_cost`` over all directed edges (cached edges cost 0,
+        so the estimate shrinks as the pass progresses)."""
+        eng, q = t.engine, t.query
+        placement = eng.place_predicates(q)
+        return sum(
+            eng.estimate_edge_cost(q, u, v, placement)
+            for u, v in eng.jt.directed_edges()
+        )
+
+    def _pick(self, cands: list[_CalTask]) -> _CalTask:
+        return min(cands, key=lambda t: (self._remaining_cost(t), -t.priority))
+
     def run(
         self,
         budget_messages: int | None = None,
@@ -348,7 +375,18 @@ class ThinkTimeScheduler:
         session: str | None = None,
         viz: str | None = None,
     ) -> int:
-        """Drain matching tasks by priority; returns edges processed."""
+        """Drain matching tasks by cost-weighted priority; returns edges
+        processed.
+
+        On a fully unbudgeted drain, tasks on a batch-calibration engine
+        advance *level-by-level across vizzes*: the picked task and every
+        other matching task on its engine step one level together, so
+        sibling messages sharing a batch signature execute as one vmapped
+        call (``CJTEngine.run_calibration_level``).  Any budget forces
+        per-edge stepping — a message budget needs exact accounting and a
+        seconds budget needs per-edge preemption — and both modes
+        park/resume the same per-task position.
+        """
         done = 0
         t0 = time.perf_counter()
         while True:
@@ -359,35 +397,66 @@ class ThinkTimeScheduler:
             ]
             if not cands:
                 return done
-            task = max(cands, key=lambda t: t.priority)
-            if task.gen is None:
-                task.gen = task.engine.calibrate_iter(task.query)
-            store = task.engine.store
-            # attribute materializations for cross-viz sharing stats; the
-            # session qualifier keeps same-named vizzes of different
-            # sessions distinct
-            store.tag = f"{task.session}:{task.viz}"
-            exhausted = False
-            try:
-                for _ in task.gen:
-                    done += 1
-                    task.done += 1
-                    self.messages += 1
-                    if budget_messages is not None and done >= budget_messages:
-                        exhausted = True
-                        break
-                    if (
-                        budget_seconds is not None
-                        and time.perf_counter() - t0 >= budget_seconds
-                    ):
-                        exhausted = True
-                        break
-                else:
-                    self._tasks.pop((task.session, task.viz), None)
-                    self.completed += 1
-            finally:
-                store.tag = None
-            if exhausted:
+            task = self._pick(cands)
+            # completed tasks are popped when re-picked, NOT when their last
+            # edge lands: a caller loop like the legacy ``think_time`` polls
+            # until a run returns 0, and popping eagerly would let the next
+            # ``schedule`` re-enqueue the finished query forever (each poll
+            # re-stepping cache-hit edges and never reaching 0)
+            if task.plan is not None and task.plan.done:
+                self._tasks.pop((task.session, task.viz), None)
+                self.completed += 1
+                continue
+            engine = task.engine
+            # level batching only on fully unbudgeted drains: a message
+            # budget needs exact per-edge accounting, and a seconds budget
+            # needs per-edge preemption (a whole cross-task level can hide a
+            # multi-hundred-ms trace+compile behind the deadline check)
+            use_levels = (
+                budget_messages is None
+                and budget_seconds is None
+                and engine.batch_calibration
+                and engine.plans is not None
+            )
+            group = (
+                [t for t in cands if t.engine is engine and not (
+                    t.plan is not None and t.plan.done
+                )]
+                if use_levels else [task]
+            )
+            for t in group:
+                if t.plan is None:
+                    t.plan = engine.calibration_plan(t.query)
+            before = {id(t): t.plan.edges_left() for t in group}
+            if use_levels:
+                # tags attribute materializations for cross-viz sharing
+                # stats; the session qualifier keeps same-named vizzes of
+                # different sessions distinct
+                n = engine.run_calibration_level(
+                    [t.plan for t in group],
+                    tags=[f"{t.session}:{t.viz}" for t in group],
+                )
+            else:
+                left = None if budget_messages is None else budget_messages - done
+                deadline = None if budget_seconds is None else t0 + budget_seconds
+                store = engine.store
+                store.tag = f"{task.session}:{task.viz}"
+                try:
+                    n = engine.step_calibration(
+                        task.plan, max_edges=left, deadline=deadline
+                    )
+                finally:
+                    store.tag = None
+            done += n
+            self.messages += n
+            for t in group:
+                t.done += before[id(t)] - t.plan.edges_left()
+            if budget_messages is not None and done >= budget_messages:
+                return done
+            if (
+                budget_seconds is not None
+                and time.perf_counter() - t0 >= budget_seconds
+            ):
                 return done
 
     def speculate(
@@ -403,12 +472,11 @@ class ThinkTimeScheduler:
         would.  Returns ``{(viz, query digest): absorbed factor}`` for the
         session to park in its prefetch cache.
         """
-        by_engine: dict[int, tuple[CJTEngine, list[tuple[str, Query]]]] = {}
-        for viz, q, eng in items:
-            by_engine.setdefault(id(eng), (eng, []))[1].append((viz, q))
         out: dict[tuple[str, str], object] = {}
         pending = []
-        for eng, group in by_engine.values():
+        for eng, group in _group_by_engine(
+            (eng, (viz, q)) for viz, q, eng in items
+        ):
             results = eng.execute_many(
                 [q for _, q in group], sync=False,
                 tags=[f"{session}:{viz}" for viz, _ in group],
@@ -475,7 +543,10 @@ class Session:
         self.prefetch_capacity = 128
         self.prefetch_hits = 0
         self._last_filter: SetFilter | None = None
-        self._pinned_vizzes: set[str] = set()
+        # offline-calibration pins, keyed by pin-time digest: with batched
+        # calibration the *effective* (union-carry) queries are pinned, not
+        # the per-viz bases — close()/update() release exactly these
+        self._pinned_queries: dict[str, Query] = {}
         if spec is not None:
             for v in spec.vizzes:
                 base = Query.make(
@@ -488,9 +559,16 @@ class Session:
                     crossfilter=v.crossfilter,
                 )
                 self._current[v.name] = base
-                if calibrate:  # offline stage: pin the base CJT (§4.1.1)
-                    treant.engine_for(base.ring_name, base.measure).calibrate(base, pin=True)
-                    self._pinned_vizzes.add(v.name)
+            if calibrate:  # offline stage: pin the base CJTs (§4.1.1)
+                # one calibrate_many per engine: sibling vizzes fuse into
+                # union-carry passes and levels batch across the fan-out
+                bases = [self._views[v.name].base for v in spec.vizzes]
+                for eng, qs in _group_by_engine(
+                    (treant.engine_for(b.ring_name, b.measure), b) for b in bases
+                ):
+                    _, effective = eng.calibrate_many(qs, pin=True)
+                    for q in effective:
+                        self._pinned_queries[q.digest] = q
 
     # -- plumbing -------------------------------------------------------------
     @property
@@ -643,12 +721,10 @@ class Session:
         # group the rest per engine; batch_fanout dispatches each group as
         # ONE execute_many call (sibling absorptions share a vmapped plan),
         # otherwise fall back to the per-viz dispatch path
-        by_engine: dict[int, tuple[CJTEngine, list[str]]] = {}
-        for name in to_run:
-            q = derived[name]
-            engine = self._treant.engine_for(q.ring_name, q.measure)
-            by_engine.setdefault(id(engine), (engine, []))[1].append(name)
-        for engine, names in by_engine.values():
+        for engine, names in _group_by_engine(
+            (self._treant.engine_for(derived[n].ring_name, derived[n].measure), n)
+            for n in to_run
+        ):
             td = time.perf_counter()
             if self._treant.batch_fanout and len(names) > 1:
                 # async dispatch: block once for the whole fan-out below
@@ -852,13 +928,9 @@ class Session:
         cache-hit speed.
         """
         self.scheduler.drop(self.id)
-        for name in self._pinned_vizzes:
-            view = self._views.get(name)
-            if view is None:
-                continue
-            q = view.base
+        for q in self._pinned_queries.values():
             self._treant.engine_for(q.ring_name, q.measure).unpin_query(q)
-        self._pinned_vizzes.clear()
+        self._pinned_queries.clear()
         self.store.drop_producer(f"{self.id}:")
         self._prefetched.clear()
         self._treant._sessions.pop(self.id, None)

@@ -135,6 +135,43 @@ class JTree:
         memo[key] = tuple(order)
         return order
 
+    def calibration_levels(self, root: str) -> tuple[tuple[tuple[str, str], ...], ...]:
+        """Level-synchronous calibration schedule: upward then downward passes.
+
+        Edges are grouped by the depth of the bag *below* the cut: upward
+        level k holds the child→parent edges whose child sits at depth k
+        (emitted deepest-first), downward levels mirror them shallowest-first
+        with the direction flipped.  All edges inside one level are
+        independent — a message's inputs live strictly on the far side of its
+        level boundary — so a level can execute as one batched dispatch, and
+        abandoning the schedule at any level boundary leaves every completed
+        level's messages servable.  Concatenated, the levels enumerate the
+        same 2(n−1) directed edges as ``traversal_to_root`` + its reverse.
+        """
+        memo = self._memo()
+        key = ("levels", root)
+        hit = memo.get(key)
+        if hit is not None:
+            return hit
+        seen = {root}
+        frontier = [root]
+        by_depth: list[tuple[tuple[str, str], ...]] = []
+        while frontier:
+            nxt = []
+            for u in frontier:
+                for v in self.adj[u]:
+                    if v not in seen:
+                        seen.add(v)
+                        nxt.append((v, u))
+            if nxt:
+                by_depth.append(tuple(sorted(nxt)))
+            frontier = [v for v, _ in nxt]
+        # by_depth[k-1] holds the (child at depth k, parent) edges
+        upward = list(reversed(by_depth))
+        downward = [tuple((p, c) for (c, p) in lvl) for lvl in by_depth]
+        memo[key] = hit = tuple(upward + downward)
+        return hit
+
     # -- validation (paper §2: the three JT properties) ----------------------
     def validate(self) -> None:
         names = set(self.bags)

@@ -83,6 +83,22 @@ def batch_fanout_default() -> bool:
     return os.environ.get("REPRO_BATCH_FANOUT", "1").lower() not in ("0", "false")
 
 
+def batch_calibration_default() -> bool:
+    """Env-gated default for level-batched calibration passes
+    (REPRO_BATCH_CALIBRATION; CI runs a 0/1 matrix axis).  When off — or when
+    compiled plans are off — calibration degrades to the per-edge loop."""
+    return os.environ.get("REPRO_BATCH_CALIBRATION", "1").lower() not in ("0", "false")
+
+
+def calibration_union_budget() -> int:
+    """Max product of γ domain sizes one union-carry calibration query may
+    accumulate (REPRO_CALIBRATION_UNION_BUDGET).  Bounds the widest message a
+    shared calibration pass materializes: per-row ⊗ lanes scale with the
+    product, so the default keeps the fact-bag working set ~O(512·N·4B) while
+    collapsing the most traces (measured knee on the crossfilter suite)."""
+    return int(os.environ.get("REPRO_CALIBRATION_UNION_BUDGET", "512"))
+
+
 def expand_rows_field(field: sr.Field, have: Sequence[str], want: Sequence[str],
                       trailing: Sequence[int]) -> sr.Field:
     """Insert size-1 axes so leaves go (N, *have_dims, *t) → (N, *want_dims, *t).
@@ -123,6 +139,14 @@ class PlanStats:
     batched_execs: int = 0        # vmapped batched calls dispatched
     batched_absorptions: int = 0  # absorptions served by those calls (Σ widths)
     batch_width: int = 0          # widest batch observed (max, not a sum)
+    # level-batched calibration (run_message_batch): whole upward/downward
+    # levels stacked into vmapped calls, plus how many message
+    # materializations calibration dispatched in total (per-edge loop: one
+    # per computed message; batched: one per level group)
+    level_batched_execs: int = 0     # vmapped level-batch calls dispatched
+    level_batched_messages: int = 0  # messages served by those calls (Σ widths)
+    level_batch_width: int = 0       # widest level batch observed (max)
+    calibration_dispatches: int = 0  # message dispatches issued by calibration
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -532,17 +556,11 @@ class PlanCache:
             stats.plan_hits += int(not traced)
             stats.kernel_execs += int(entry.uses_kernel)
 
-    def run_sparse(
-        self,
-        catalog,
-        rel,
-        vals: sr.Field,
-        incoming: Sequence[Factor],
-        preds: Sequence[Predicate],
-        out_attrs: tuple[str, ...],
-        stats=None,
-    ) -> Factor:
-        key = (
+    def sparse_key(
+        self, rel, vals: sr.Field, incoming: Sequence[Factor],
+        preds: Sequence[Predicate], out_attrs: Sequence[str],
+    ) -> tuple:
+        return (
             "sparse",
             self.ring.name,
             rel.attrs,
@@ -553,6 +571,18 @@ class PlanCache:
             tuple(out_attrs),
             _field_struct(vals),
         )
+
+    def run_sparse(
+        self,
+        catalog,
+        rel,
+        vals: sr.Field,
+        incoming: Sequence[Factor],
+        preds: Sequence[Predicate],
+        out_attrs: tuple[str, ...],
+        stats=None,
+    ) -> Factor:
+        key = self.sparse_key(rel, vals, incoming, preds, out_attrs)
         entry = self._plans.get(key)
         traced = entry is None
         if traced:
@@ -594,6 +624,32 @@ class PlanCache:
         bit-compatible with ``run_sparse`` on integer-exact data (padding is
         the ⊕-identity, which ⊗ absorbs and ⊕ ignores).
         """
+        return self._run_batch(catalog, items, stats_list, calibration=False)
+
+    def run_message_batch(
+        self,
+        catalog,
+        items: Sequence[AbsorbItem],
+        stats_list: Sequence | None = None,
+    ) -> list[Factor]:
+        """Execute one calibration *level*'s batch-compatible messages as one
+        vmapped call.
+
+        A message Y(u→v) is the same bag contraction as an absorption with
+        ``out_attrs = separator ∪ γ-carry``, so the whole ⊕-identity padding /
+        placeholder-canonicalization machinery of :meth:`run_sparse_batch` is
+        reused verbatim — only the accounting differs (``level_batched_*``
+        counters instead of ``batched_*``).
+        """
+        return self._run_batch(catalog, items, stats_list, calibration=True)
+
+    def _run_batch(
+        self,
+        catalog,
+        items: Sequence[AbsorbItem],
+        stats_list: Sequence | None,
+        calibration: bool,
+    ) -> list[Factor]:
         assert len(items) >= 2, "batch of one: use run_sparse"
         rel = items[0].rel
         canons = [_canon_absorption(it) for it in items]
@@ -653,9 +709,14 @@ class PlanCache:
             seg_idx,
         )
         width = len(items)
-        self.stats.batched_execs += 1
-        self.stats.batched_absorptions += width
-        self.stats.batch_width = max(self.stats.batch_width, width)
+        if calibration:
+            self.stats.level_batched_execs += 1
+            self.stats.level_batched_messages += width
+            self.stats.level_batch_width = max(self.stats.level_batch_width, width)
+        else:
+            self.stats.batched_execs += 1
+            self.stats.batched_absorptions += width
+            self.stats.batch_width = max(self.stats.batch_width, width)
         results = []
         for it, f, stats in zip(items, outs, stats_list or [None] * width):
             # rename canonical placeholders back to the member's real attrs
@@ -663,8 +724,12 @@ class PlanCache:
             self._account(entry, traced, stats)
             traced = False  # one trace per batched call, not per member
             if stats is not None:
-                stats.batched_absorptions += 1
-                stats.batch_width = max(stats.batch_width, width)
+                if calibration:
+                    stats.level_batched_execs += 1
+                    stats.level_batch_width = max(stats.level_batch_width, width)
+                else:
+                    stats.batched_absorptions += 1
+                    stats.batch_width = max(stats.batch_width, width)
         # undo the canonical sort: caller expects its own member order
         return [results[inverse[o]] for o in range(width)]
 

@@ -41,7 +41,12 @@ from typing import Callable, Mapping
 from repro.relational.relation import Catalog, Delta, Relation
 from . import semiring as sr
 from .calibration import CJTEngine, DeltaStats, ExecStats, MessageStore
-from .plans import PlanStats, batch_fanout_default, use_plans_default
+from .plans import (
+    PlanStats,
+    batch_calibration_default,
+    batch_fanout_default,
+    use_plans_default,
+)
 from .dashboard import (
     ApplyResult,
     DashboardSpec,
@@ -81,14 +86,19 @@ class Treant:
         dense_rows_threshold: int = 0,
         use_plans: bool | None = None,
         batch_fanout: bool | None = None,
+        batch_calibration: bool | None = None,
     ):
         # None → env defaults: REPRO_USE_PLANS gates compiled plans (the CI
         # matrix runs both legs), REPRO_BATCH_FANOUT gates the vmapped
-        # sibling-absorption batching (benchmarks A/B against per-viz dispatch)
+        # sibling-absorption batching (benchmarks A/B against per-viz
+        # dispatch), REPRO_BATCH_CALIBRATION gates level-batched calibration
+        # passes (inert without plans — degrades to the per-edge loop)
         if use_plans is None:
             use_plans = use_plans_default()
         if batch_fanout is None:
             batch_fanout = batch_fanout_default()
+        if batch_calibration is None:
+            batch_calibration = batch_calibration_default()
         self.catalog = catalog
         self.jt = jt or jt_from_catalog(catalog)
         self.store = MessageStore(max_bytes=max_cache_bytes)
@@ -96,9 +106,11 @@ class Treant:
         self._dense_rows_threshold = dense_rows_threshold
         self._use_plans = use_plans
         self.batch_fanout = batch_fanout
+        self.batch_calibration = batch_calibration
         self.engine = CJTEngine(
             self.jt, catalog, ring, lifts=self._lifts, store=self.store,
             dense_rows_threshold=dense_rows_threshold, use_plans=use_plans,
+            batch_calibration=batch_calibration,
         )
         # ring name -> engine; siblings share the store (per-ring plan caches)
         self._engines: dict[str, CJTEngine] = {ring.name: self.engine}
@@ -126,7 +138,7 @@ class Treant:
             eng = CJTEngine(
                 self.jt, self.catalog, sr.get(ring_name), lifts=self._lifts,
                 store=self.store, dense_rows_threshold=self._dense_rows_threshold,
-                use_plans=self._use_plans,
+                use_plans=self._use_plans, batch_calibration=self.batch_calibration,
             )
             self._engines[ring_name] = eng
         return eng
@@ -208,6 +220,12 @@ class Treant:
             for view in sess._views.values()
         ] + [
             q for sess in self._sessions.values() for q in sess._current.values()
+        ] + [
+            # pinned offline-calibration passes (union-carry queries under
+            # batched calibration): maintaining them migrates their pins to
+            # the bumped signatures, exactly like the per-viz bases
+            q for sess in self._sessions.values()
+            for q in sess._pinned_queries.values()
         ]
         todo = {
             q.digest: q for q in tracked
@@ -226,17 +244,16 @@ class Treant:
             # the JT) is neither maintained nor a fallback
             maintained += int(not st.fallback and st.delta_messages > 0)
         # fallback CJTs get no pin migration (apply_delta maintained nothing),
-        # but their base queries are version-bumped below — a later
+        # but their pinned queries are version-bumped below — a later
         # Session.close would then unpin the *new* sigs (no-ops) and leak the
         # old-version pins forever.  Release them now, while the pre-bump
-        # base still derives the pinned signatures; the recalibration queued
+        # query still derives the pinned signatures; the recalibration queued
         # on the scheduler below rebuilds the CJT unpinned.
         for sess in self._sessions.values():
-            for viz in sorted(sess._pinned_vizzes):
-                base = sess._views[viz].base
-                if base.digest in fallback_digests:
-                    self.engine_for(base.ring_name, base.measure).unpin_query(base)
-                    sess._pinned_vizzes.discard(viz)
+            for key, qp in sorted(sess._pinned_queries.items()):
+                if qp.digest in fallback_digests:
+                    self.engine_for(qp.ring_name, qp.measure).unpin_query(qp)
+                    del sess._pinned_queries[key]
 
         def bump(q: Query) -> Query:
             if q.version_of(delta.relation) == delta.old_version:
@@ -248,6 +265,9 @@ class Treant:
             for view in sess._views.values():
                 view.base = bump(view.base)
             sess._current = {v: bump(q) for v, q in sess._current.items()}
+            sess._pinned_queries = {
+                k: bump(q) for k, q in sess._pinned_queries.items()
+            }
         # every pending calibration targets a stale snapshot: invalidate and
         # re-queue the sessions' (bumped) current queries — maintained ones
         # complete in a few cache hits, fallbacks actually recalibrate.
@@ -306,8 +326,8 @@ class Treant:
             "sessions": len(self._sessions),
         }
         # aggregate plan counters over the primary AND sibling-ring engines
-        # (multi-ring dashboards execute on several PlanCaches); batch_width
-        # is a max, everything else sums
+        # (multi-ring dashboards execute on several PlanCaches); the
+        # *_width counters are maxima, everything else sums
         caches = [e.plans for e in self._engines.values() if e.plans is not None]
         if caches:
             agg = PlanStats()
@@ -315,7 +335,8 @@ class Treant:
                 for k, v in c.stats.as_dict().items():
                     setattr(
                         agg, k,
-                        max(agg.batch_width, v) if k == "batch_width"
+                        max(getattr(agg, k), v)
+                        if k in ("batch_width", "level_batch_width")
                         else getattr(agg, k) + v,
                     )
             out["plans"] = agg.as_dict()

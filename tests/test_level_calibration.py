@@ -1,0 +1,404 @@
+"""Level-batched calibration: the metamorphic suite.
+
+The tentpole's correctness spine: a level-synchronous batched calibration
+pass (``CJTEngine.calibrate(batch=True)`` / ``calibrate_many``) must leave
+the MessageStore in a state where every directed-edge message is
+**bit-identical** to the sequential per-edge reference loop — across rings
+(COUNT/SUM/MIN/MAX/MOMENTS), across tree shapes (chain/star/bushy) and with
+compiled plans on or off (plans off degrades to the per-edge loop).
+Measures are small integers, exactly representable in f32, so every
+⊕-order — including the union-carry ⊕-marginalization narrowing — yields
+the same bits (same convention as tests/test_batched_plans.py).
+
+Plus: level-granular preemption (abandoning ``calibrate_levels_iter``
+mid-pass keeps every completed level's messages servable), the scheduler's
+cost-weighted priority (cheapest-remaining viz drains first), and the
+dispatch/counter accounting the CI perf gate relies on.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401 — import order (core before relational)
+from repro.core import (
+    CJTEngine,
+    DashboardSpec,
+    MessageStore,
+    Query,
+    SetFilter,
+    Treant,
+    VizSpec,
+    jt_from_catalog,
+)
+from repro.core import semiring as sr
+from repro.relational.relation import Catalog, Relation, mask_in
+
+RINGS = {
+    "count": sr.COUNT,
+    "sum": sr.SUM,
+    "tropical_min": sr.TROPICAL_MIN,
+    "tropical_max": sr.TROPICAL_MAX,
+    "moments": sr.MOMENTS,
+}
+
+
+def _rel(name, attrs, doms, n, rng, measure=False):
+    codes = {a: rng.integers(0, doms[a], n).astype(np.int32) for a in attrs}
+    measures = (
+        {"m": rng.integers(0, 16, n).astype(np.float32)} if measure else None
+    )
+    return Relation(name, tuple(attrs), codes, doms, measures=measures)
+
+
+def chain_catalog(seed=0) -> Catalog:
+    """F(a,b) ← S(b,c) ← T(c,d): a 3-bag chain (depth-2 levels)."""
+    rng = np.random.default_rng(seed)
+    doms = {"a": 6, "b": 7, "c": 5, "d": 8}
+    return Catalog([
+        _rel("F", ("a", "b"), doms, 500, rng, measure=True),
+        _rel("S", ("b", "c"), doms, 60, rng),
+        _rel("T", ("c", "d"), doms, 40, rng),
+    ])
+
+
+def star_catalog(seed=0) -> Catalog:
+    """F(a,b)+m ← S(b,c), T(a,d), U(b,e): fact-centered star."""
+    rng = np.random.default_rng(seed)
+    doms = {"a": 13, "b": 7, "c": 10, "d": 5, "e": 9}
+    return Catalog([
+        _rel("F", ("a", "b"), doms, 600, rng, measure=True),
+        _rel("S", ("b", "c"), doms, 77, rng),
+        _rel("T", ("a", "d"), doms, 29, rng),
+        _rel("U", ("b", "e"), doms, 41, rng),
+    ])
+
+
+def bushy_catalog(seed=0) -> Catalog:
+    """Chain with side branches at both ends (mixed level widths)."""
+    rng = np.random.default_rng(seed)
+    doms = {"a": 6, "b": 7, "c": 5, "d": 8, "e": 4, "g": 9}
+    return Catalog([
+        _rel("F", ("a", "b"), doms, 400, rng, measure=True),
+        _rel("S", ("b", "c"), doms, 70, rng),
+        _rel("T", ("c", "d"), doms, 50, rng),
+        _rel("A", ("a", "e"), doms, 30, rng),
+        _rel("D", ("d", "g"), doms, 35, rng),
+    ])
+
+
+SHAPES = {"chain": chain_catalog, "star": star_catalog, "bushy": bushy_catalog}
+
+
+def assert_stores_message_identical(e1, e2, q):
+    placement = e1.place_predicates(q)
+    for (u, v) in e1.jt.directed_edges():
+        m1 = e1.message(q, u, v, placement)
+        m2 = e2.message(q, u, v, placement)
+        assert m1.attrs == m2.attrs
+        l1 = jax.tree_util.tree_leaves(m1.field)
+        l2 = jax.tree_util.tree_leaves(m2.field)
+        assert len(l1) == len(l2)
+        for a, b in zip(l1, l2):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# metamorphic parity: level-batched ≡ per-edge, bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ring_name", sorted(RINGS))
+@pytest.mark.parametrize("shape", sorted(SHAPES))
+def test_level_batched_equals_per_edge(ring_name, shape):
+    cat = SHAPES[shape](seed=3)
+    jt = jt_from_catalog(cat)
+    measure = None if ring_name == "count" else ("F", "m")
+    gamma = ("c",) if shape != "star" else ("c", "d")
+    q = Query.make(cat, ring=ring_name, measure=measure, group_by=gamma)
+    seq = CJTEngine(jt, cat, RINGS[ring_name], store=MessageStore())
+    bat = CJTEngine(jt, cat, RINGS[ring_name], store=MessageStore())
+    st_seq = seq.calibrate(q, batch=False)
+    st_bat = bat.calibrate(q, batch=True)
+    assert seq.is_calibrated(q) and bat.is_calibrated(q)
+    assert_stores_message_identical(seq, bat, q)
+    n_edges = len(jt.directed_edges())
+    assert st_seq.messages_computed == n_edges
+    # batched pass covers the same edges (level order differs, totals agree)
+    assert st_bat.messages_computed + st_bat.messages_reused >= n_edges
+    assert 0 < st_bat.calibration_dispatches <= st_seq.calibration_dispatches
+
+
+@pytest.mark.parametrize("use_plans", [False, True])
+def test_level_batched_plans_on_off(use_plans):
+    """Plans off: the batch flag is inert and the per-edge reference loop
+    runs — results must stay bit-identical either way."""
+    cat = star_catalog(seed=5)
+    jt = jt_from_catalog(cat)
+    q = Query.make(cat, ring="sum", measure=("F", "m"), group_by=("c",))
+    ref = CJTEngine(jt, cat, sr.SUM, store=MessageStore(), use_plans=False)
+    eng = CJTEngine(
+        jt, cat, sr.SUM, store=MessageStore(), use_plans=use_plans,
+        batch_calibration=True,
+    )
+    ref.calibrate(q, batch=False)
+    eng.calibrate(q)  # engine default: batch iff plans exist
+    assert_stores_message_identical(ref, eng, q)
+    if not use_plans:
+        assert eng.plans is None  # level batching inert without plans
+
+
+@pytest.mark.parametrize("ring_name", ["sum", "tropical_min", "moments"])
+def test_calibrate_many_union_carry_parity(ring_name):
+    """calibrate_many fuses sibling γs into union-carry passes; every member
+    query must still be fully calibrated, bit-identical to per-edge."""
+    cat = star_catalog(seed=7)
+    jt = jt_from_catalog(cat)
+    measure = ("F", "m")
+    qs = [
+        Query.make(cat, ring=ring_name, measure=measure, group_by=g)
+        for g in [("c",), ("d",), ("e",), ("c", "d")]
+    ]
+    seq = CJTEngine(jt, cat, RINGS[ring_name], store=MessageStore())
+    bat = CJTEngine(jt, cat, RINGS[ring_name], store=MessageStore())
+    for q in qs:
+        seq.calibrate(q, batch=False)
+    _, effective = bat.calibrate_many(qs, batch=True)
+    assert len(effective) < len(qs), "union-carry fused nothing"
+    for q in qs:
+        assert bat.is_calibrated(q), q.group_by
+        f_seq, _ = seq.execute(q)
+        f_bat, _ = bat.execute(q)
+        for a, b in zip(
+            jax.tree_util.tree_leaves(f_seq.field),
+            jax.tree_util.tree_leaves(f_bat.field),
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the whole point: strictly fewer message dispatches than per-edge
+    assert (
+        bat.plans.stats.calibration_dispatches
+        < seq.plans.stats.calibration_dispatches
+    )
+
+
+def test_union_carry_respects_budget(monkeypatch):
+    monkeypatch.setenv("REPRO_CALIBRATION_UNION_BUDGET", "1")
+    cat = star_catalog(seed=9)
+    jt = jt_from_catalog(cat)
+    eng = CJTEngine(jt, cat, sr.SUM, store=MessageStore())
+    qs = [Query.make(cat, ring="sum", measure=("F", "m"), group_by=(g,))
+          for g in ("c", "d")]
+    eff = eng._union_carry(qs)
+    assert [q.group_by for q in eff] == [("c",), ("d",)]  # nothing fused
+    monkeypatch.setenv("REPRO_CALIBRATION_UNION_BUDGET", "256")
+    eff = eng._union_carry(qs)
+    assert [q.group_by for q in eff] == [("c", "d")]
+
+
+# ---------------------------------------------------------------------------
+# preemption: completed levels stay servable
+# ---------------------------------------------------------------------------
+
+def test_abandoned_iterator_keeps_completed_levels():
+    cat = bushy_catalog(seed=11)
+    jt = jt_from_catalog(cat)
+    eng = CJTEngine(jt, cat, sr.SUM, store=MessageStore())
+    q = Query.make(cat, ring="sum", measure=("F", "m"), group_by=("c",))
+    it = eng.calibrate_levels_iter(q)
+    completed = [next(it), next(it)]  # abandon mid-pass
+    del it
+    placement = eng.place_predicates(q)
+    store_probes = eng.store.hits + eng.store.misses
+    for level in completed:
+        for (u, v) in level:
+            base = eng.edge_sig(q, u, v, placement)
+            assert eng.store.contains(base, eng.gamma_carry(q, u, v)), (
+                f"completed-level message {(u, v)} not servable"
+            )
+    assert eng.store.hits + eng.store.misses >= store_probes
+    # resuming from a fresh iterator finishes the pass (store dedupe)
+    stats = eng.calibrate(q, batch=True)
+    assert eng.is_calibrated(q)
+    n_done = sum(len(lv) for lv in completed)
+    assert stats.messages_reused >= n_done
+
+
+def test_step_calibration_budget_exact_and_resumable():
+    """Per-edge stepping (the scheduler's budget path) advances exactly
+    max_edges and the level executor resumes from the parked offset."""
+    cat = star_catalog(seed=13)
+    jt = jt_from_catalog(cat)
+    eng = CJTEngine(jt, cat, sr.SUM, store=MessageStore())
+    q = Query.make(cat, ring="sum", measure=("F", "m"), group_by=("c",))
+    plan = eng.calibration_plan(q)
+    n_edges = len(jt.directed_edges())
+    assert plan.edges_left() == n_edges
+    assert eng.step_calibration(plan, max_edges=1) == 1
+    assert plan.edges_left() == n_edges - 1
+    # finish with the batched level executor, mid-level offset preserved
+    stats = repro.core.ExecStats()
+    while not plan.done:
+        eng.run_calibration_level([plan], [stats])
+    assert eng.is_calibrated(q)
+    ref = CJTEngine(jt, cat, sr.SUM, store=MessageStore())
+    ref.calibrate(q, batch=False)
+    assert_stores_message_identical(ref, eng, q)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: cost-weighted priority
+# ---------------------------------------------------------------------------
+
+def test_scheduler_drains_cheapest_remaining_first():
+    """Two pending vizzes on different engines: the one with the smaller
+    estimated remaining work must complete first (shortest-job-first),
+    regardless of interaction recency."""
+    cat = star_catalog(seed=17)
+    jt = jt_from_catalog(cat)
+    t = Treant(cat, ring=sr.SUM, jt=jt)
+    cheap = Query.make(cat, ring="sum", measure=("F", "m"))
+    costly = Query.make(
+        cat, ring="count", group_by=("c", "d", "e"),
+        predicates=(mask_in(13, [0, 1, 2], attr="a"),),
+    )
+    # pre-calibrate the cheap CJT: its remaining cost is ~0
+    t.engine.calibrate(cheap)
+    t.scheduler.schedule("s", "cheap", cheap, t.engine)
+    t.scheduler.schedule(
+        "s", "costly", costly, t.engine_for("count", None)
+    )
+    # recency alone would run "costly" first (scheduled last); cost-weighted
+    # priority must complete "cheap" inside a budget that cannot finish both
+    # (completed tasks are popped lazily on the next drain, so assert the
+    # pass positions rather than queue membership)
+    n_edges = len(jt.directed_edges())
+    t.scheduler.run(budget_messages=n_edges, session="s")
+    cheap_task = t.scheduler._tasks.get(("s", "cheap"))
+    costly_task = t.scheduler._tasks[("s", "costly")]
+    assert cheap_task is None or cheap_task.plan.done, "cheapest viz not drained"
+    assert costly_task.plan is None or not costly_task.plan.done, (
+        "budget finished everything — not discriminating"
+    )
+
+
+def test_idle_level_drain_batches_across_vizzes():
+    """Session.idle without a message budget drains level-by-level across
+    vizzes; sibling σ'd calibrations share signatures and batch."""
+    cat = star_catalog(seed=19)
+    jt = jt_from_catalog(cat)
+    t = Treant(cat, ring=sr.SUM, jt=jt, batch_calibration=True)
+    spec = DashboardSpec(vizzes=(
+        VizSpec("by_c", measure=("F", "m"), ring="sum", group_by=("c",)),
+        VizSpec("by_d", measure=("F", "m"), ring="sum", group_by=("d",)),
+        VizSpec("by_e", measure=("F", "m"), ring="sum", group_by=("e",)),
+    ))
+    sess = t.open_session(spec, name="s", calibrate=False)
+    # source viz keeps its dimension → the two siblings re-render + queue
+    sess.apply(SetFilter("a", values=(1, 2), source="by_c"))
+    assert t.scheduler.pending(sess.id) == 2
+    done = sess.idle()
+    assert done > 0
+    assert t.scheduler.pending(sess.id) == 0
+    for viz in ("by_d", "by_e"):
+        assert t.engine.is_calibrated(sess.query_of(viz))
+
+
+def test_scheduler_budget_still_exact_under_batching():
+    """budget_messages forces per-edge granularity: never overshoots."""
+    cat = star_catalog(seed=23)
+    jt = jt_from_catalog(cat)
+    t = Treant(cat, ring=sr.SUM, jt=jt, batch_calibration=True)
+    q = Query.make(cat, ring="sum", measure=("F", "m"), group_by=("c",))
+    t.scheduler.schedule("s", "v", q, t.engine)
+    total = 0
+    while True:
+        got = t.scheduler.run(budget_messages=2, session="s")
+        assert got <= 2
+        if got == 0:
+            break
+        total += got
+    assert total == len(jt.directed_edges())
+    assert t.engine.is_calibrated(q)
+
+
+# ---------------------------------------------------------------------------
+# counters + env gate
+# ---------------------------------------------------------------------------
+
+def test_session_offline_counters_and_dispatch_reduction():
+    spec = DashboardSpec(vizzes=(
+        VizSpec("by_c", measure=("F", "m"), ring="sum", group_by=("c",)),
+        VizSpec("by_d", measure=("F", "m"), ring="sum", group_by=("d",)),
+        VizSpec("by_e", measure=("F", "m"), ring="sum", group_by=("e",)),
+        VizSpec("by_cd", measure=("F", "m"), ring="sum", group_by=("c", "d")),
+    ))
+    cat = star_catalog(seed=29)
+    jt = jt_from_catalog(cat)
+    tb = Treant(cat, ring=sr.SUM, jt=jt, use_plans=True, batch_calibration=True)
+    tu = Treant(cat, ring=sr.SUM, jt=jt, use_plans=True, batch_calibration=False)
+    tb.open_session(spec, name="b")
+    tu.open_session(spec, name="u")
+    pb = tb.cache_stats()["plans"]
+    pu = tu.cache_stats()["plans"]
+    assert 0 < pb["calibration_dispatches"] < pu["calibration_dispatches"]
+    assert pu["level_batched_execs"] == 0
+    # both legs leave every viz fully calibrated and servable
+    for t, name in ((tb, "b"), (tu, "u")):
+        sess = t.session(name)
+        for viz in ("by_c", "by_d", "by_e", "by_cd"):
+            assert t.engine.is_calibrated(sess.query_of(viz))
+
+
+def test_env_gate_batch_calibration(monkeypatch):
+    cat = star_catalog(seed=31)
+    monkeypatch.setenv("REPRO_BATCH_CALIBRATION", "0")
+    t = Treant(cat, ring=sr.SUM)
+    assert not t.engine.batch_calibration and not t.engine._batch_enabled()
+    monkeypatch.setenv("REPRO_BATCH_CALIBRATION", "1")
+    t = Treant(cat, ring=sr.SUM)
+    assert t.engine.batch_calibration
+    # explicit argument wins over the env
+    t = Treant(cat, ring=sr.SUM, batch_calibration=False)
+    assert not t.engine.batch_calibration
+
+
+def test_update_then_close_releases_union_pins():
+    """Delta maintenance must not mint phantom pins for messages pinned only
+    through a wider union-carry variant: maintaining the narrow tracked
+    queries used to add a direct pin per edge that no holder ever released,
+    so close() after a Treant.update leaked pins forever."""
+    cat = star_catalog(seed=41)
+    t = Treant(cat, ring=sr.SUM, batch_calibration=True)
+    spec = DashboardSpec(vizzes=(
+        VizSpec("by_c", measure=("F", "m"), ring="sum", group_by=("c",)),
+        VizSpec("by_d", measure=("F", "m"), ring="sum", group_by=("d",)),
+    ))
+    sess = t.open_session(spec)
+    pinned_before = len(t.store._pinned)
+    rng = np.random.default_rng(0)
+    rel = cat.get("F")
+    new_rel, delta = rel.append_rows(
+        {a: rng.integers(0, rel.domains[a], 20) for a in rel.attrs},
+        measures={"m": rng.integers(0, 16, 20).astype(np.float32)},
+    )
+    res = t.update(new_rel, delta)
+    assert res.queries_fallback == 0
+    # migration moves pins, it must not multiply them
+    assert len(t.store._pinned) <= pinned_before
+    sess.close()
+    assert not t.store._pinned, "update+close leaked union-carry pins"
+
+
+def test_close_unpins_union_carry_queries():
+    """Session GC with batched calibration: the *effective* union queries
+    hold the pins, and close() must release exactly those."""
+    cat = star_catalog(seed=37)
+    t = Treant(cat, ring=sr.SUM, batch_calibration=True)
+    spec = DashboardSpec(vizzes=(
+        VizSpec("by_c", measure=("F", "m"), ring="sum", group_by=("c",)),
+        VizSpec("by_d", measure=("F", "m"), ring="sum", group_by=("d",)),
+    ))
+    sess = t.open_session(spec)
+    assert t.store._pinned, "offline calibration pinned nothing"
+    assert sess._pinned_queries, "no effective queries recorded"
+    sess.close()
+    assert not t.store._pinned, "close leaked union-carry pins"
