@@ -1,0 +1,276 @@
+"""Streaming delta ingestion: sustained micro-batched writes vs warm reads.
+
+Two scenarios over the Flight schema:
+
+1. **Sustained ingest (SUM)** — a crossfilter session keeps brushing while
+   append/delete micro-batches stream into the fact relation and ``flush``
+   coalesces them into one delta per tick.  Measures the sustained ingestion
+   rate (rows/sec through coalesce+maintain+commit) and compares the warm
+   event-latency tail (p99) during ingestion against a no-ingest baseline —
+   the tentpole's acceptance bar is p99 within 1.3x.  Asserts the coalescing
+   invariant (one version bump + one apply_delta sweep per tick, however many
+   micro-batches were queued) and stream≡rebuild parity on every viz.
+
+2. **Inverse-free delete stream (MIN)** — tombstoned delete ticks against
+   TROPICAL_MIN must absorb without recalibrating (calibration dispatches
+   flat across ticks); the one real recalibration happens only when the
+   tombstone ledger crosses the compaction threshold, and it lands in
+   think-time.
+
+Ratio metrics follow the suite convention (emitted as ratio/1e6 so the JSON
+value IS the ratio); ``ingest/rows_per_sec`` likewise records rows/1e6·s so
+the value is the raw rows/sec figure.  All randomness is pinned through
+``common.seeded_rng`` — BENCH_ingest.json is reproducible run-to-run.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import gc
+import os
+import time
+
+import numpy as np
+
+from repro.core import (
+    CJTEngine, DashboardSpec, MessageStore, SetFilter, Treant, VizSpec,
+    jt_from_catalog,
+)
+from repro.core import semiring as sr
+from repro.relational import schema
+
+from .common import emit, seeded_rng
+
+FLIGHT_SEED = 1
+BATCHES_PER_TICK = 4
+
+
+def ingest_spec(ring: str = "sum") -> DashboardSpec:
+    m = ("Flights", "dep_delay")
+    return DashboardSpec(vizzes=(
+        VizSpec("by_state", measure=m, ring=ring, group_by=("airport_state",)),
+        VizSpec("by_month", measure=m, ring=ring, group_by=("month",)),
+        VizSpec("by_carrier", measure=m, ring=ring, group_by=("carrier_group",)),
+        VizSpec("by_size", measure=m, ring=ring, group_by=("airport_size",)),
+    ))
+
+
+EVENTS = (
+    SetFilter("carrier_group", values=(2, 3), source="by_carrier"),
+    SetFilter("airport_size", values=(0, 3), source="by_size"),
+    SetFilter("carrier_group", values=(4,), source="by_carrier"),
+    SetFilter("airport_size", values=(2,), source="by_size"),
+    SetFilter("carrier_group", values=(1, 5), source="by_carrier"),
+    SetFilter("carrier_group", values=(0, 2), source="by_carrier"),
+)
+
+
+def _prewarm_process():
+    warm_cat = schema.flight(n_flights=2_000, seed=FLIGHT_SEED)
+    tw = Treant(warm_cat, ring=sr.SUM, jt=jt_from_catalog(warm_cat))
+    tw.open_session(ingest_spec(), name="prewarm")
+
+
+def _warm(sess):
+    for ev in EVENTS + EVENTS:
+        sess.apply(ev)
+        sess.idle()
+
+
+@contextlib.contextmanager
+def _no_gc():
+    """Pause the collector during a timed pass: a cyclic-GC sweep landing
+    inside a sub-ms event is a multi-ms outlier that dominates a small-n p99
+    (both the baseline and the ingest pass are equally affected — pausing
+    keeps the *ratio* honest).  One collection runs at pass exit."""
+    on = gc.isenabled()
+    gc.collect()
+    gc.disable()
+    try:
+        yield
+    finally:
+        if on:
+            gc.enable()
+        gc.collect()
+
+
+def _event_pass(treant, sess, per_event=None):
+    """One pass over EVENTS; ``per_event(i)`` runs (untimed) before each
+    event — the ingestion work interleaved with the interactive stream."""
+    lat = []
+    with _no_gc():
+        for i, ev in enumerate(EVENTS):
+            if per_event is not None:
+                per_event(i)
+            treant.store.block_until_ready()
+            t0 = time.perf_counter()
+            sess.apply(ev)
+            lat.append(time.perf_counter() - t0)
+            sess.idle()
+    return lat
+
+
+def _queue_tick(rng, buf, rows: int):
+    """Queue BATCHES_PER_TICK append micro-batches plus one delete batch."""
+    rel = buf.base
+    per = max(1, rows // BATCHES_PER_TICK)
+    for _ in range(BATCHES_PER_TICK):
+        buf.append(
+            {a: rng.integers(0, rel.domains[a], per) for a in rel.attrs},
+            measures={m: rng.gamma(1.5, 10.0, per).astype(np.float32)
+                      for m in rel.measures},
+        )
+    # tombstone ~0.1% of the live base rows + cancel a few fresh appends
+    mask = np.zeros(rel.num_rows + buf.pending_appends, bool)
+    live = np.flatnonzero(rel._materialized_weights() != 0.0)
+    n_del = max(1, live.size // 1000)
+    mask[rng.choice(live, n_del, replace=False)] = True
+    mask[rel.num_rows + rng.choice(buf.pending_appends, 2, replace=False)] = True
+    buf.delete(mask)
+    return per * BATCHES_PER_TICK + n_del + 2
+
+
+def run_sustained(scale: float = 1.0):
+    rng = seeded_rng("ingest/sustained")
+    cat = schema.flight(n_flights=max(2_000, int(100_000 * scale)),
+                        seed=FLIGHT_SEED)
+    jt = jt_from_catalog(cat)
+    _prewarm_process()
+    t = Treant(cat, ring=sr.SUM, jt=jt, compaction_threshold=0.0)
+    sess = t.open_session(ingest_spec(), name="bench")
+    _warm(sess)
+
+    # -- no-ingest baseline: the warm event tail with a quiet write path
+    lat_base = []
+    for _ in range(5):
+        lat_base += _event_pass(t, sess)
+    p99_base = float(np.percentile(lat_base, 99))
+    emit("ingest/p99_warm_event_no_ingest", p99_base,
+         f"median={np.median(lat_base) * 1e6:.0f}us n={len(lat_base)}")
+
+    # -- sustained ingestion: one coalesced tick before every event
+    tick_rows = max(200, int(2_000 * scale))
+    rows_total = 0
+    flush_seconds = 0.0
+    ticks0 = t.ingest.ticks
+    bumps0, sweeps0 = t.ingest.version_bumps, t.ingest.delta_sweeps
+
+    def ingest_tick(_i):
+        nonlocal rows_total, flush_seconds
+        rows = _queue_tick(rng, t.stream("Flights"), tick_rows)
+        t.store.block_until_ready()
+        t0 = time.perf_counter()
+        res = t.flush()
+        flush_seconds += time.perf_counter() - t0
+        rows_total += rows
+        assert res.relations == ["Flights"] and not res.compactions
+        assert all(u.queries_fallback == 0 for u in res.updates)
+
+    lat_ingest = []
+    for _ in range(5):
+        lat_ingest += _event_pass(t, sess, per_event=ingest_tick)
+    p99_ingest = float(np.percentile(lat_ingest, 99))
+    n_ticks = t.ingest.ticks - ticks0
+
+    # the coalescing contract: one bump + one sweep per tick, despite
+    # BATCHES_PER_TICK+1 micro-batches per tick
+    assert n_ticks == len(lat_ingest)
+    assert t.ingest.version_bumps - bumps0 == n_ticks, t.ingest
+    assert t.ingest.delta_sweeps - sweeps0 == n_ticks, t.ingest
+    rows_per_sec = rows_total / max(flush_seconds, 1e-9)
+    emit("ingest/rows_per_sec", rows_per_sec / 1e6,
+         f"rows={rows_total} ticks={n_ticks} "
+         f"batches/tick={BATCHES_PER_TICK + 1} flush_s={flush_seconds:.3f}")
+    emit("ingest/flush_tick", flush_seconds / n_ticks,
+         f"coalesce+maintain+commit, {rows_total // n_ticks} rows/tick")
+    emit("ingest/p99_warm_event_ingest", p99_ingest,
+         f"median={np.median(lat_ingest) * 1e6:.0f}us n={len(lat_ingest)}")
+    ratio = p99_ingest / max(p99_base, 1e-9)
+    emit("ingest/p99_ratio", ratio / 1e6,
+         f"ingest vs no-ingest p99 = {ratio:.2f}x")
+    if scale >= 1.0 and "plans" in t.cache_stats():
+        # acceptance bar, compiled leg only — at smoke scale sub-ms events
+        # put the ratio in the scheduler-noise regime (gated nightly via the
+        # scale1 baseline instead), and the un-jitted plans-off reference leg
+        # is host-bound at ~8ms/event where run-to-run noise straddles the
+        # bar (its ratio is still emitted above for the nightly artifacts)
+        assert ratio <= 1.3, (
+            f"sustained ingestion degraded warm p99 {ratio:.2f}x (> 1.3x)"
+        )
+
+    # stream-then-flush ≡ rebuild on every viz (float data: allclose; the
+    # bit-identity contract on integer data is tests/test_stream_ingest.py's)
+    cold = CJTEngine(jt, cat, sr.SUM, store=MessageStore(),
+                     use_plans=False)
+    for viz in sess.vizzes:
+        got = np.asarray(sess.read(viz).factor.field, np.float64)
+        want, _ = cold.execute(sess.query_of(viz))
+        assert np.allclose(got, np.asarray(want.field, np.float64),
+                           rtol=1e-4, atol=1e-4), f"{viz} diverged from rebuild"
+    sess.close()
+    return ratio
+
+
+def run_min_compaction(scale: float = 1.0):
+    rng = seeded_rng("ingest/min_compaction")
+    cat = schema.flight(n_flights=max(2_000, int(20_000 * scale)),
+                        seed=FLIGHT_SEED)
+    t = Treant(cat, ring=sr.TROPICAL_MIN, jt=jt_from_catalog(cat),
+               compaction_threshold=0.25)
+    sess = t.open_session(ingest_spec(ring="tropical_min"), name="bench")
+    plans_on = "plans" in t.cache_stats()
+    disp0 = t.cache_stats()["plans"]["calibration_dispatches"] if plans_on else -1
+
+    buf = t.stream("Flights")
+    ticks = 0
+    t0 = time.perf_counter()
+    while True:
+        rel = buf.base
+        live = np.flatnonzero(rel._materialized_weights() != 0.0)
+        mask = np.zeros(rel.num_rows, bool)
+        mask[rng.choice(live, max(1, live.size // 12), replace=False)] = True
+        buf.delete(mask)
+        res = t.flush()
+        ticks += 1
+        assert all(u.queries_fallback == 0 for u in res.updates), (
+            "tombstoned MIN delta fell back before compaction"
+        )
+        if res.compactions:
+            break
+        # absorbing ticks must not recalibrate: dispatch count stays flat
+        if plans_on:
+            assert (
+                t.cache_stats()["plans"]["calibration_dispatches"] == disp0
+            ), f"tick {ticks} recalibrated without compaction"
+        assert ticks < 64, "compaction threshold never crossed"
+    t_stream = time.perf_counter() - t0
+    (cupd,) = res.compactions
+    assert cupd.queries_fallback > 0  # MIN takes its ONE real recalibration
+    emit("ingest/min_delete_ticks_to_compaction", t_stream,
+         f"ticks={ticks} fallbacks=0 until compaction")
+
+    t0 = time.perf_counter()
+    sess.idle()  # drain the deprioritized recalibration in think-time
+    t_recal = time.perf_counter() - t0
+    if plans_on:
+        assert t.cache_stats()["plans"]["calibration_dispatches"] > disp0
+    emit("ingest/min_compaction_recalibrate", t_recal,
+         f"one deprioritized recalibration after {ticks} absorbed ticks")
+    cold = CJTEngine(t.jt, cat, sr.TROPICAL_MIN, store=MessageStore(),
+                     use_plans=False)
+    for viz in sess.vizzes:
+        got = np.asarray(sess.read(viz).factor.field, np.float64)
+        want, _ = cold.execute(sess.query_of(viz))
+        np.testing.assert_array_equal(got, np.asarray(want.field, np.float64))
+    assert t.catalog.get("Flights").tombstone_count == 0
+    sess.close()
+
+
+def main():
+    scale = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+    run_sustained(scale=scale)
+    run_min_compaction(scale=scale)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,5 @@
-"""CI perf-regression gate: compare a fresh BENCH_dashboard.json against the
-committed baseline snapshot in ``benchmarks/baselines/``.
+"""CI perf-regression gate: compare fresh BENCH_*.json summaries against the
+committed baseline snapshots in ``benchmarks/baselines/``.
 
 The smoke bench uploads ``BENCH_*.json`` artifacts on every CI run, but until
 this gate nothing ever *compared* them — a silent warm-event regression
@@ -7,25 +7,32 @@ could land unnoticed.  This script fails (exit 1) when a gated metric
 regresses beyond its per-metric tolerance:
 
 - latency metrics (``warm_event``) regress when they grow;
-- speedup-ratio metrics (``event_speedup``, ``prefetch_speedup``, …)
-  regress when they shrink.
+- speedup-ratio and throughput metrics (``event_speedup``,
+  ``prefetch_speedup``, ``ingest/rows_per_sec``, …) regress when they shrink.
+
+Metrics are routed to their producing suite by name prefix
+(``crossfilter/* → BENCH_dashboard.json``, ``ingest/* → BENCH_ingest.json``);
+each suite has its own baseline file, keyed by plans leg and scale band.  A
+suite whose fresh summary is absent (a matrix leg that doesn't run it) is
+skipped, not failed.
 
 It is **scale-aware**: ratio metrics that only separate from noise at full
 scale (``batch_speedup`` is ~1.0 at the CI smoke scale 0.05, where per-event
-work is sub-millisecond) carry a ``min_scale`` and are skipped below it —
-the nightly full-scale workflow is where they are recorded.
+work is sub-millisecond; the ingest p99 tail likewise) carry a ``min_scale``
+and are skipped below it — the nightly full-scale workflow is where they are
+recorded.
 
 Usage::
 
     python -m benchmarks.check_regression                 # CI gate
     python -m benchmarks.check_regression --self-test     # prove it fires
-    python -m benchmarks.check_regression --write-baseline  # refresh snapshot
+    python -m benchmarks.check_regression --write-baseline  # refresh snapshots
 
 Baseline refresh procedure (see ROADMAP.md): after an *intentional* perf
-change, regenerate the smoke-scale summary on the matrix leg and commit it::
+change, regenerate the smoke-scale summaries on the matrix leg and commit::
 
     REPRO_BENCH_SCALE=0.05 REPRO_USE_PLANS=1 \
-        PYTHONPATH=src python -m benchmarks.run dashboard
+        PYTHONPATH=src python -m benchmarks.run dashboard ingest
     PYTHONPATH=src python -m benchmarks.check_regression --write-baseline
 """
 
@@ -50,8 +57,10 @@ class Metric:
     min_scale: float = 0.0    # skip below this REPRO_BENCH_SCALE
 
 
-# Per-metric tolerances.  The three headline metrics fail the PR on >20%
+# Per-metric tolerances.  The headline metrics fail the PR on >20%
 # regression; ratio metrics meaningful only at full scale are nightly-gated.
+# The sustained-ingestion throughput gets a wider band (0.30): rows/sec is a
+# wall-clock figure on shared runners, noisier than the paired ratios.
 GATED: dict[str, Metric] = {
     "crossfilter/warm_event": Metric(lower_is_better=True, tolerance=0.20),
     "crossfilter/event_speedup": Metric(lower_is_better=False, tolerance=0.20),
@@ -62,7 +71,26 @@ GATED: dict[str, Metric] = {
     "crossfilter/offline_batch_speedup": Metric(
         lower_is_better=False, tolerance=0.20, min_scale=1.0
     ),
+    "ingest/rows_per_sec": Metric(lower_is_better=False, tolerance=0.30),
+    "ingest/p99_ratio": Metric(
+        lower_is_better=True, tolerance=0.20, min_scale=1.0
+    ),
 }
+
+# metric-name prefix -> producing suite (the BENCH_<suite>.json file)
+PREFIX_SUITE = {
+    "crossfilter": "dashboard",
+    "salesforce": "dashboard",
+    "ingest": "ingest",
+}
+
+
+def suite_of(name: str) -> str:
+    return PREFIX_SUITE[name.split("/", 1)[0]]
+
+
+def gated_suites() -> list[str]:
+    return sorted({suite_of(name) for name in GATED})
 
 
 def plans_leg() -> str:
@@ -71,21 +99,29 @@ def plans_leg() -> str:
     ) else "0"
 
 
-def default_baseline(scale: float) -> str:
-    """Baselines are keyed by plans leg AND scale band: absolute latencies
-    at smoke scale are not comparable to full scale, and the full-scale
-    snapshot (nightly gate) holds only the host-robust ratio metrics."""
+def baseline_path(suite: str, scale: float) -> str:
+    """Baselines are keyed by suite, plans leg AND scale band: absolute
+    latencies at smoke scale are not comparable to full scale, and the
+    full-scale snapshots (nightly gate) hold only the host-robust ratio
+    metrics."""
     here = os.path.dirname(os.path.abspath(__file__))
     suffix = ".scale1" if scale >= 1.0 else ""
     return os.path.join(
-        here, "baselines", f"BENCH_dashboard.plans{plans_leg()}{suffix}.json"
+        here, "baselines", f"BENCH_{suite}.plans{plans_leg()}{suffix}.json"
     )
+
+
+def fresh_path(suite: str, fresh_dir: str) -> str:
+    return os.path.join(fresh_dir, f"BENCH_{suite}.json")
 
 
 def compare(
     fresh: dict, baseline: dict, scale: float
 ) -> tuple[list[str], list[str]]:
-    """Returns (failures, report lines)."""
+    """Returns (failures, report lines).  ``fresh``/``baseline`` are the
+    merged per-suite summaries; a metric whose suite produced no fresh
+    summary this run is absent from ``fresh`` *and* flagged in it under
+    ``"__missing__<suite>"`` — those are skipped."""
     failures: list[str] = []
     report: list[str] = []
     for name, spec in GATED.items():
@@ -93,6 +129,11 @@ def compare(
             report.append(
                 f"SKIP  {name}: scale {scale} < {spec.min_scale} "
                 f"(full-scale-only ratio metric)"
+            )
+            continue
+        if f"__missing__{suite_of(name)}" in fresh:
+            report.append(
+                f"SKIP  {name}: no fresh BENCH_{suite_of(name)}.json this run"
             )
             continue
         if name not in baseline:
@@ -137,8 +178,10 @@ def self_test(fresh: dict | None, baseline: dict | None) -> int:
             "crossfilter/prefetch_speedup": 6.0,
             "crossfilter/batch_speedup": 1.6,
             "crossfilter/offline_batch_speedup": 1.6,
+            "ingest/rows_per_sec": 300_000.0,
+            "ingest/p99_ratio": 1.1,
         }
-    if not fresh:
+    if not fresh or any(k.startswith("__missing__") for k in fresh):
         fresh = dict(baseline)
     ok = True
 
@@ -177,70 +220,108 @@ def self_test(fresh: dict | None, baseline: dict | None) -> int:
     # failed) at the smoke scale even when catastrophically regressed
     bad = dict(baseline)
     bad["crossfilter/batch_speedup"] = 0.01
+    bad["ingest/p99_ratio"] = 50.0
     failures, _ = compare(bad, baseline, scale=0.05)
-    if any("batch_speedup" in f for f in failures):
+    if any("batch_speedup" in f or "p99_ratio" in f for f in failures):
         print("self-test: full-scale-only metric gated at smoke scale")
+        ok = False
+
+    # 4) suite routing: an absent fresh suite summary is a skip, not a fail
+    routed = dict(baseline)
+    routed.pop("ingest/rows_per_sec", None)
+    routed["__missing__ingest"] = 1.0
+    failures, _ = compare(routed, baseline, scale=1.0)
+    if any("rows_per_sec" in f for f in failures):
+        print("self-test: missing suite summary treated as a regression")
         ok = False
 
     print(f"self-test: {'PASS — the gate fires' if ok else 'FAIL'}")
     return 0 if ok else 1
 
 
+def load(path):
+    if not os.path.exists(path):
+        return None
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def load_merged(fresh_dir: str, scale: float) -> tuple[dict, dict, list[str]]:
+    """Merge every gated suite's fresh + baseline summaries; returns
+    (fresh, baseline, lines) where absent suites are marked in ``fresh``."""
+    fresh: dict = {}
+    baseline: dict = {}
+    lines: list[str] = []
+    for suite in gated_suites():
+        fp = fresh_path(suite, fresh_dir)
+        f = load(fp)
+        if f is None:
+            fresh[f"__missing__{suite}"] = 1.0
+            lines.append(f"note: no fresh summary at {fp} (suite skipped)")
+            continue
+        fresh.update(f)
+        bp = baseline_path(suite, scale)
+        b = load(bp)
+        if b is None:
+            lines.append(
+                f"WARNING: no baseline at {bp}; its metrics are skipped. "
+                f"Commit one via --write-baseline."
+            )
+            continue
+        baseline.update(b)
+    return fresh, baseline, lines
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--fresh", default="BENCH_dashboard.json",
-                    help="freshly produced bench summary")
-    ap.add_argument("--baseline", default=None,
-                    help="committed baseline (default: benchmarks/baselines/"
-                         "BENCH_dashboard.plans<REPRO_USE_PLANS>.json)")
+    ap.add_argument("--fresh-dir", default=".",
+                    help="directory holding the fresh BENCH_<suite>.json "
+                         "summaries (default: cwd)")
     ap.add_argument("--scale", type=float,
                     default=float(os.environ.get("REPRO_BENCH_SCALE", "1.0")),
-                    help="bench scale the fresh summary was produced at")
+                    help="bench scale the fresh summaries were produced at")
     ap.add_argument("--self-test", action="store_true",
                     help="prove the gate fires on a deliberate regression")
     ap.add_argument("--write-baseline", action="store_true",
-                    help="copy --fresh over the baseline (refresh procedure)")
+                    help="copy each fresh summary over its baseline "
+                         "(refresh procedure)")
     args = ap.parse_args()
 
-    baseline_path = args.baseline or default_baseline(args.scale)
-
-    def load(path):
-        if not os.path.exists(path):
-            return None
-        with open(path) as fh:
-            return json.load(fh)
-
     if args.self_test:
-        return self_test(load(args.fresh), load(baseline_path))
+        fresh, baseline, _ = load_merged(args.fresh_dir, args.scale)
+        return self_test(fresh, baseline)
 
     if args.write_baseline:
         if args.scale >= 1.0:
-            print("the full-scale baseline is a hand-curated ratio subset — "
-                  "edit it directly (see benchmarks/baselines/README.md)")
+            print("the full-scale baselines are hand-curated ratio subsets — "
+                  "edit them directly (see benchmarks/baselines/README.md)")
             return 1
-        if not os.path.exists(args.fresh):
-            print(f"no fresh summary at {args.fresh}; run the bench first")
+        wrote = 0
+        for suite in gated_suites():
+            fp = fresh_path(suite, args.fresh_dir)
+            if not os.path.exists(fp):
+                print(f"note: no fresh summary at {fp}; suite not refreshed")
+                continue
+            bp = baseline_path(suite, args.scale)
+            os.makedirs(os.path.dirname(bp), exist_ok=True)
+            shutil.copyfile(fp, bp)
+            print(f"baseline refreshed: {bp}")
+            wrote += 1
+        if not wrote:
+            print("no fresh summaries found; run the benches first")
             return 1
-        os.makedirs(os.path.dirname(baseline_path), exist_ok=True)
-        shutil.copyfile(args.fresh, baseline_path)
-        print(f"baseline refreshed: {baseline_path}")
         return 0
 
-    fresh = load(args.fresh)
-    if fresh is None:
-        print(f"no fresh summary at {args.fresh}; run "
-              f"`python -m benchmarks.run dashboard` first")
+    fresh, baseline, lines = load_merged(args.fresh_dir, args.scale)
+    if all(k.startswith("__missing__") for k in fresh):
+        print(f"no fresh summaries in {args.fresh_dir}; run "
+              f"`python -m benchmarks.run dashboard ingest` first")
         return 1
-    baseline = load(baseline_path)
-    if baseline is None:
-        # a missing baseline is not a regression (e.g. a brand-new matrix
-        # leg) — but say so loudly and point at the refresh procedure
-        print(f"WARNING: no baseline at {baseline_path}; skipping the gate. "
-              f"Commit one via --write-baseline.")
-        return 0
+    print(f"perf-regression gate: {args.fresh_dir}/BENCH_*.json vs "
+          f"benchmarks/baselines (plans{plans_leg()}, scale {args.scale})")
+    for line in lines:
+        print(f"  {line}")
     failures, report = compare(fresh, baseline, args.scale)
-    print(f"perf-regression gate: {args.fresh} vs {baseline_path} "
-          f"(scale {args.scale})")
     for line in report:
         print(f"  {line}")
     if failures:

@@ -16,7 +16,7 @@ from .dashboard import (  # noqa: F401
     Rollup, Session, SetFilter, SwapMeasure, ThinkTimeScheduler,
     ToggleRelation, Undo, VizSpec, speculate_filters,
 )
-from .treant import Treant, UpdateResult  # noqa: F401
+from .treant import FlushResult, IngestStats, Treant, UpdateResult  # noqa: F401
 from . import steiner  # noqa: F401
 from .ml import FactorizedLinearRegression, FeatureSpec, FitResult  # noqa: F401
 from .cube import build_cube, naive_cube_cost, CubeReport  # noqa: F401

@@ -249,16 +249,23 @@ class MessageStore:
             self._pinned.pop(sig, None)
 
     def apply_delta(
-        self, old_base: str, new_base: str, gamma: tuple[str, ...], delta: Factor
+        self,
+        old_base: str,
+        new_base: str,
+        gamma: tuple[str, ...],
+        delta: Factor | None,
     ) -> Factor | None:
         """Maintain one message across a data update: new = old ⊕ Δ.
 
         Looks up the cached message under the *old* signature (Σ-widening
         applies), combines it with the delta factor, and stores the result
-        under the bumped *new* signature.  A pin migrates to the new
-        generation: the old-version message stays servable for queries still
-        snapshotting the old version, but becomes evictable — otherwise every
-        update would grow an unevictable pinned generation.
+        under the bumped *new* signature.  ``delta=None`` means the update is
+        value-preserving (a compaction: the ⊕-difference is zero) — the old
+        message is re-keyed to the new signature verbatim, no arithmetic.
+        A pin migrates to the new generation: the old-version message stays
+        servable for queries still snapshotting the old version, but becomes
+        evictable — otherwise every update would grow an unevictable pinned
+        generation.
         Returns None (and stores nothing) when there is no cached message to
         maintain; the new-version message will then be computed on demand.
         """
@@ -266,7 +273,7 @@ class MessageStore:
         if old is None:
             self.misses -= 1  # probe, not a serving miss
             return None
-        new = old.add(delta)
+        new = old if delta is None else old.add(delta)
         # migrate the whole DIRECT pin refcount (several sessions may hold
         # it).  A message pinned only through a wider-γ variant migrates
         # when that wider query is itself maintained — minting a fresh
@@ -629,8 +636,27 @@ class CJTEngine:
         if self.plans is not None:
             measure = q.measure[1] if q.measure and q.measure[0] == rel.name else None
             key = (rel.key, self.ring.name, measure, q.lift_tag, self._lift_id(rel.name))
-            return self.plans.lift_cached(key, lambda: self._lift_impl(q, rel))
+            return self.plans.lift_cached(
+                key, lambda: self._pad_lift(self._lift_impl(q, rel), rel)
+            )
         return self._lift_impl(q, rel)
+
+    def _pad_lift(self, vals: sr.Field, rel: Relation) -> sr.Field:
+        """Pad per-row lift values to ``rel.row_bucket`` with the ⊕-identity.
+
+        Compiled plans trace against the bucketed row count (shape-stable
+        across streamed ticks); identity rows are ⊗-absorbing and aggregate
+        into segment 0 as ⊕-no-ops, so padding is exact for every ring.
+        Only the plans path pads — the un-jitted reference path works on
+        exact ``num_rows`` arrays.
+        """
+        pad = rel.row_bucket - rel.num_rows
+        if pad <= 0:
+            return vals
+        zeros = self.ring.zeros((pad,))
+        return jax.tree_util.tree_map(
+            lambda a, z: jnp.concatenate([a, z], axis=0), vals, zeros
+        )
 
     def _lift_impl(self, q: Query, rel: Relation) -> sr.Field:
         if rel.name in self.lifts:
@@ -1353,16 +1379,21 @@ class CJTEngine:
         q_delta = q_new.with_version(delta.relation, delta.rows.version)
         upward = self.jt.traversal_to_root(u0)  # (child, parent): parent is u₀-side
         toward_u0 = {c: p for (c, p) in upward}
+        # an empty delta (compaction) is the ⊕-zero: every outward message is
+        # value-identical under the new version — re-key, contract nothing
+        empty = delta.num_rows == 0
         dmsgs: dict[tuple[str, str], Factor] = {}
         for (c, p) in reversed(upward):  # edges nearest u₀ first
             u, v = p, c  # the changed direction points away from u₀
-            via = None if u == u0 else toward_u0[u]
-            d = self.delta_message(
-                q_new, q_delta, u, v, placement_new,
-                via=via, delta_in=None if via is None else dmsgs[(via, u)],
-            )
-            dmsgs[(u, v)] = d
-            stats.delta_messages += 1
+            d = None
+            if not empty:
+                via = None if u == u0 else toward_u0[u]
+                d = self.delta_message(
+                    q_new, q_delta, u, v, placement_new,
+                    via=via, delta_in=None if via is None else dmsgs[(via, u)],
+                )
+                dmsgs[(u, v)] = d
+                stats.delta_messages += 1
             old_base = self.edge_sig(q, u, v, placement_old)
             new_base = self.edge_sig(q_new, u, v, placement_new)
             gamma = self.gamma_carry(q_new, u, v)

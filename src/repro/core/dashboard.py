@@ -199,41 +199,76 @@ def speculate_filters(ev: SetFilter, domain: int, k: int) -> list[SetFilter]:
     are the value set shifted by whole spans (sibling domain values).  The
     candidate list is deterministic — alternating +/- by distance — so
     prefetch behavior is reproducible and testable.
+
+    Termination tracks each direction's *liveness* separately and stops only
+    when both are exhausted, so the generator returns exactly
+    ``min(k, feasible)`` distinct candidates.  (The previous step-count
+    guards were wrong at domain edges: the IN-branch's ``abs(step·span) >
+    domain`` was vacuous for the positive direction and could spin long after
+    both directions left the domain, and the range branch could break before
+    emitting a feasible clipped edge window in the other direction.)
     """
     out: list[SetFilter] = []
     seen = set()
 
-    def emit(cand: SetFilter) -> None:
+    def emit(cand: SetFilter) -> bool:
         key = (cand.values, cand.lo, cand.hi)
         if key not in seen:
             seen.add(key)
             out.append(cand)
+        return len(out) >= k
 
+    if k <= 0:
+        return out
     if ev.values:
         vals = sorted(set(ev.values))
         span = vals[-1] - vals[0] + 1
-        for step in range(1, 2 * k + 2):
-            for off in (step * span, -step * span):
-                shifted = tuple(v + off for v in vals)
-                if all(0 <= v < domain for v in shifted):
-                    emit(dataclasses.replace(ev, values=shifted))
-                if len(out) >= k:
+        pos = neg = True  # direction still inside the domain
+        step = 0
+        while pos or neg:
+            step += 1
+            off = step * span
+            # a shifted IN-list is feasible only when it fits whole: once one
+            # endpoint leaves the domain, every later step in that direction
+            # is further out — the direction is dead
+            if pos and vals[-1] + off >= domain:
+                pos = False
+            elif pos:
+                if emit(dataclasses.replace(
+                        ev, values=tuple(v + off for v in vals))):
                     return out
-            if abs(step * span) > domain:
-                break
+            if neg and vals[0] - off < 0:
+                neg = False
+            elif neg:
+                if emit(dataclasses.replace(
+                        ev, values=tuple(v - off for v in vals))):
+                    return out
         return out
     if ev.lo is None or ev.hi is None:
         return out
     width = max(ev.hi - ev.lo, 1)
-    for step in range(1, 2 * k + 2):
-        for off in (step * width, -step * width):
-            lo, hi = max(ev.lo + off, 0), min(ev.hi + off, domain)
-            if lo < hi and (lo, hi) != (ev.lo, ev.hi):
-                emit(dataclasses.replace(ev, lo=lo, hi=hi))
-            if len(out) >= k:
-                return out
-        if step * width > domain:
-            break
+    pos = neg = True
+    step = 0
+    while pos or neg:
+        step += 1
+        off = step * width
+        # ranges clip at the edges: a direction stays live until the clipped
+        # window collapses (lo >= domain / hi <= 0); the clipped edge windows
+        # themselves are feasible candidates and must be emitted
+        if pos:
+            lo, hi = ev.lo + off, min(ev.hi + off, domain)
+            if lo >= domain or lo >= hi:
+                pos = False
+            elif (lo, hi) != (ev.lo, ev.hi):
+                if emit(dataclasses.replace(ev, lo=lo, hi=hi)):
+                    return out
+        if neg:
+            lo, hi = max(ev.lo - off, 0), ev.hi - off
+            if hi <= 0 or lo >= hi:
+                neg = False
+            elif (lo, hi) != (ev.lo, ev.hi):
+                if emit(dataclasses.replace(ev, lo=lo, hi=hi)):
+                    return out
     return out
 
 
@@ -285,6 +320,9 @@ class _CalTask:
     priority: int
     plan: CalibrationPlan | None = None
     done: int = 0
+    # lowest-priority tier: compaction-triggered recalibrations run only
+    # when no interactive think-time work is pending
+    deprioritized: bool = False
 
 
 class ThinkTimeScheduler:
@@ -312,20 +350,29 @@ class ThinkTimeScheduler:
         self.speculative_messages = 0  # messages those queries materialized
         self._session_preemptions: dict[str, int] = {}
 
-    def schedule(self, session: str, viz: str, query: Query, engine: CJTEngine) -> None:
+    def schedule(
+        self,
+        session: str,
+        viz: str,
+        query: Query,
+        engine: CJTEngine,
+        deprioritized: bool = False,
+    ) -> None:
         key = (session, viz)
         self._seq += 1
         t = self._tasks.get(key)
         if t is not None:
             if t.digest == query.digest:
                 t.priority = self._seq  # refresh recency, keep progress
+                t.deprioritized = deprioritized
                 return
             self.preemptions += 1
             self._session_preemptions[session] = (
                 self._session_preemptions.get(session, 0) + 1
             )
         self._tasks[key] = _CalTask(
-            session, viz, query.digest, query, engine, priority=self._seq
+            session, viz, query.digest, query, engine, priority=self._seq,
+            deprioritized=deprioritized,
         )
 
     def pending(self, session: str | None = None) -> int:
@@ -366,7 +413,12 @@ class ThinkTimeScheduler:
         )
 
     def _pick(self, cands: list[_CalTask]) -> _CalTask:
-        return min(cands, key=lambda t: (self._remaining_cost(t), -t.priority))
+        # deprioritized (compaction) tasks form a strictly lower tier: any
+        # interactive task — whatever its cost — runs first
+        return min(
+            cands,
+            key=lambda t: (t.deprioritized, self._remaining_cost(t), -t.priority),
+        )
 
     def run(
         self,
@@ -516,6 +568,23 @@ class _VizView:
     crossfilter: bool = True
 
 
+@dataclasses.dataclass
+class _Prefetched:
+    """One parked speculative result.
+
+    ``dist`` is the candidate's rank in :func:`speculate_filters`' nearest-
+    first order (0 = the σ value right next to the anchor brush): capacity
+    eviction drops the *farthest* entries first, since the nearest neighbors
+    are the likeliest next interaction.  ``query`` lets ``Treant.update`` /
+    ``flush`` invalidate only entries that can actually see an updated
+    relation.
+    """
+
+    factor: object
+    query: Query
+    dist: int
+
+
 class Session:
     """One user's live dashboard over a shared Treant.
 
@@ -537,9 +606,9 @@ class Session:
         self._undo: list[tuple] = []
         self.undo_depth = 64
         self.events_applied = 0
-        # speculative σ prefetch: (viz, query digest) -> absorbed Factor,
+        # speculative σ prefetch: (viz, query digest) -> _Prefetched entry,
         # filled by idle(speculate=), served (and popped) by _fan_out
-        self._prefetched: dict[tuple[str, str], object] = {}
+        self._prefetched: dict[tuple[str, str], _Prefetched] = {}
         self.prefetch_capacity = 128
         self.prefetch_hits = 0
         self._last_filter: SetFilter | None = None
@@ -709,7 +778,7 @@ class Session:
             if hit is not None:
                 self.prefetch_hits += 1
                 results[name] = InteractionResult(
-                    hit, ExecStats(prefetch_hits=1), 0.0, 0
+                    hit.factor, ExecStats(prefetch_hits=1), 0.0, 0
                 )
                 self._current[name] = q
                 self.scheduler.schedule(
@@ -862,9 +931,12 @@ class Session:
             return 0
         doms = self.catalog.domains()
         items: list[tuple[str, Query, CJTEngine]] = []
+        # (viz, digest) -> (query, candidate rank): rank 0 is the σ value
+        # closest to the anchor brush (speculate_filters is nearest-first)
+        meta: dict[tuple[str, str], tuple[Query, int]] = {}
         saved = self._filters.get(ev.attr)
         try:
-            for cand in speculate_filters(ev, doms[ev.attr], k):
+            for dist, cand in enumerate(speculate_filters(ev, doms[ev.attr], k)):
                 # derive through the real contract with the candidate σ
                 # swapped in, so digests match the eventual real event's
                 self._filters[ev.attr] = (self._predicate_of(cand), cand.source)
@@ -877,8 +949,10 @@ class Session:
                     if (
                         q.digest == self._current[name].digest
                         or key in self._prefetched
+                        or key in meta
                     ):
                         continue
+                    meta[key] = (q, dist)
                     items.append(
                         (name, q, self._treant.engine_for(q.ring_name, q.measure))
                     )
@@ -889,10 +963,29 @@ class Session:
                 self._filters[ev.attr] = saved
         if not items:
             return 0
-        self._prefetched.update(self.scheduler.speculate(self.id, items))
-        while len(self._prefetched) > self.prefetch_capacity:
-            self._prefetched.pop(next(iter(self._prefetched)))
+        for key, factor in self.scheduler.speculate(self.id, items).items():
+            q, dist = meta[key]
+            self._prefetched[key] = _Prefetched(factor, q, dist)
+        self._evict_prefetched()
         return len(items)
+
+    def _evict_prefetched(self) -> None:
+        """Capacity eviction, farthest-from-anchor first.
+
+        Entries park the fan-out for σ values *near* the user's last brush;
+        when ``speculate(k)`` overshoots ``prefetch_capacity`` the useful
+        entries are exactly the nearest ones, so evict by descending
+        speculation distance (ties: oldest insertion first).  The previous
+        policy popped in dict-insertion order — which is nearest-first
+        insertion — i.e. it threw away precisely the candidates most likely
+        to be hit next.
+        """
+        while len(self._prefetched) > self.prefetch_capacity:
+            victim = max(
+                enumerate(self._prefetched.items()),
+                key=lambda e: (e[1][1].dist, -e[0]),
+            )[1][0]
+            del self._prefetched[victim]
 
     # -- filters / introspection ----------------------------------------------
     @property

@@ -565,7 +565,7 @@ class PlanCache:
             self.ring.name,
             rel.attrs,
             tuple(rel.domains[a] for a in rel.attrs),
-            rel.num_rows,
+            rel.row_bucket,
             tuple((m.attrs, m.domain_shape) for m in incoming),
             tuple(p.attr for p in preds),
             tuple(out_attrs),
@@ -591,7 +591,7 @@ class PlanCache:
                 doms.update(m.domains)
             entry = _build_sparse_plan(
                 self.ring, rel.attrs, doms, tuple(m.attrs for m in incoming),
-                tuple(p.attr for p in preds), tuple(out_attrs), rel.num_rows,
+                tuple(p.attr for p in preds), tuple(out_attrs), rel.row_bucket,
             )
             self._plans.put(key, entry)
         rel_set = set(rel.attrs)
@@ -678,7 +678,14 @@ class PlanCache:
         doms = dict(rel.domains)
         doms.update(padded)
         pred_attrs = tuple(p.attr for p in items[0].preds)
-        key = absorb_batch_key(self.ring, items[0]) + (
+        # trace key: like the grouping key, but version-free (codes/masks/
+        # fields are runtime args — only shapes matter to the trace) and with
+        # the row axis bucketed, so streamed ticks re-hit the compiled plan
+        # instead of retracing per version bump
+        key = (
+            "sparse_batch", self.ring.name, rel.attrs,
+            tuple(rel.domains[a] for a in rel.attrs), rel.row_bucket,
+            in_canon, pred_attrs, out_canon, _field_struct(items[0].vals),
             tuple(tuple(sorted(md.items())) for md in member_dims),
         )
         entry = self._plans.get(key)
@@ -686,7 +693,7 @@ class PlanCache:
         if traced:
             entry = _build_batched_sparse_plan(
                 self.ring, rel.attrs, doms, in_canon, pred_attrs, out_canon,
-                rel.num_rows, member_dims,
+                rel.row_bucket, member_dims,
             )
             self._plans.put(key, entry)
         rel_set = set(rel.attrs)

@@ -115,6 +115,20 @@ class Query:
     def predicates_on(self, attr: str) -> tuple[Predicate, ...]:
         return tuple(p for p in self.predicates if p.attr == attr)
 
+    @property
+    def effective_versions(self) -> tuple[tuple[str, str], ...]:
+        """``rel_versions`` restricted to relations the query can see.
+
+        A removed (R̄) relation's version cannot influence the answer, so the
+        digest excludes it: version bumps on invisible relations keep the
+        digest stable, which is what lets ``Treant.update``/``flush`` keep
+        prefetched results and parked calibration progress for queries the
+        update cannot reach.
+        """
+        if not self.removed:
+            return self.rel_versions
+        return tuple((n, v) for n, v in self.rel_versions if n not in self.removed)
+
     @functools.cached_property
     def digest(self) -> str:
         # cached: signature derivation hashes this on every edge of every
@@ -123,7 +137,7 @@ class Query:
         h.update(repr((
             self.ring_name, self.measure, self.group_by,
             tuple(p.digest for p in self.predicates),
-            self.rel_versions, tuple(sorted(self.removed)), self.lift_tag,
+            self.effective_versions, tuple(sorted(self.removed)), self.lift_tag,
         )).encode())
         return h.hexdigest()[:16]
 
@@ -141,7 +155,7 @@ class Query:
         h.update(repr((
             self.ring_name, self.measure,
             tuple(p.digest for p in self.predicates),
-            self.rel_versions, tuple(sorted(self.removed)), self.lift_tag,
+            self.effective_versions, tuple(sorted(self.removed)), self.lift_tag,
         )).encode())
         return h.hexdigest()[:16]
 

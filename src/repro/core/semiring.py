@@ -62,6 +62,13 @@ class Semiring:
     # True iff ⊕ has inverses (ring is a group under ⊕): enables encoding
     # deletions as negatively-weighted delta rows (delta calibration).
     has_add_inverse: bool = False
+    # True iff ⊕ is idempotent (a ⊕ a = a: MIN/MAX/BOOL).  Idempotent rings
+    # can absorb *tombstoned* deletes (rows kept at weight 0, so the lift —
+    # which ignores weights for these rings — re-contributes values already
+    # folded into the cached messages) without an ⊕-inverse; the deletes
+    # become visible at the next compaction, which physically drops the
+    # tombstones and recalibrates.
+    idempotent_add: bool = False
     # ⊕-segment-reduction over the leading (row) axis; None → segment_sum
     # per leaf (valid whenever ⊕ is +).
     _segment: Callable[[Field, jax.Array, int], Field] | None = None
@@ -174,6 +181,7 @@ def _tropical(name: str, reducer, zero_val) -> Semiring:
         _ones=lambda s: jnp.zeros(s, dtype),
         trailing=(0,),
         is_arithmetic=False,
+        idempotent_add=True,
         _segment=lambda v, ids, n: seg(v, ids, n),
         kernel_segment_op="min" if reducer is jnp.minimum else "max",
     )
@@ -197,6 +205,7 @@ BOOL = Semiring(
     _ones=lambda s: jnp.ones(s, jnp.bool_),
     trailing=(0,),
     is_arithmetic=False,
+    idempotent_add=True,
     _segment=lambda v, ids, n: jax.ops.segment_sum(v.astype(jnp.int32), ids, n) > 0,
 )
 

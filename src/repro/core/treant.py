@@ -36,9 +36,13 @@ shared store never serves one ring's message to another.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Callable, Mapping
 
+import jax
+
 from repro.relational.relation import Catalog, Delta, Relation
+from repro.relational.stream import StreamBuffer
 from . import semiring as sr
 from .calibration import CJTEngine, DeltaStats, ExecStats, MessageStore
 from .plans import (
@@ -59,9 +63,18 @@ from .hypertree import JTree, jt_from_catalog
 from .query import Query
 
 __all__ = [
-    "Treant", "InteractionResult", "UpdateResult", "ApplyResult",
-    "DashboardSpec", "VizSpec", "Session", "ThinkTimeScheduler",
+    "Treant", "InteractionResult", "UpdateResult", "FlushResult", "IngestStats",
+    "ApplyResult", "DashboardSpec", "VizSpec", "Session", "ThinkTimeScheduler",
 ]
+
+
+def compaction_threshold_default() -> float:
+    """Tombstone fraction that triggers compaction at flush
+    (``REPRO_COMPACTION_THRESHOLD``, default 0.25; <= 0 disables)."""
+    try:
+        return float(os.environ.get("REPRO_COMPACTION_THRESHOLD", "0.25"))
+    except ValueError:  # pragma: no cover — malformed env
+        return 0.25
 
 
 @dataclasses.dataclass
@@ -71,6 +84,38 @@ class UpdateResult:
     queries_maintained: int   # distinct cached CJTs updated via delta calibration
     queries_fallback: int     # CJTs that must recalibrate (no ⊕-inverse, σ moved)
     stats: list[DeltaStats]
+
+
+@dataclasses.dataclass
+class IngestStats:
+    """Cumulative streaming-ingestion counters (the coalescing invariants).
+
+    The tentpole contract is visible here: after T flush ticks over R
+    streamed relations, ``version_bumps == delta_sweeps == T·R`` no matter
+    how many micro-batches each tick buffered (compactions add their own
+    bump+sweep, counted separately in ``compactions``).
+    """
+
+    ticks: int = 0            # flush() calls that committed at least one delta
+    version_bumps: int = 0    # committed relation version advances
+    delta_sweeps: int = 0     # apply_delta maintenance sweeps (one per relation per tick)
+    rows_appended: int = 0
+    rows_deleted: int = 0     # tombstoned
+    rows_cancelled: int = 0   # same-tick append+delete (never materialized)
+    compactions: int = 0
+
+
+@dataclasses.dataclass
+class FlushResult:
+    """Outcome of one ``Treant.flush`` tick."""
+
+    watermark: int                    # catalog watermark after the commit
+    updates: list[UpdateResult]       # one per relation with pending batches
+    compactions: list[UpdateResult]   # tombstone reclaims triggered this tick
+
+    @property
+    def relations(self) -> list[str]:
+        return [u.relation for u in self.updates]
 
 
 class Treant:
@@ -87,6 +132,7 @@ class Treant:
         use_plans: bool | None = None,
         batch_fanout: bool | None = None,
         batch_calibration: bool | None = None,
+        compaction_threshold: float | None = None,
     ):
         # None → env defaults: REPRO_USE_PLANS gates compiled plans (the CI
         # matrix runs both legs), REPRO_BATCH_FANOUT gates the vmapped
@@ -118,6 +164,14 @@ class Treant:
         self._dashboards: dict[str, Query] = {}
         self._sessions: dict[str, Session] = {}
         self._session_seq = 0  # monotonic: closed sessions never recycle ids
+        # streaming ingestion (ISSUE 6): per-relation micro-batch buffers,
+        # coalesced+committed by flush() under one catalog watermark
+        self._streams: dict[str, StreamBuffer] = {}
+        self.compaction_threshold = (
+            compaction_threshold if compaction_threshold is not None
+            else compaction_threshold_default()
+        )
+        self.ingest = IngestStats()
 
     # -- engines ---------------------------------------------------------------
     def engine_for(self, ring_name: str, measure=None) -> CJTEngine:
@@ -198,7 +252,7 @@ class Treant:
         return self._legacy_viz(session, viz).read(viz)
 
     # -- data updates (delta calibration) ---------------------------------------
-    def update(self, new_rel: Relation, delta: Delta) -> UpdateResult:
+    def update(self, new_rel: Relation, delta: Delta | None) -> UpdateResult:
         """Apply a base-data update online, maintaining every cached CJT.
 
         ``new_rel`` is the post-update relation version produced by
@@ -212,10 +266,18 @@ class Treant:
         σ-placement migration) nothing stale survives either: the bumped
         signatures simply miss, and the full recalibration is re-queued on
         the scheduler for the next think-time pass.
+
+        ``delta=None`` (the empty-update short-circuit of ``append_rows`` /
+        ``delete_rows``) is a no-op: nothing to maintain, no version bump.
         """
+        if delta is None:
+            return UpdateResult(new_rel.name, new_rel.version, 0, 0, [])
         assert new_rel.name == delta.relation and new_rel.version == delta.new_version
-        self.catalog.put(new_rel)
-        tracked = list(self._dashboards.values()) + [
+        self.catalog.put(new_rel, make_latest=False)  # staged until commit
+        return self._ingest([delta])[0]
+
+    def _tracked_queries(self) -> list[Query]:
+        return list(self._dashboards.values()) + [
             view.base for sess in self._sessions.values()
             for view in sess._views.values()
         ] + [
@@ -227,63 +289,196 @@ class Treant:
             q for sess in self._sessions.values()
             for q in sess._pinned_queries.values()
         ]
-        todo = {
-            q.digest: q for q in tracked
-            if q.version_of(delta.relation) == delta.old_version
-        }
-        all_stats: list[DeltaStats] = []
-        maintained = fallbacks = 0
-        fallback_digests: set[str] = set()
-        for q in todo.values():
-            _, st = self.engine_for(q.ring_name, q.measure).apply_delta(q, delta)
-            all_stats.append(st)
-            fallbacks += int(st.fallback)
-            if st.fallback:
-                fallback_digests.add(q.digest)
-            # a query the update can't even reach (relation removed / outside
-            # the JT) is neither maintained nor a fallback
-            maintained += int(not st.fallback and st.delta_messages > 0)
-        # fallback CJTs get no pin migration (apply_delta maintained nothing),
-        # but their pinned queries are version-bumped below — a later
-        # Session.close would then unpin the *new* sigs (no-ops) and leak the
-        # old-version pins forever.  Release them now, while the pre-bump
-        # query still derives the pinned signatures; the recalibration queued
-        # on the scheduler below rebuilds the CJT unpinned.
-        for sess in self._sessions.values():
-            for key, qp in sorted(sess._pinned_queries.items()):
-                if qp.digest in fallback_digests:
-                    self.engine_for(qp.ring_name, qp.measure).unpin_query(qp)
-                    del sess._pinned_queries[key]
 
-        def bump(q: Query) -> Query:
-            if q.version_of(delta.relation) == delta.old_version:
-                return q.with_version(delta.relation, delta.new_version)
-            return q
+    def _sees(self, q: Query, relation: str) -> bool:
+        """Can ``relation``'s data reach this query's answer?"""
+        return relation not in q.removed and relation in self.jt.mapping
 
-        self._dashboards = {v: bump(q) for v, q in self._dashboards.items()}
-        for sess in self._sessions.values():
-            for view in sess._views.values():
-                view.base = bump(view.base)
-            sess._current = {v: bump(q) for v, q in sess._current.items()}
-            sess._pinned_queries = {
-                k: bump(q) for k, q in sess._pinned_queries.items()
+    def _ingest(
+        self, deltas: list[Delta], deprioritized: bool = False
+    ) -> list[UpdateResult]:
+        """Maintain, commit and re-snapshot for a batch of per-relation deltas.
+
+        The commit protocol (torn-update guard): every delta's maintenance
+        runs first, against *staged* catalog versions — readers still resolve
+        the old watermark and every old message stays servable.  Only when
+        all n−1-message sweeps have landed does ``Catalog.commit`` advance
+        the latest pointers (one watermark for the whole batch) and the
+        tracked queries get re-snapshotted, so a concurrent session read sees
+        either the pre-tick snapshot or the complete post-tick one.
+
+        ``deprioritized`` marks the re-queued recalibrations of fallback
+        queries as lowest-priority scheduler work (compaction passes must
+        not starve interactive think-time calibration).
+        """
+        results: list[UpdateResult] = []
+        for delta in deltas:
+            todo = {
+                q.digest: q for q in self._tracked_queries()
+                if q.version_of(delta.relation) == delta.old_version
             }
-        # every pending calibration targets a stale snapshot: invalidate and
-        # re-queue the sessions' (bumped) current queries — maintained ones
-        # complete in a few cache hits, fallbacks actually recalibrate.
-        # Prefetched results snapshot the old versions too: their digests can
-        # never be served again, so drop them rather than let them linger.
-        self.scheduler.clear()
+            all_stats: list[DeltaStats] = []
+            maintained = fallbacks = 0
+            fallback_digests: set[str] = set()
+            for q in todo.values():
+                _, st = self.engine_for(q.ring_name, q.measure).apply_delta(q, delta)
+                all_stats.append(st)
+                fallbacks += int(st.fallback)
+                if st.fallback:
+                    fallback_digests.add(q.digest)
+                # a query the update can't even reach (relation removed /
+                # outside the JT) is neither maintained nor a fallback; a
+                # compaction maintains by re-keying (zero delta messages)
+                maintained += int(
+                    not st.fallback
+                    and (st.delta_messages > 0 or st.edges_maintained > 0)
+                )
+            # fallback CJTs get no pin migration (apply_delta maintained
+            # nothing), but their pinned queries are version-bumped below — a
+            # later Session.close would then unpin the *new* sigs (no-ops)
+            # and leak the old-version pins forever.  Release them now, while
+            # the pre-bump query still derives the pinned signatures; the
+            # recalibration re-queued below rebuilds the CJT unpinned.
+            for sess in self._sessions.values():
+                for key, qp in sorted(sess._pinned_queries.items()):
+                    if qp.digest in fallback_digests:
+                        self.engine_for(qp.ring_name, qp.measure).unpin_query(qp)
+                        del sess._pinned_queries[key]
+
+            def bump(q: Query, delta: Delta = delta) -> Query:
+                if q.version_of(delta.relation) == delta.old_version:
+                    return q.with_version(delta.relation, delta.new_version)
+                return q
+
+            self._dashboards = {v: bump(q) for v, q in self._dashboards.items()}
+            for sess in self._sessions.values():
+                for view in sess._views.values():
+                    view.base = bump(view.base)
+                sess._current = {v: bump(q) for v, q in sess._current.items()}
+                sess._pinned_queries = {
+                    k: bump(q) for k, q in sess._pinned_queries.items()
+                }
+            self.ingest.delta_sweeps += 1
+            results.append(UpdateResult(
+                relation=delta.relation,
+                new_version=delta.new_version,
+                queries_maintained=maintained,
+                queries_fallback=fallbacks,
+                stats=all_stats,
+            ))
+        # ---- commit point: all latest pointers advance under ONE watermark
+        self.catalog.commit({d.relation: d.new_version for d in deltas})
+        self.ingest.version_bumps += len(deltas)
+        # Selective invalidation: only prefetched results whose query can see
+        # an updated relation are stale — their digests can never be served
+        # again.  Entries on disjoint dimensions (updated relation removed
+        # from the query) keep digests stable (Query.digest hashes effective
+        # versions only) and stay servable.  Re-queue the sessions' bumped
+        # current queries: a changed digest preempts exactly the stale parked
+        # calibration, an unchanged one keeps its position and progress.
+        changed = [d.relation for d in deltas]
         for sess in self._sessions.values():
-            sess._prefetched.clear()
+            sess._prefetched = {
+                k: e for k, e in sess._prefetched.items()
+                if not any(self._sees(e.query, r) for r in changed)
+            }
             for viz, q in sess._current.items():
-                self.scheduler.schedule(sess.id, viz, q, self.engine_for(q.ring_name, q.measure))
-        return UpdateResult(
-            relation=delta.relation,
-            new_version=delta.new_version,
-            queries_maintained=maintained,
-            queries_fallback=fallbacks,
-            stats=all_stats,
+                engine = self.engine_for(q.ring_name, q.measure)
+                dep = deprioritized and not engine.is_calibrated(q)
+                self.scheduler.schedule(sess.id, viz, q, engine, deprioritized=dep)
+        # Absorption prewarm: the commit leaves every device cache slot for
+        # the new versions cold (codes, lifts, the occasional plan retrace at
+        # a row-bucket crossing).  Execute each still-calibrated affected
+        # query once NOW, on the write path, so the first post-tick
+        # interaction pays σ-absorption only and the warm-event tail stays
+        # flat under sustained ingestion.  Fallback queries are skipped —
+        # their recalibration belongs to think-time, not the flush.
+        prewarmed = []
+        for sess in self._sessions.values():
+            for q in sess._current.values():
+                if not any(self._sees(q, r) for r in changed):
+                    continue
+                engine = self.engine_for(q.ring_name, q.measure)
+                if engine.plans is not None and engine.is_calibrated(q):
+                    f, _ = engine.execute(q)
+                    prewarmed.append(f)
+        # drain the prewarm compute here: its results live in no store, so a
+        # reader's block_until_ready would not cover them and the next
+        # interaction would queue behind them on-device
+        for f in prewarmed:
+            jax.block_until_ready(f.field)
+        return results
+
+    # -- streaming ingestion (ISSUE 6 tentpole) ---------------------------------
+    def stream(self, relation: str) -> StreamBuffer:
+        """The per-relation ingestion buffer (created on first use).
+
+        Queue micro-batches with ``stream(r).append(...)`` / ``.delete(...)``;
+        nothing is visible to readers until :meth:`flush` coalesces, maintains
+        and commits the tick.
+        """
+        buf = self._streams.get(relation)
+        if buf is None:
+            buf = StreamBuffer(self.catalog.get(relation))
+            self._streams[relation] = buf
+        return buf
+
+    def flush(self) -> FlushResult:
+        """Tick boundary: coalesce every buffer, maintain, commit, compact.
+
+        Per streamed relation with pending micro-batches this performs
+        exactly ONE version bump and ONE ``apply_delta`` sweep of the n−1
+        outward messages (however many micro-batches were queued) — the
+        coalescing contract, asserted by ``IngestStats``.  All relations
+        commit under one catalog watermark; concurrent session reads resolve
+        either the previous watermark or this one, never a mix.
+
+        After the commit, any buffer whose tombstone fraction crossed
+        ``compaction_threshold`` is compacted: one more (empty) delta that
+        group rings absorb by re-keying, while inverse-free rings take their
+        single real recalibration — scheduled at lowest priority so it lands
+        in think-time, not in the interactive path.
+        """
+        deltas: list[Delta] = []
+        for name in sorted(self._streams):
+            buf = self._streams[name]
+            before = dataclasses.replace(buf.stats)
+            new_rel, delta = buf.coalesce()
+            self.ingest.rows_appended += buf.stats.rows_appended - before.rows_appended
+            self.ingest.rows_deleted += buf.stats.rows_deleted - before.rows_deleted
+            self.ingest.rows_cancelled += (
+                buf.stats.rows_cancelled - before.rows_cancelled
+            )
+            if delta is not None:
+                self.catalog.put(new_rel, make_latest=False)  # stage
+                deltas.append(delta)
+        updates = self._ingest(deltas) if deltas else []
+        if deltas:
+            self.ingest.ticks += 1
+        # ---- compaction (tombstone ledger) --------------------------------
+        compactions: list[UpdateResult] = []
+        if self.compaction_threshold > 0:
+            cdeltas: list[Delta] = []
+            rebased: list[tuple[StreamBuffer, Relation]] = []
+            for name in sorted(self._streams):
+                buf = self._streams[name]
+                if buf.tombstone_fraction() < self.compaction_threshold:
+                    continue
+                new_rel, cdelta = buf.base.compact()
+                if cdelta is None:
+                    continue
+                self.catalog.put(new_rel, make_latest=False)
+                cdeltas.append(cdelta)
+                rebased.append((buf, new_rel))
+            if cdeltas:
+                compactions = self._ingest(cdeltas, deprioritized=True)
+                for buf, new_rel in rebased:
+                    buf.rebase(new_rel)
+                self.ingest.compactions += len(cdeltas)
+        return FlushResult(
+            watermark=self.catalog.watermark,
+            updates=updates,
+            compactions=compactions,
         )
 
     # -- think-time calibration (§4.2.1) — legacy wrapper -----------------------
@@ -324,6 +519,8 @@ class Treant:
             "cross_viz_hits": self.store.cross_tag_hits,
             "scheduler": self.scheduler.stats(),
             "sessions": len(self._sessions),
+            "watermark": self.catalog.watermark,
+            "ingest": dataclasses.asdict(self.ingest),
         }
         # aggregate plan counters over the primary AND sibling-ring engines
         # (multi-ring dashboards execute on several PlanCaches); the

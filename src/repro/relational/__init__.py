@@ -1,4 +1,5 @@
 """Relational substrate: sparse annotated relations, schemas, generators, SQL."""
 
 from .relation import Relation, Catalog, Delta, lift_rows, mask_in, Predicate  # noqa: F401
+from .stream import StreamBuffer, StreamStats  # noqa: F401
 from . import schema  # noqa: F401

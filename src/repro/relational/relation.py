@@ -15,6 +15,19 @@ deletes carry ⊕-inverse annotations via negated weights, which is only sound
 when the ring is a group under ⊕ (``Semiring.has_add_inverse``: SUM/COUNT/
 MOMENTS yes, MIN/MAX/BOOL no — those fall back to recomputation).  The CJT
 side of the machinery lives in ``core.calibration.CJTEngine.apply_delta``.
+
+Streaming ingestion (``repro.relational.stream.StreamBuffer``) adds two
+refinements on top of the one-shot path:
+
+- *Tombstoned* deletes keep the deleted rows physically present at weight 0
+  (the exact ⊕-zero under every group ring's lift).  Idempotent rings
+  (MIN/MAX/BOOL), whose lifts ignore weights, can then absorb mixed deltas
+  without an ⊕-inverse — the delete becomes visible when
+  :meth:`Relation.compact` drops the tombstones (``Delta.kind == "compact"``).
+- The :class:`Catalog` gains a *watermark* commit protocol: new versions are
+  staged (``put(make_latest=False)``) while cached CJTs are maintained, then
+  ``commit`` atomically advances every flushed relation's latest pointer, so
+  a concurrent reader either sees the whole tick or none of it.
 """
 
 from __future__ import annotations
@@ -22,7 +35,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import hashlib
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Callable, Mapping, Sequence
 
 import jax
@@ -31,6 +44,19 @@ import numpy as np
 
 from repro.core import semiring as sr
 from repro.core.factor import Factor
+
+
+def row_bucket(n: int) -> int:
+    """Next power of two ≥ ``n`` (min 64) — the padded row count compiled
+    plans trace against.
+
+    Plan signatures that bake in the exact ``num_rows`` retrace on every
+    streamed tick (appends grow the base, and each tick's coalesced delta has
+    its own row count).  Bucketing the row axis keeps signatures stable until
+    a bucket boundary is crossed; the pad rows carry the ring's ⊕-identity
+    (⊗-absorbing), aggregated into segment 0, so results are bit-identical.
+    """
+    return 64 if n <= 64 else 1 << int(n - 1).bit_length()
 
 
 def _digest_array(a: np.ndarray) -> str:
@@ -166,18 +192,29 @@ class Relation:
             else np.ones((self.num_rows,), np.float32)
         )
 
+    @property
+    def tombstone_count(self) -> int:
+        """Rows annotated ⊕-zero (weight 0): logically deleted but physically
+        present.  Produced by the streaming path for rings without an
+        ⊕-inverse; reclaimed by :meth:`compact`."""
+        if self.weights is None:
+            return 0
+        return int(np.count_nonzero(np.asarray(self.weights, np.float32) == 0.0))
+
     def append_rows(
         self,
         codes: Mapping[str, np.ndarray],
         measures: Mapping[str, np.ndarray] | None = None,
         weights: np.ndarray | None = None,
         version: str | None = None,
-    ) -> tuple["Relation", "Delta"]:
+    ) -> tuple["Relation", "Delta | None"]:
         """Append rows, returning ``(new_version, delta)``.
 
         The delta's rows are exactly the appended rows, so for any semiring
         ``lift(new) = lift(old) ⊕ lift(delta.rows)`` — appends are maintainable
-        under every ring, including MIN/MAX.
+        under every ring, including MIN/MAX.  A zero-row append is a no-op:
+        it returns ``(self, None)`` without bumping the version (an empty
+        delta would otherwise dirty the n−1 outward messages for nothing).
         """
         measures = dict(measures or {})
         if set(codes) != set(self.attrs):
@@ -186,6 +223,8 @@ class Relation:
             raise ValueError("appended rows must supply every measure column")
         new_codes = {a: np.asarray(codes[a], np.int32) for a in self.attrs}
         n_new = new_codes[self.attrs[0]].shape[0] if self.attrs else 0
+        if n_new == 0:
+            return self, None
         new_meas = {
             m: np.asarray(measures[m], self.measures[m].dtype) for m in self.measures
         }
@@ -194,11 +233,12 @@ class Relation:
             if weights is not None
             else np.ones((n_new,), np.float32)
         )
+        suffix = _delta_suffix(self.version, "a", new_codes, new_meas, w_new)
         delta_rows = dataclasses.replace(
             self, codes=new_codes, measures=new_meas, weights=w_new,
-            version=_delta_version(self.version, "a", new_codes, new_meas, w_new),
+            version=f"{self.version}Δ{suffix}",
         )
-        new_version = version or f"{self.version}+{delta_rows.version.split('Δ', 1)[1]}"
+        new_version = version or f"{self.version}+{suffix}"
         merged = dataclasses.replace(
             self,
             codes={a: np.concatenate([np.asarray(self.codes[a], np.int32), new_codes[a]])
@@ -216,32 +256,72 @@ class Relation:
 
     def delete_rows(
         self, row_mask: np.ndarray, version: str | None = None
-    ) -> tuple["Relation", "Delta"]:
+    ) -> tuple["Relation", "Delta | None"]:
         """Delete the rows selected by ``row_mask``, returning ``(new, delta)``.
 
         The delta's rows are the deleted rows with *negated* weights — a valid
         ⊕-inverse annotation exactly when the ring has additive inverses
         (SUM/COUNT/MOMENTS); MIN/MAX/BOOL consumers must recompute instead
-        (``Delta.supported_by`` reports which).
+        (``Delta.supported_by`` reports which).  An all-False mask is a no-op
+        returning ``(self, None)`` — no version bump, nothing to maintain.
         """
         row_mask = np.asarray(row_mask, bool)
         if row_mask.shape != (self.num_rows,):
             raise ValueError(f"mask shape {row_mask.shape} != ({self.num_rows},)")
+        if not row_mask.any():
+            return self, None
         gone_codes = {a: np.asarray(c, np.int32)[row_mask] for a, c in self.codes.items()}
         gone_meas = {m: v[row_mask] for m, v in self.measures.items()}
         gone_w = -self._materialized_weights()[row_mask]
+        suffix = _delta_suffix(self.version, "d", gone_codes, gone_meas, gone_w)
         delta_rows = dataclasses.replace(
             self, codes=gone_codes, measures=gone_meas, weights=gone_w,
-            version=_delta_version(self.version, "d", gone_codes, gone_meas, gone_w),
+            version=f"{self.version}Δ{suffix}",
         )
-        new_version = version or f"{self.version}+{delta_rows.version.split('Δ', 1)[1]}"
+        new_version = version or f"{self.version}+{suffix}"
         kept = self.filter_rows(~row_mask, new_version)
         return kept, Delta(
             relation=self.name, old_version=self.version, new_version=new_version,
             rows=delta_rows, kind="delete",
         )
 
+    def compact(self, version: str | None = None) -> tuple["Relation", "Delta | None"]:
+        """Physically drop tombstoned (weight-0) rows, returning ``(new, delta)``.
+
+        The compaction delta is *empty* — tombstones lift to the exact ⊕-zero
+        under every group ring, so dropping them leaves each cached message
+        value-identical and ``apply_delta`` merely re-keys the n−1 outward
+        messages to the new version (zero contractions).  Rings whose lift
+        ignores weights (MIN/MAX/BOOL) report unsupported instead
+        (``Delta.supported_by`` → False): for them compaction is the point
+        where the tombstoned deletes become visible, and the one real
+        recalibration happens.  Returns ``(self, None)`` when there is
+        nothing to reclaim.
+        """
+        if self.weights is None:
+            return self, None
+        keep = np.asarray(self.weights, np.float32) != 0.0
+        if keep.all():
+            return self, None
+        suffix = _delta_suffix(self.version, "c", {}, {}, ~keep)
+        new_version = version or f"{self.version}+{suffix}"
+        kept = self.filter_rows(keep, new_version)
+        empty = self.filter_rows(np.zeros((self.num_rows,), bool),
+                                 f"{self.version}Δ{suffix}")
+        return kept, Delta(
+            relation=self.name, old_version=self.version, new_version=new_version,
+            rows=empty, kind="compact",
+        )
+
     # -- densification ------------------------------------------------------
+    @property
+    def row_bucket(self) -> int:
+        """Padded row count for shape-stable plan signatures (see
+        :func:`row_bucket`): streaming ticks grow ``num_rows`` every flush,
+        and an exact row count in the jit signature would retrace every
+        compiled plan per tick."""
+        return row_bucket(self.num_rows)
+
     def flat_codes(self, attrs: Sequence[str]) -> tuple[np.ndarray, int]:
         attrs = list(attrs)
         if not attrs:
@@ -263,8 +343,15 @@ class Relation:
         return Factor(tuple(self.attrs), field, ring)
 
 
-def _delta_version(old_version: str, tag: str, codes, measures, weights) -> str:
-    """Deterministic content-addressed version string for a delta-rows relation."""
+def _delta_suffix(old_version: str, tag: str, codes, measures, weights) -> str:
+    """Deterministic content-addressed suffix for one delta.
+
+    Callers build the delta-rows version as ``{old}Δ{suffix}`` and the new
+    relation version as ``{old}+{suffix}`` from the *same* suffix — deriving
+    one from the other by splitting on ``Δ`` broke for caller-supplied
+    versions that themselves contained a ``Δ`` (the split found the caller's
+    delimiter first and grafted garbage into the new version).
+    """
     h = hashlib.sha1()
     h.update(old_version.encode())
     h.update(tag.encode())
@@ -274,7 +361,7 @@ def _delta_version(old_version: str, tag: str, codes, measures, weights) -> str:
         h.update(np.ascontiguousarray(measures[m]).tobytes())
     if weights is not None:
         h.update(np.ascontiguousarray(weights).tobytes())
-    return f"{old_version}Δ{tag}{h.hexdigest()[:10]}"
+    return f"{tag}{h.hexdigest()[:10]}"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -284,21 +371,40 @@ class Delta:
     ``rows`` is itself a :class:`Relation` (same schema) whose lift is the
     ⊕-difference between the two versions; its ``weights`` carry the sign.
     Deltas chain: applying them in sequence walks the version history.
+
+    ``tombstoned`` marks stream-coalesced deltas whose deletes were retained
+    as weight-0 rows in the new version rather than physically removed.  A
+    ``"compact"`` delta (empty rows) records a tombstone-reclaiming version
+    bump: the ⊕-difference is zero for group rings, so maintenance re-keys
+    messages without contracting anything.
     """
 
     relation: str
     old_version: str
     new_version: str
     rows: Relation
-    kind: str  # "append" | "delete"
+    kind: str  # "append" | "delete" | "mixed" | "compact"
+    tombstoned: bool = False
 
     @property
     def num_rows(self) -> int:
         return self.rows.num_rows
 
     def supported_by(self, ring: sr.Semiring) -> bool:
-        """Can cached ⊕-state absorb this delta, or must consumers recompute?"""
-        return self.kind == "append" or ring.has_add_inverse
+        """Can cached ⊕-state absorb this delta, or must consumers recompute?
+
+        Appends always can (⊕ over a union).  Group rings absorb anything —
+        deletes ride negated weights, compactions are ⊕-zero.  Idempotent
+        rings (MIN/MAX/BOOL) additionally absorb *tombstoned* deltas: their
+        lifts ignore weights, so the delta re-contributes values the cached
+        messages already contain, and a ⊕ a = a keeps them correct for
+        tombstone semantics (deletes invisible until compaction).
+        """
+        if self.kind == "append":
+            return True
+        if ring.has_add_inverse:
+            return True
+        return self.tombstoned and ring.idempotent_add
 
 
 def lift_rows(rel: Relation, ring: sr.Semiring, measure: str | None = None) -> sr.Field:
@@ -329,11 +435,23 @@ def lift_rows(rel: Relation, ring: sr.Semiring, measure: str | None = None) -> s
 
 
 class Catalog:
-    """Versioned relation store — the stand-in for DBMS tables."""
+    """Versioned relation store — the stand-in for DBMS tables.
+
+    Readers resolve relations through ``_latest`` — the *committed watermark*.
+    Writers may stage any number of versions (``put(make_latest=False)``)
+    without affecting readers, then :meth:`commit` advances every flushed
+    relation's latest pointer in one step, bumping the monotonic
+    :attr:`watermark`.  A reader snapshotting versions (``Query.make``)
+    therefore sees either all of a multi-relation tick or none of it — never
+    a torn update.  ``commit_log`` keeps the recent committed snapshots for
+    introspection (tests assert reads only ever match a logged snapshot).
+    """
 
     def __init__(self, relations: Sequence[Relation] = ()):
         self._store: dict[tuple[str, str], Relation] = {}
         self._latest: dict[str, str] = {}
+        self._watermark = 0
+        self.commit_log: deque[tuple[int, dict[str, str]]] = deque(maxlen=128)
         # device-resident flat-code cache keyed by (relation, version, attrs):
         # hoists the per-call np.ravel_multi_index + host→device transfer out
         # of the message hot path (compiled plans gather through these).
@@ -346,6 +464,9 @@ class Catalog:
 
         Codes are immutable per (name, version), so the cache never needs
         invalidation — new versions simply occupy new slots (LRU-bounded).
+        Arrays are zero-padded to ``rel.row_bucket`` so they feed the
+        bucket-shaped compiled plans directly: pad rows gather/aggregate at
+        index 0 but carry ⊕-identity lift values, contributing nothing.
         """
         key = (rel.name, rel.version, tuple(attrs))
         hit = self._dev_codes.get(key)
@@ -353,16 +474,46 @@ class Catalog:
             idx, total = rel.flat_codes(attrs)
             if total > np.iinfo(np.int32).max:  # pragma: no cover — huge domains
                 raise ValueError(f"flat domain {total} overflows int32 codes")
+            pad = rel.row_bucket - idx.size
+            if pad > 0:
+                idx = np.concatenate([idx, np.zeros((pad,), idx.dtype)])
             hit = (jnp.asarray(idx.astype(np.int32)), total)
             self._dev_codes.put(key, hit)
         return hit
 
     def put(self, rel: Relation, make_latest: bool = True) -> None:
         """Store a relation version; ``make_latest=False`` registers auxiliary
-        versions (e.g. delta rows) without making them the default snapshot."""
+        versions (delta rows, staged tick output) without making them the
+        default snapshot.  ``make_latest=True`` is a single-relation commit:
+        it advances the watermark."""
         self._store[(rel.name, rel.version)] = rel
         if make_latest or rel.name not in self._latest:
             self._latest[rel.name] = rel.version
+            self._advance_watermark()
+
+    def commit(self, versions: Mapping[str, str]) -> int:
+        """Atomically advance the latest pointer of every listed relation.
+
+        Each version must already be staged (``put(make_latest=False)``).
+        All pointers move together under ONE watermark bump — the commit
+        point of a streaming tick.  Returns the new watermark.
+        """
+        for name, version in versions.items():
+            if (name, version) not in self._store:
+                raise KeyError(f"commit of unstaged version {name}@{version}")
+        for name, version in versions.items():
+            self._latest[name] = version
+        if versions:
+            self._advance_watermark()
+        return self._watermark
+
+    @property
+    def watermark(self) -> int:
+        return self._watermark
+
+    def _advance_watermark(self) -> None:
+        self._watermark += 1
+        self.commit_log.append((self._watermark, dict(self._latest)))
 
     def get(self, name: str, version: str | None = None) -> Relation:
         v = version or self._latest[name]

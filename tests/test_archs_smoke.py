@@ -26,6 +26,7 @@ def _batch(cfg, b=2, s=32, rng=None):
     return out
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_smoke_forward_and_train_step(arch):
     full = get_config(arch)

@@ -243,6 +243,7 @@ def test_speculate_filters_shapes():
     assert all(c.attr == "x" and c.source == ev.source for c in cands)
 
 
+@pytest.mark.slow
 @settings(max_examples=6, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_prefetched_rebrush_is_pure_hit(seed):

@@ -116,6 +116,7 @@ ATTRS = ["carrier_group", "airport_size", "month", "dow"]
 DRILLS = ["month", "dow", "carrier_group"]
 
 
+@pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_event_sequence_matches_hand_built_chains(seed):

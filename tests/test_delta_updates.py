@@ -48,6 +48,7 @@ def _assert_factors_close(got, want, rtol=2e-3, atol=5e-2):
         )
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("ring_name", sorted(RINGS))
 @settings(max_examples=6, deadline=None)
 @given(seed=st.integers(0, 10_000))
@@ -74,6 +75,7 @@ def test_update_sequence_matches_rebuild(ring_name, seed):
     _assert_factors_close(got, want)
 
 
+@pytest.mark.slow
 @settings(max_examples=4, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_update_with_predicates_matches_rebuild(seed):
@@ -228,6 +230,73 @@ def test_pinned_dashboard_messages_stay_pinned():
             # the pin migrated: the stale generation is evictable again
             old_base = eng.edge_sig(q, u, v, placement_old)
             assert not eng.store.is_pinned(old_base, eng.gamma_carry(q, u, v)), (u, v)
+
+
+@pytest.mark.parametrize("weird", ["v0Δweird", "aΔbΔc", "Δ"])
+def test_delta_version_derivation_with_delta_in_caller_version(weird):
+    """Caller-supplied versions containing 'Δ' must round-trip: the old
+    ``version.split('Δ', 1)[1]`` derivation found the caller's delimiter
+    first and grafted garbage into the new version."""
+    cat = schema.flight(n_flights=500)
+    rel = cat.get("Flights").with_version(weird)
+    rng = np.random.default_rng(2)
+    codes = {a: rng.integers(0, rel.domains[a], 10) for a in rel.attrs}
+    new_rel, delta = rel.append_rows(
+        codes, measures={"dep_delay": np.ones(10, np.float32)}
+    )
+    assert delta is not None
+    assert delta.old_version == weird
+    # both versions extend the caller's version with ONE new suffix
+    assert new_rel.version.startswith(weird + "+")
+    assert delta.rows.version.startswith(weird + "Δ")
+    assert new_rel.version[len(weird) + 1:] == delta.rows.version[len(weird) + 1:]
+    assert delta.new_version == new_rel.version
+    # and a delete chained on top still parses cleanly
+    nxt, d2 = new_rel.delete_rows(np.arange(new_rel.num_rows) < 3)
+    assert nxt.version.startswith(new_rel.version + "+")
+    assert d2.rows.version.startswith(new_rel.version + "Δ")
+    # maintenance through the weird chain stays exact
+    jt = jt_from_catalog(cat)
+    eng = CJTEngine(jt, cat, sr.SUM)
+    cat.put(rel)
+    q = _query(cat, "sum").with_version("Flights", weird)
+    eng.calibrate(q)
+    cat.put(new_rel)
+    q, stats = eng.apply_delta(q, delta)
+    assert not stats.fallback
+    got, es = eng.execute(q)
+    assert es.messages_computed == 0
+    cold = CJTEngine(jt, cat, sr.SUM, store=MessageStore())
+    want, _ = cold.execute(q)
+    _assert_factors_close(got, want)
+
+
+def test_zero_row_updates_short_circuit():
+    """Empty appends/deletes are no-ops: same relation object back, no delta,
+    no version bump — and Treant.update(rel, None) maintains nothing."""
+    cat = schema.flight(n_flights=500)
+    rel = cat.get("Flights")
+    same, delta = rel.append_rows(
+        {a: np.zeros(0, np.int32) for a in rel.attrs},
+        measures={"dep_delay": np.zeros(0, np.float32)},
+    )
+    assert same is rel and delta is None
+    same, delta = rel.delete_rows(np.zeros(rel.num_rows, bool))
+    assert same is rel and delta is None
+    # compacting a relation with no tombstones is equally free
+    same, delta = rel.compact()
+    assert same is rel and delta is None
+
+    t = Treant(cat, ring=sr.SUM)
+    t.register_dashboard("v1", _query(cat, "sum", group_by=("carrier_group",)))
+    wm = t.catalog.watermark
+    ver = t.catalog.latest_version("Flights")
+    res = t.update(rel, None)
+    assert res.queries_maintained == 0 and res.queries_fallback == 0
+    assert res.stats == []
+    assert t.catalog.watermark == wm, "empty update bumped the watermark"
+    assert t.catalog.latest_version("Flights") == ver
+    assert t.ingest.version_bumps == 0 and t.ingest.delta_sweeps == 0
 
 
 def test_treant_update_end_to_end():

@@ -54,6 +54,7 @@ def test_factorized_fit_matches_numpy(favorita):
     assert abs(got.r2 - want) < 1e-3, (got.r2, want)
 
 
+@pytest.mark.slow
 def test_augmentation_single_message_and_agreement(favorita):
     model = _model(favorita)
     model.calibrate()

@@ -291,7 +291,10 @@ def test_catalog_dev_codes_cached_and_lru_bounded():
     want = np.ravel_multi_index(
         (rel.codes["a"].astype(np.int64), rel.codes["b"].astype(np.int64)), (13, 7)
     )
-    np.testing.assert_array_equal(np.asarray(idx1), want)
+    # codes are padded to the plan row bucket: real rows exact, pad rows 0
+    assert idx1.shape == (rel.row_bucket,) and rel.row_bucket >= rel.num_rows
+    np.testing.assert_array_equal(np.asarray(idx1)[: rel.num_rows], want)
+    np.testing.assert_array_equal(np.asarray(idx1)[rel.num_rows:], 0)
     cat._dev_codes = LRU(capacity=2)
     for attrs in [("a",), ("b",), ("a", "b")]:
         cat.dev_flat_codes(rel, attrs)

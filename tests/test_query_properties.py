@@ -34,6 +34,7 @@ def _random_query(cat, rng, base=None):
     return q.with_group_by(*gb[:2])
 
 
+@pytest.mark.slow
 @settings(max_examples=12, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_random_interaction_sequence_matches_cold_engine(world, seed):

@@ -1,0 +1,239 @@
+"""Prefetch/speculation bugfix sweep (ISSUE 6 satellites 1–3).
+
+1. Capacity eviction must drop the *farthest-from-anchor* prefetch entries —
+   the old policy popped dict-insertion order, which (speculate_filters being
+   nearest-first) evicted precisely the candidates most likely to be hit.
+2. ``Treant.update``/``flush`` must invalidate only prefetched results whose
+   query can *see* the updated relation; entries on disjoint dimensions
+   (relation in R̄) keep stable digests and stay servable.
+3. ``speculate_filters`` must return exactly ``min(k, feasible)`` distinct
+   in-domain candidates for ANY anchor — the old step-count termination
+   guards were vacuous/premature at domain edges.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+import repro.core  # noqa: F401 — import order (core before relational)
+from repro.core import (
+    DashboardSpec,
+    SetFilter,
+    Treant,
+    VizSpec,
+    speculate_filters,
+)
+from repro.core import semiring as sr
+from repro.relational.relation import Catalog, Relation
+
+
+def star_catalog(n_fact: int = 300, seed: int = 0) -> Catalog:
+    rng = np.random.default_rng(seed)
+    doms = {"a": 13, "b": 7, "c": 10, "d": 5, "e": 9}
+
+    def codes(attrs, n):
+        return {x: rng.integers(0, doms[x], n).astype(np.int32) for x in attrs}
+
+    f = Relation("F", ("a", "b"), codes(("a", "b"), n_fact), doms,
+                 measures={"m": rng.integers(0, 16, n_fact).astype(np.float32)})
+    s = Relation("S", ("b", "c"), codes(("b", "c"), 77), doms)
+    t = Relation("T", ("a", "d"), codes(("a", "d"), 29), doms)
+    u = Relation("U", ("b", "e"), codes(("b", "e"), 41), doms)
+    return Catalog([f, s, t, u])
+
+
+def star_spec(**viz_kwargs) -> DashboardSpec:
+    return DashboardSpec(vizzes=(
+        VizSpec("by_a", measure=("F", "m"), ring="sum", group_by=("a",)),
+        VizSpec("by_c", measure=("F", "m"), ring="sum", group_by=("c",)),
+        VizSpec("by_d", measure=("F", "m"), ring="sum", group_by=("d",),
+                **viz_kwargs),
+        VizSpec("by_e", measure=("F", "m"), ring="sum", group_by=("e",)),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: eviction keeps the nearest-to-anchor entries
+# ---------------------------------------------------------------------------
+
+def test_eviction_keeps_nearest_candidates():
+    """speculate(3) over 3 linked vizzes parks 9 entries; capacity 3 must
+    keep exactly the rank-0 (nearest window) entries, so a ±1-window re-brush
+    is still a pure prefetch hit."""
+    cat = star_catalog(seed=71)
+    t = Treant(cat, ring=sr.SUM, use_plans=True)
+    sess = t.open_session(star_spec(), name="s")
+    sess.prefetch_capacity = 3
+    ev = SetFilter("a", lo=4, hi=6, source="by_a")
+    sess.apply(ev)
+    sess.idle(speculate=3)
+    assert len(sess._prefetched) == 3
+    assert all(e.dist == 0 for e in sess._prefetched.values()), (
+        "eviction dropped nearest-to-anchor entries"
+    )
+    nearest = speculate_filters(ev, 13, 3)[0]  # the adjacent window
+    res = sess.apply(nearest)
+    assert len(res.affected) == 3
+    for viz in res.affected:
+        s_ = res.results[viz].stats
+        assert s_.prefetch_hits == 1 and s_.messages_computed == 0, (
+            f"{viz}: ±1-window re-brush missed the prefetch cache"
+        )
+    sess.close()
+
+
+def test_eviction_order_regression_vs_insertion_order():
+    """Direct unit check of the policy: overshoot parks ranks [0,0,0,1,1,1,…]
+    in insertion order; survivors must be the low ranks, not the early
+    insertions' complement."""
+    cat = star_catalog(seed=73)
+    t = Treant(cat, ring=sr.SUM, use_plans=False)
+    sess = t.open_session(star_spec(), name="s", calibrate=False)
+    sess.prefetch_capacity = 4
+    sess.apply(SetFilter("a", values=(5, 6), source="by_a"))
+    sess.idle(speculate=4)
+    dists = sorted(e.dist for e in sess._prefetched.values())
+    assert len(dists) == 4
+    # 3 vizzes × rank 0 survive plus the earliest rank-1 insertion
+    assert dists == [0, 0, 0, 1]
+    sess.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: updates invalidate only prefetches that can see the relation
+# ---------------------------------------------------------------------------
+
+def test_update_keeps_prefetch_on_disjoint_dimension():
+    """A viz with U ∈ R̄ can never observe an update to U: its prefetched
+    fan-out must survive the version bump (digest hashes effective versions
+    only) while every U-seeing viz's entries are dropped."""
+    cat = star_catalog(seed=79)
+    t = Treant(cat, ring=sr.SUM, use_plans=True)
+    sess = t.open_session(star_spec(removed=("U",)), name="s")
+    ev = SetFilter("a", lo=2, hi=4, source="by_a")
+    sess.apply(ev)
+    sess.idle(speculate=1)
+    entries = dict(sess._prefetched)
+    blind = {k for k, e in entries.items() if "U" in e.query.removed}
+    seeing = set(entries) - blind
+    assert blind and seeing  # by_d is blind to U; by_c / by_e see it
+    rng = np.random.default_rng(0)
+    u = cat.get("U")
+    new_u, delta = u.append_rows(
+        {a: rng.integers(0, u.domains[a], 10).astype(np.int32) for a in u.attrs}
+    )
+    res = t.update(new_u, delta)
+    assert res.queries_fallback == 0
+    assert set(sess._prefetched) == blind, (
+        "update invalidated the U-blind prefetch (or kept a U-seeing one)"
+    )
+    # the surviving entry is really served: re-brush hits without executing
+    nearest = speculate_filters(ev, 13, 1)[0]
+    res2 = sess.apply(nearest)
+    s_d = res2.results["by_d"].stats
+    assert s_d.prefetch_hits == 1 and s_d.messages_computed == 0
+    # the U-seeing vizzes re-executed against the new version instead
+    assert res2.results["by_c"].stats.prefetch_hits == 0
+    sess.close()
+
+
+def test_flush_invalidates_only_streamed_relation_prefetches():
+    """Same selectivity through the streaming path: a flush tick touching U
+    keeps the U-blind viz's entries."""
+    cat = star_catalog(seed=83)
+    t = Treant(cat, ring=sr.SUM, use_plans=False, compaction_threshold=0.0)
+    sess = t.open_session(star_spec(removed=("U",)), name="s")
+    sess.apply(SetFilter("a", lo=2, hi=4, source="by_a"))
+    sess.idle(speculate=1)
+    blind = {k for k, e in sess._prefetched.items() if "U" in e.query.removed}
+    assert blind
+    rng = np.random.default_rng(1)
+    u = cat.get("U")
+    t.stream("U").append(
+        {a: rng.integers(0, u.domains[a], 6).astype(np.int32) for a in u.attrs}
+    )
+    t.flush()
+    assert set(sess._prefetched) == blind
+    sess.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: speculate_filters returns min(k, feasible) distinct candidates
+# ---------------------------------------------------------------------------
+
+def _range_feasible(lo: int, hi: int, domain: int) -> int:
+    width = max(hi - lo, 1)
+    pos = (domain - lo - 1) // width   # i ≥ 1 with lo + i·width < domain
+    neg = (hi - 1) // width            # i ≥ 1 with hi − i·width > 0
+    return pos + neg
+
+
+@settings(max_examples=60, deadline=None)
+@given(d=st.integers(0, 10_000), l=st.integers(0, 10_000),
+       h=st.integers(0, 10_000), k=st.integers(0, 60))
+def test_range_speculation_count_property(d, l, h, k):
+    domain = 1 + d % 50
+    lo = l % domain
+    hi = lo + 1 + h % (domain - lo)
+    ev = SetFilter("x", lo=lo, hi=hi)
+    cands = speculate_filters(ev, domain, k)
+    assert len(cands) == min(k, _range_feasible(lo, hi, domain)), (
+        f"lo={lo} hi={hi} domain={domain} k={k}: "
+        f"{[(c.lo, c.hi) for c in cands]}"
+    )
+    seen = set()
+    for c in cands:
+        assert 0 <= c.lo < c.hi <= domain
+        assert (c.lo, c.hi) != (lo, hi)
+        seen.add((c.lo, c.hi))
+    assert len(seen) == len(cands), "duplicate candidates"
+
+
+@settings(max_examples=60, deadline=None)
+@given(d=st.integers(0, 10_000), v=st.integers(0, 10_000),
+       w=st.integers(0, 10_000), k=st.integers(0, 60))
+def test_in_list_speculation_count_property(d, v, w, k):
+    domain = 2 + d % 40
+    v0 = v % domain
+    v1 = min(domain - 1, v0 + w % 3)
+    vals = tuple(sorted({v0, v1}))
+    span = vals[-1] - vals[0] + 1
+    pos = (domain - 1 - vals[-1]) // span  # i ≥ 1 with vals[-1] + i·span < domain
+    neg = vals[0] // span                  # i ≥ 1 with vals[0] − i·span ≥ 0
+    cands = speculate_filters(SetFilter("x", values=vals), domain, k)
+    assert len(cands) == min(k, pos + neg), (
+        f"vals={vals} domain={domain} k={k}: {[c.values for c in cands]}"
+    )
+    seen = set()
+    for c in cands:
+        assert all(0 <= x < domain for x in c.values)
+        assert c.values != vals
+        seen.add(c.values)
+    assert len(seen) == len(cands)
+
+
+def test_speculation_domain_edge_regressions():
+    """The concrete edge cases the old step-count guards got wrong."""
+    # anchor at the high edge: positive direction dies instantly, but every
+    # feasible negative window must still be produced (the old range guard
+    # broke out of the loop before emitting them)
+    cands = speculate_filters(SetFilter("x", lo=6, hi=8), 10, 10)
+    assert [(c.lo, c.hi) for c in cands] == [(8, 10), (4, 6), (2, 4), (0, 2)]
+    # clipped positive edge window is feasible and emitted once
+    cands = speculate_filters(SetFilter("x", lo=3, hi=7), 9, 10)
+    assert [(c.lo, c.hi) for c in cands] == [(7, 9), (0, 3)]
+    # IN-list at the high edge: the old ``abs(step·span) > domain`` guard was
+    # vacuous for the positive direction (it kept stepping past the domain)
+    cands = speculate_filters(SetFilter("x", values=(8, 9)), 10, 10)
+    assert [c.values for c in cands] == [(6, 7), (4, 5), (2, 3), (0, 1)]
+    # both directions immediately infeasible → empty, and terminates
+    assert speculate_filters(SetFilter("x", lo=0, hi=10), 10, 5) == []
+    assert speculate_filters(SetFilter("x", values=(0, 9)), 10, 5) == []
+    # k=0 never emits
+    assert speculate_filters(SetFilter("x", lo=2, hi=4), 10, 0) == []
+
+
+def test_speculation_candidates_are_nearest_first():
+    cands = speculate_filters(SetFilter("x", lo=4, hi=6), 12, 6)
+    dist = [abs(c.lo - 4) for c in cands]
+    assert dist == sorted(dist)

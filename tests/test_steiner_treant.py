@@ -25,6 +25,7 @@ def test_minimal_steiner_tree_is_path(flight):
     assert len(nodes) == 3 and len(edges) == 2
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 500))
 def test_recomputed_edges_within_steiner_tree(seed):

@@ -1,0 +1,418 @@
+"""Streaming ingestion (ISSUE 6 tentpole): the metamorphic suite.
+
+The correctness spine is *stream-then-flush ≡ rebuild*: any sequence of
+append/delete micro-batches pushed through ``Treant.stream(...)`` and
+committed by ``flush()`` must leave every tracked viz bit-identical to a cold
+engine rebuilt over the committed relation versions — across group rings
+(SUM/COUNT/MOMENTS absorb signed deltas) AND idempotent rings (MIN/MAX absorb
+tombstoned deltas without fallback; deletes become visible at compaction).
+Measures are small integers so every ⊕ order yields the same f32 bits (same
+convention as tests/test_plans.py).
+
+The coalescing contract: one version bump + one apply_delta sweep per
+relation per tick, however many micro-batches arrived (``Treant.ingest``).
+
+The watermark contract: all relations commit under ONE watermark bump, and a
+reader snapshotting the catalog *during* maintenance sees the complete
+pre-tick version vector — never a mix (asserted against ``commit_log``).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401 — import order (core before relational)
+from repro.core import (
+    CJTEngine,
+    DashboardSpec,
+    MessageStore,
+    Query,
+    SetFilter,
+    Treant,
+    VizSpec,
+    jt_from_catalog,
+)
+from repro.core import semiring as sr
+from repro.relational import StreamBuffer
+from repro.relational.relation import Catalog, Relation
+
+
+def star_catalog(n_fact: int = 300, seed: int = 0) -> Catalog:
+    """F(a,b)+m ← S(b,c), T(a,d), U(b,e); integer measures for bit-stability."""
+    rng = np.random.default_rng(seed)
+    doms = {"a": 13, "b": 7, "c": 10, "d": 5, "e": 9}
+
+    def codes(attrs, n):
+        return {x: rng.integers(0, doms[x], n).astype(np.int32) for x in attrs}
+
+    f = Relation("F", ("a", "b"), codes(("a", "b"), n_fact), doms,
+                 measures={"m": rng.integers(0, 16, n_fact).astype(np.float32)})
+    s = Relation("S", ("b", "c"), codes(("b", "c"), 77), doms)
+    t = Relation("T", ("a", "d"), codes(("a", "d"), 29), doms)
+    u = Relation("U", ("b", "e"), codes(("b", "e"), 41), doms)
+    return Catalog([f, s, t, u])
+
+
+def assert_factors_identical(f1, f2):
+    assert f1.attrs == f2.attrs
+    l1 = jax.tree_util.tree_leaves(f1.field)
+    l2 = jax.tree_util.tree_leaves(f2.field)
+    assert len(l1) == len(l2)
+    for a, b in zip(l1, l2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def fact_batch(rng, cat, n):
+    rel = cat.get("F")
+    return (
+        {a: rng.integers(0, rel.domains[a], n).astype(np.int32) for a in rel.attrs},
+        {"m": rng.integers(0, 16, n).astype(np.float32)},
+    )
+
+
+def spec_for(ring_name: str) -> DashboardSpec:
+    measure = None if ring_name == "count" else ("F", "m")
+    return DashboardSpec(vizzes=(
+        VizSpec("by_c", measure=measure, ring=ring_name, group_by=("c",)),
+        VizSpec("by_d", measure=measure, ring=ring_name, group_by=("d",)),
+    ))
+
+
+def cold_read(t: Treant, q: Query):
+    """Execute ``q`` on a from-scratch engine over the committed catalog."""
+    eng = CJTEngine(
+        t.jt, t.catalog, t.engine_for(q.ring_name, q.measure).ring,
+        store=MessageStore(), use_plans=False,
+    )
+    f, _ = eng.execute(q)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# metamorphic parity: stream-then-flush ≡ rebuild, bit-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ring_name", ["sum", "count", "moments"])
+def test_stream_flush_matches_rebuild_group_rings(ring_name):
+    """Micro-batched appends + deletes over three ticks: after each flush the
+    warm maintained read is bit-identical to a cold rebuild over the committed
+    relation — and executes zero messages (pure delta maintenance)."""
+    rng = np.random.default_rng(3)
+    cat = star_catalog(seed=1)
+    t = Treant(cat, ring=sr.get(ring_name), use_plans=True,
+               compaction_threshold=0.0)
+    sess = t.open_session(spec_for(ring_name), name="s")
+    for tick in range(3):
+        buf = t.stream("F")
+        for _ in range(4):  # several micro-batches, ONE delta per tick
+            codes, meas = fact_batch(rng, cat, 25)
+            buf.append(codes, measures=meas)
+        # delete a handful of pre-existing rows and a handful of rows that
+        # were appended THIS tick (the latter cancel, never materialized)
+        mask = np.zeros(buf.base.num_rows + buf.pending_appends, bool)
+        mask[rng.choice(buf.base.num_rows, 6, replace=False)] = True
+        mask[buf.base.num_rows + rng.choice(buf.pending_appends, 5, replace=False)] = True
+        buf.delete(mask)
+        res = t.flush()
+        assert res.relations == ["F"]
+        (upd,) = res.updates
+        assert upd.queries_fallback == 0, f"tick {tick} fell back"
+        assert upd.queries_maintained > 0
+        for viz in ("by_c", "by_d"):
+            r = sess.read(viz)
+            assert r.stats.messages_computed == 0, "warm read recomputed"
+            assert_factors_identical(r.factor, cold_read(t, sess.query_of(viz)))
+    assert t.ingest.rows_cancelled == 3 * 5
+    assert t.ingest.rows_deleted == 3 * 6
+    sess.close()
+
+
+def test_stream_mixed_delta_with_explicit_weights():
+    """Weighted appends coalesce with deletes into one mixed delta whose
+    negated-weight rows are the exact ⊕-inverse under SUM."""
+    rng = np.random.default_rng(11)
+    cat = star_catalog(seed=2)
+    t = Treant(cat, ring=sr.SUM, use_plans=False, compaction_threshold=0.0)
+    sess = t.open_session(spec_for("sum"), name="s")
+    buf = t.stream("F")
+    codes, meas = fact_batch(rng, cat, 30)
+    buf.append(codes, measures=meas, weights=np.full(30, 2.0, np.float32))
+    mask = np.zeros(buf.base.num_rows + 30, bool)
+    mask[:8] = True
+    buf.delete(mask)
+    res = t.flush()
+    assert res.updates[0].queries_fallback == 0
+    for viz in ("by_c", "by_d"):
+        assert_factors_identical(
+            sess.read(viz).factor, cold_read(t, sess.query_of(viz))
+        )
+    sess.close()
+
+
+# ---------------------------------------------------------------------------
+# the coalescing contract: one bump + one sweep per relation per tick
+# ---------------------------------------------------------------------------
+
+def test_coalescing_invariant_counters_and_watermark():
+    rng = np.random.default_rng(5)
+    cat = star_catalog(seed=3)
+    t = Treant(cat, ring=sr.SUM, use_plans=False, compaction_threshold=0.0)
+    t.open_session(spec_for("sum"), name="s")
+    wm0 = t.catalog.watermark
+    ticks = 3
+    for _ in range(ticks):
+        for _ in range(5):  # 5 micro-batches per relation per tick
+            codes, meas = fact_batch(rng, cat, 10)
+            t.stream("F").append(codes, measures=meas)
+            s_rel = t.stream("S").base
+            t.stream("S").append({
+                a: rng.integers(0, s_rel.domains[a], 4).astype(np.int32)
+                for a in s_rel.attrs
+            })
+        res = t.flush()
+        assert sorted(res.relations) == ["F", "S"]
+    # T ticks over R=2 streamed relations: exactly T·R bumps and sweeps,
+    # despite 5 micro-batches per relation per tick
+    assert t.ingest.ticks == ticks
+    assert t.ingest.version_bumps == t.ingest.delta_sweeps == ticks * 2
+    # both relations commit under ONE watermark bump per tick
+    assert t.catalog.watermark == wm0 + ticks
+    assert t.ingest.rows_appended == ticks * (5 * 10 + 5 * 4)
+    # an empty flush is free: no bump, no sweep, no watermark motion
+    res = t.flush()
+    assert res.updates == [] and res.compactions == []
+    assert t.catalog.watermark == wm0 + ticks
+    assert t.ingest.ticks == ticks
+
+
+# ---------------------------------------------------------------------------
+# inverse-free rings: tombstones absorb per tick, recalibrate at compaction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ring_name", ["tropical_min", "tropical_max"])
+def test_min_max_delete_stream_recalibrates_only_at_compaction(ring_name):
+    """Delete streams against MIN/MAX: every regular tick absorbs the
+    tombstoned delta (zero fallbacks, zero calibration dispatches); the single
+    real recalibration happens only when the tombstone ledger crosses the
+    compaction threshold — and lands in think-time, not the flush path."""
+    rng = np.random.default_rng(7)
+    cat = star_catalog(n_fact=400, seed=4)
+    t = Treant(cat, ring=sr.get(ring_name), use_plans=True,
+               compaction_threshold=0.25)
+    sess = t.open_session(spec_for(ring_name), name="s")
+    q0 = sess.query_of("by_c")
+    dispatches0 = t.cache_stats()["plans"]["calibration_dispatches"]
+    compacted_at = None
+    for tick in range(6):
+        buf = t.stream("F")
+        codes, meas = fact_batch(rng, cat, 12)
+        buf.append(codes, measures=meas)
+        live = np.flatnonzero(buf.base._materialized_weights() != 0.0)
+        mask = np.zeros(buf.base.num_rows + buf.pending_appends, bool)
+        mask[rng.choice(live, 30, replace=False)] = True
+        buf.delete(mask)
+        res = t.flush()
+        (upd,) = res.updates
+        assert upd.queries_fallback == 0, (
+            f"tick {tick}: tombstoned delta fell back on {ring_name}"
+        )
+        # maintained result ≡ rebuild over the committed tombstoned relation
+        for viz in ("by_c", "by_d"):
+            r = sess.read(viz)
+            assert r.stats.messages_computed == 0
+            assert_factors_identical(r.factor, cold_read(t, sess.query_of(viz)))
+        if res.compactions:
+            compacted_at = tick
+            break
+        # no compaction yet → zero new calibration dispatches (the flush
+        # path never recalibrates; reads are warm)
+        assert (
+            t.cache_stats()["plans"]["calibration_dispatches"] == dispatches0
+        ), f"tick {tick} recalibrated without compaction"
+    assert compacted_at is not None, "tombstone fraction never crossed threshold"
+    (cupd,) = res.compactions
+    # the empty compaction delta can't be absorbed by an idempotent ring:
+    # the ONE real recalibration, re-queued at lowest scheduler priority
+    assert cupd.queries_fallback > 0
+    assert t.ingest.compactions == 1
+    rel = t.catalog.get("F")
+    assert rel.tombstone_count == 0, "compaction left tombstones behind"
+    # drain the deprioritized recalibration in think-time, then re-read
+    sess.idle()
+    q1 = sess.query_of("by_c")
+    assert q1.version_of("F") == rel.version
+    assert t.cache_stats()["plans"]["calibration_dispatches"] > dispatches0
+    for viz in ("by_c", "by_d"):
+        assert_factors_identical(
+            sess.read(viz).factor, cold_read(t, sess.query_of(viz))
+        )
+    assert q0.digest != q1.digest  # versions really advanced
+    sess.close()
+
+
+def test_group_ring_compaction_rekeys_without_fallback():
+    """Under SUM the tombstones lift to exact ⊕-zero, so the empty compaction
+    delta re-keys the n−1 messages: maintained, zero fallbacks, zero new
+    message computations — and results stay bit-identical."""
+    rng = np.random.default_rng(13)
+    cat = star_catalog(seed=6)
+    t = Treant(cat, ring=sr.SUM, use_plans=False, compaction_threshold=0.1)
+    sess = t.open_session(spec_for("sum"), name="s")
+    buf = t.stream("F")
+    mask = np.zeros(buf.base.num_rows, bool)
+    mask[rng.choice(buf.base.num_rows, 60, replace=False)] = True
+    buf.delete(mask)
+    res = t.flush()
+    assert res.compactions, "tombstone fraction 0.2 must trigger compaction"
+    (cupd,) = res.compactions
+    assert cupd.queries_fallback == 0 and cupd.queries_maintained > 0
+    assert t.catalog.get("F").tombstone_count == 0
+    for viz in ("by_c", "by_d"):
+        r = sess.read(viz)
+        assert r.stats.messages_computed == 0
+        assert_factors_identical(r.factor, cold_read(t, sess.query_of(viz)))
+    sess.close()
+
+
+# ---------------------------------------------------------------------------
+# watermarks: concurrent reads never see a torn version vector
+# ---------------------------------------------------------------------------
+
+def test_mid_flush_reader_sees_complete_pre_tick_watermark(monkeypatch):
+    """Snapshot the catalog's latest pointers from *inside* every apply_delta
+    call of a two-relation tick: each snapshot must equal the complete
+    pre-tick commit — staged versions must never leak into a reader's view —
+    and a query derived mid-flush must execute against pre-tick data."""
+    rng = np.random.default_rng(17)
+    cat = star_catalog(seed=8)
+    t = Treant(cat, ring=sr.SUM, use_plans=False, compaction_threshold=0.0)
+    t.open_session(spec_for("sum"), name="s")
+    pre = {n: cat.latest_version(n) for n in cat.names()}
+    wm_pre = cat.watermark
+    want = cold_read(t, Query.make(cat, ring="sum", measure=("F", "m"),
+                                   group_by=("c",)))
+
+    snapshots = []
+    mid_factors = []
+    orig = CJTEngine.apply_delta
+
+    def spying_apply_delta(self, q, delta):
+        snapshots.append({n: cat.latest_version(n) for n in cat.names()})
+        mid_factors.append(cold_read(
+            t, Query.make(cat, ring="sum", measure=("F", "m"), group_by=("c",))
+        ))
+        return orig(self, q, delta)
+
+    monkeypatch.setattr(CJTEngine, "apply_delta", spying_apply_delta)
+    codes, meas = fact_batch(rng, cat, 20)
+    t.stream("F").append(codes, measures=meas)
+    s_rel = t.stream("S").base
+    t.stream("S").append({
+        a: rng.integers(0, s_rel.domains[a], 6).astype(np.int32)
+        for a in s_rel.attrs
+    })
+    res = t.flush()
+    monkeypatch.setattr(CJTEngine, "apply_delta", orig)
+
+    assert len(res.updates) == 2 and snapshots
+    logged = {wm: snap for wm, snap in cat.commit_log}
+    for snap in snapshots:
+        assert snap == pre, "mid-flush reader saw a torn version vector"
+        assert snap == logged[wm_pre]
+    for f in mid_factors:
+        assert_factors_identical(f, want)
+    # post-commit: the new vector is logged under exactly one new watermark
+    assert res.watermark == wm_pre + 1
+    assert logged is not None and cat.watermark == wm_pre + 1
+    post = {n: cat.latest_version(n) for n in cat.names()}
+    assert dict(cat.commit_log)[res.watermark] == post
+    assert post["F"] != pre["F"] and post["S"] != pre["S"]
+
+
+# ---------------------------------------------------------------------------
+# pinned union-carry queries survive coalesced ticks without pin leaks
+# ---------------------------------------------------------------------------
+
+def test_stream_ticks_migrate_union_pins_no_leak():
+    """Under batched calibration the pinned union-carry queries hold the base
+    pins; coalesced ticks must migrate (not multiply) them, and close() must
+    release every one."""
+    rng = np.random.default_rng(19)
+    cat = star_catalog(seed=9)
+    t = Treant(cat, ring=sr.SUM, use_plans=True, batch_calibration=True,
+               compaction_threshold=0.0)
+    sess = t.open_session(spec_for("sum"), name="s")
+    assert t.store._pinned
+    pinned0 = len(t.store._pinned)
+    for _ in range(3):
+        buf = t.stream("F")
+        codes, meas = fact_batch(rng, cat, 15)
+        buf.append(codes, measures=meas)
+        mask = np.zeros(buf.base.num_rows + 15, bool)
+        mask[rng.choice(buf.base.num_rows, 3, replace=False)] = True
+        buf.delete(mask)
+        res = t.flush()
+        assert res.updates[0].queries_fallback == 0
+        assert len(t.store._pinned) <= pinned0, "tick multiplied pins"
+    for viz in ("by_c", "by_d"):
+        assert_factors_identical(
+            sess.read(viz).factor, cold_read(t, sess.query_of(viz))
+        )
+    sess.close()
+    assert not t.store._pinned, "stream ticks + close leaked pins"
+
+
+# ---------------------------------------------------------------------------
+# StreamBuffer unit behavior
+# ---------------------------------------------------------------------------
+
+def test_stream_buffer_cancellation_and_empty_tick():
+    cat = star_catalog(seed=10)
+    buf = StreamBuffer(cat.get("F"))
+    rng = np.random.default_rng(23)
+    rel = cat.get("F")
+    codes = {a: rng.integers(0, rel.domains[a], 8).astype(np.int32)
+             for a in rel.attrs}
+    buf.append(codes, measures={"m": np.arange(8, dtype=np.float32)})
+    # delete every appended row within the tick: full cancellation
+    mask = np.zeros(rel.num_rows + 8, bool)
+    mask[rel.num_rows:] = True
+    buf.delete(mask)
+    base, delta = buf.coalesce()
+    assert delta is None and base is rel
+    assert buf.stats.rows_cancelled == 8 and buf.stats.ticks == 0
+    # re-deleting a tombstone is a no-op
+    buf.delete(np.arange(rel.num_rows) < 4)
+    new_rel, d = buf.coalesce()
+    assert d is not None and d.tombstoned and new_rel.tombstone_count == 4
+    buf2 = StreamBuffer(new_rel)
+    assert buf2.tombstone_fraction() == pytest.approx(4 / new_rel.num_rows)
+    assert buf2.delete(np.arange(new_rel.num_rows) < 4) == 0
+    base, delta = buf2.coalesce()
+    assert delta is None
+    # appends validate the schema
+    with pytest.raises(ValueError):
+        buf2.append({"a": np.zeros(2, np.int32)})
+    with pytest.raises(ValueError):
+        buf2.append({a: np.zeros(2, np.int32) for a in rel.attrs})
+    # rebasing with pending batches is rejected (masks would misalign)
+    buf2.append({a: np.zeros(2, np.int32) for a in rel.attrs},
+                measures={"m": np.zeros(2, np.float32)})
+    with pytest.raises(ValueError):
+        buf2.rebase(rel)
+
+
+def test_flush_result_and_ingest_stats_surfaces():
+    rng = np.random.default_rng(29)
+    cat = star_catalog(seed=12)
+    t = Treant(cat, ring=sr.SUM, use_plans=False, compaction_threshold=0.0)
+    codes, meas = fact_batch(rng, cat, 5)
+    t.stream("F").append(codes, measures=meas)
+    res = t.flush()
+    assert res.relations == ["F"] and res.watermark == t.catalog.watermark
+    st = t.cache_stats()
+    assert st["watermark"] == t.catalog.watermark
+    assert st["ingest"] == dataclasses.asdict(t.ingest)
+    assert st["ingest"]["version_bumps"] == 1
