@@ -118,6 +118,29 @@ def run(scale: float = 1.0):
     emit("compiled/median_interaction_speedup_x", med / 1e6,
          f"median legacy/compiled = {med:.1f}x")
 
+    # MOMENTS warm interaction: the compound (c, s, q) ring rides the segment
+    # kernel as three stacked f32 columns, so the compiled side must report
+    # kernel-path executions on its moments sibling engine
+    per = {}
+    for mode in ("legacy", "compiled"):
+        cat, tre, q0 = sides[mode]
+        q_mom = Query.make(cat, ring="moments", measure=("Opp", "amount"),
+                           group_by=("camp_type",))
+        per[mode], per[f"res_{mode}"] = _timed_interact(tre, "pie", q_mom)
+    match = all(
+        np.allclose(np.asarray(a, np.float64), np.asarray(b, np.float64),
+                    rtol=1e-4, atol=1e-4)
+        for a, b in zip(jax.tree_util.tree_leaves(per["res_legacy"].factor.field),
+                        jax.tree_util.tree_leaves(per["res_compiled"].factor.field)))
+    emit("compiled/moments_avg/legacy", per["legacy"])
+    emit("compiled/moments_avg/compiled", per["compiled"],
+         f"speedup={per['legacy'] / max(per['compiled'], 1e-9):.1f}x match={match}")
+    mom_stats = sides["compiled"][1]._engines["moments"].plans.stats
+    assert mom_stats.kernel_execs > 0, \
+        f"MOMENTS interaction must hit the stacked-leaf kernel path, {mom_stats}"
+    emit("compiled/moments_kernel_execs_count", mom_stats.kernel_execs / 1e6,
+         f"moments kernel execs = {mom_stats.kernel_execs}")
+
     upd = {m: _bench_update(sides[m][0], sides[m][1], sides[m][2], seed=41)
            for m in ("legacy", "compiled")}
     emit("compiled/update_then_read/legacy", upd["legacy"])

@@ -198,6 +198,26 @@ def run_crossfilter(scale: float = 1.0) -> float:
             f"level-batched offline did not reduce dispatches: "
             f"{disp_b} vs {disp_u}"
         )
+        # the regression-gated offline dispatch count (lower is better):
+        # with level fusion every calibration pass costs ≤ #levels launches
+        emit("crossfilter/offline_dispatches", disp_b / 1e6,
+             f"fused offline dispatches = {disp_b}")
+        if treant.fuse_level_kernel:
+            max_levels = max(
+                len(jt.calibration_levels(b)) for b in jt.bags
+            )
+            assert disp_b <= max_levels, (
+                f"level fusion left {disp_b} offline dispatches "
+                f"(tree depth bounds levels at {max_levels})"
+            )
+            fused = treant.cache_stats()["plans"]
+            emit("crossfilter/fused_level_launches",
+                 fused["fused_level_launches"] / 1e6,
+                 f"launches={fused['fused_level_launches']} "
+                 f"messages={fused['fused_level_messages']}")
+            assert fused["fused_level_launches"] > 0, (
+                "offline calibration never took the fused level kernel"
+            )
         if scale >= 1.0:
             assert off_speedup >= 1.3, (
                 f"level-batched offline calibration only {off_speedup:.2f}x "

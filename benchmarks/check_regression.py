@@ -71,6 +71,10 @@ GATED: dict[str, Metric] = {
     "crossfilter/offline_batch_speedup": Metric(
         lower_is_better=False, tolerance=0.20, min_scale=1.0
     ),
+    # fused offline dispatch count (emitted count/1e6 so the value IS the
+    # count): ≤ tree depth with level fusion on; any integer increase means a
+    # level stopped fusing, which 20% tolerance on 4 always catches
+    "crossfilter/offline_dispatches": Metric(lower_is_better=True, tolerance=0.20),
     "ingest/rows_per_sec": Metric(lower_is_better=False, tolerance=0.30),
     "ingest/p99_ratio": Metric(
         lower_is_better=True, tolerance=0.20, min_scale=1.0
@@ -178,6 +182,7 @@ def self_test(fresh: dict | None, baseline: dict | None) -> int:
             "crossfilter/prefetch_speedup": 6.0,
             "crossfilter/batch_speedup": 1.6,
             "crossfilter/offline_batch_speedup": 1.6,
+            "crossfilter/offline_dispatches": 4.0,
             "ingest/rows_per_sec": 300_000.0,
             "ingest/p99_ratio": 1.1,
         }

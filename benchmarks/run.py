@@ -69,7 +69,9 @@ def main() -> None:
         if len(common.ROWS) > start and key not in failures:
             _write_json(key, common.ROWS[start:])
         print(f"# === {key} done in {time.time() - t0:.1f}s ===", flush=True)
-    # roofline summary (requires dry-run artifacts; skipped gracefully if absent)
+    # kernel roofline microbench: measures launch overhead / crossover for the
+    # Pallas kernels and writes kernel_costs.json (nightly refresh; the
+    # committed benchmarks/baselines/kernel_costs.json seeds the cost model)
     if not want or "roofline" in want:
         try:
             from . import roofline

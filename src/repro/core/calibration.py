@@ -80,6 +80,7 @@ from .plans import (
     batch_calibration_default,
     calibration_union_budget,
     expand_rows_field,
+    fuse_level_default,
 )
 from .query import Query
 
@@ -462,6 +463,7 @@ class CJTEngine:
         use_plans: bool = True,
         plan_cache: PlanCache | None = None,
         batch_calibration: bool | None = None,
+        fuse_level_kernel: bool | None = None,
     ):
         self.jt = jt
         self.catalog = catalog
@@ -484,6 +486,13 @@ class CJTEngine:
         if batch_calibration is None:
             batch_calibration = batch_calibration_default()
         self.batch_calibration = batch_calibration
+        # level-fused kernel launches (None → REPRO_FUSE_LEVEL_KERNEL): route
+        # ALL of a calibration level's batch groups through ONE jitted
+        # PlanCache.run_level call whose kernel-eligible messages share a
+        # single multi-segment Pallas launch; inert without plans + batching
+        if fuse_level_kernel is None:
+            fuse_level_kernel = fuse_level_default()
+        self.fuse_level_kernel = fuse_level_kernel
         # Prop-2 signature memo, LRU-bounded: keyed by (query digest, edge),
         # so a long-lived session's interaction stream cannot leak memory
         self._sig_memo: LRU = LRU(capacity=8192)
@@ -1134,9 +1143,13 @@ class CJTEngine:
         signature execute as ONE vmapped jitted call
         (``PlanCache.run_message_batch`` — γ-domain padding with the
         ⊕-identity, exactly like batched absorption), and dense/densified
-        bags fall back to the per-edge message path.  Returns the number of
-        edges advanced; a partially-stepped level (``plan.offset``) is
-        finished first.
+        bags fall back to the per-edge message path.  With
+        ``fuse_level_kernel`` on, ALL batch groups of the level collapse
+        further into one ``PlanCache.run_level`` dispatch whose
+        kernel-eligible messages share a single multi-segment Pallas launch,
+        so a whole calibration pass costs ≤ #levels dispatches.  Returns the
+        number of edges advanced; a partially-stepped level (``plan.offset``)
+        is finished first.
         """
         live = [i for i, p in enumerate(plans) if not p.done]
         if not live:
@@ -1189,7 +1202,32 @@ class CJTEngine:
         groups: dict[tuple, list] = {}
         for rec in deferred:
             groups.setdefault(absorb_batch_key(self.ring, rec[5]), []).append(rec)
-        for members in groups.values():
+        group_list = list(groups.values())
+
+        def _store_group(members, fs):
+            for (i, u, v, base, gamma, _), f in zip(members, fs):
+                st = stats_list[i]
+                tag = tags[i] if tags is not None else None
+                with self._tagged(tag):
+                    self.store.put(base, gamma, f)
+                st.messages_computed += 1
+                st.recomputed_edges.append((u, v))
+
+        if group_list and self.fuse_level_kernel:
+            # level fusion: ALL groups ride one jitted run_level call — the
+            # kernel-eligible ones share a single multi-segment Pallas
+            # launch — so the whole level costs ONE dispatch
+            fs_groups = self.plans.run_level(
+                self.catalog,
+                [[m[5] for m in members] for members in group_list],
+                [[stats_list[m[0]] for m in members] for members in group_list],
+            )
+            self._count_dispatches(stats_list[group_list[0][0][0]], 1)
+            for members, fs in zip(group_list, fs_groups):
+                _store_group(members, fs)
+            return n
+
+        for members in group_list:
             sts = [stats_list[m[0]] for m in members]
             if len(members) == 1:
                 _, _, _, _, _, item = members[0]
@@ -1202,13 +1240,7 @@ class CJTEngine:
                     self.catalog, [m[5] for m in members], sts,
                 )
             self._count_dispatches(sts[0], 1)
-            for (i, u, v, base, gamma, _), f in zip(members, fs):
-                st = stats_list[i]
-                tag = tags[i] if tags is not None else None
-                with self._tagged(tag):
-                    self.store.put(base, gamma, f)
-                st.messages_computed += 1
-                st.recomputed_edges.append((u, v))
+            _store_group(members, fs)
         return n
 
     def calibrate_levels_iter(

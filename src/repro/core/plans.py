@@ -54,8 +54,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import costs as kernel_costs
 from repro.kernels.segment_aggregate import ops as seg_ops
 from repro.kernels.semiring_contract import ops as sc_ops
+from repro.kernels.tropical_contract import ops as tc_ops
 from repro.relational.relation import LRU, Predicate
 
 from . import semiring as sr
@@ -67,8 +69,16 @@ def _on_tpu() -> bool:
 
 
 def _kernel_cost_max() -> int:
-    """Max one-hot-matmul work (N·G·V or G·B·A) routed to Pallas off-TPU."""
-    return int(os.environ.get("REPRO_PLAN_KERNEL_COST", str(1 << 19)))
+    """Max one-hot-matmul work (N·G·V or G·B·A) routed to Pallas off-TPU.
+
+    Resolution: ``REPRO_PLAN_KERNEL_COST`` env override → the measured
+    crossover from the committed ``kernel_costs.json`` roofline profile →
+    the historical static default (1<<19)."""
+    env = os.environ.get("REPRO_PLAN_KERNEL_COST")
+    if env is not None:
+        return int(env)
+    derived = kernel_costs.derived_plan_kernel_cost()
+    return derived if derived is not None else (1 << 19)
 
 
 def use_plans_default() -> bool:
@@ -95,8 +105,24 @@ def calibration_union_budget() -> int:
     accumulate (REPRO_CALIBRATION_UNION_BUDGET).  Bounds the widest message a
     shared calibration pass materializes: per-row ⊗ lanes scale with the
     product, so the default keeps the fact-bag working set ~O(512·N·4B) while
-    collapsing the most traces (measured knee on the crossfilter suite)."""
-    return int(os.environ.get("REPRO_CALIBRATION_UNION_BUDGET", "512"))
+    collapsing the most traces (measured knee on the crossfilter suite).
+
+    Resolution mirrors :func:`_kernel_cost_max`: env override → roofline
+    profile's derived budget → static 512."""
+    env = os.environ.get("REPRO_CALIBRATION_UNION_BUDGET")
+    if env is not None:
+        return int(env)
+    derived = kernel_costs.derived_union_budget()
+    return derived if derived is not None else 512
+
+
+def fuse_level_default() -> bool:
+    """Env-gated default for level-fused kernel launches
+    (REPRO_FUSE_LEVEL_KERNEL; CI runs a 0/1 axis).  When on — and plans plus
+    level batching are on — each calibration level dispatches ONE jitted call
+    whose kernel-eligible messages share a single multi-segment Pallas
+    launch."""
+    return os.environ.get("REPRO_FUSE_LEVEL_KERNEL", "1").lower() not in ("0", "false")
 
 
 def expand_rows_field(field: sr.Field, have: Sequence[str], want: Sequence[str],
@@ -147,6 +173,14 @@ class PlanStats:
     level_batched_messages: int = 0  # messages served by those calls (Σ widths)
     level_batch_width: int = 0       # widest level batch observed (max)
     calibration_dispatches: int = 0  # message dispatches issued by calibration
+    # level-fused launches (run_level): every kernel-eligible message of a
+    # calibration level ⊕-reduced by ONE multi-segment Pallas launch
+    fused_level_launches: int = 0    # fused level launches dispatched
+    fused_level_messages: int = 0    # messages served by those launches
+
+    # counters that are high-water marks, not sums: cross-engine aggregation
+    # (Treant.cache_stats) takes max for these and Σ for everything else
+    MAX_FIELDS = ("batch_width", "level_batch_width")
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -156,13 +190,27 @@ class PlanStats:
 class _Plan:
     fn: Callable
     uses_kernel: bool
+    # level plans only: per-group kernel routing + Σ width of fused groups
+    group_kernel: tuple = ()
+    fused_messages: int = 0
 
 
 # ---------------------------------------------------------------------------
 # sparse-bag plan: gather ⊗ rowwise → σ row mask → segment-⊕ → reshape
 # ---------------------------------------------------------------------------
 
-def _sparse_plan_fn(
+@dataclasses.dataclass(frozen=True)
+class _SparseMeta:
+    """Static facts about one sparse contraction the level plan needs to
+    route its rowwise output through the fused kernel."""
+
+    total: int                       # flattened local-out segment count
+    carried_dims: tuple[int, ...]    # γ-carried dims of the rowwise output
+    use_kernel: bool
+    cost: int
+
+
+def _sparse_plan_parts(
     ring: sr.Semiring,
     rel_attrs: tuple[str, ...],
     doms: dict[str, int],
@@ -170,9 +218,12 @@ def _sparse_plan_fn(
     pred_attrs: tuple[str, ...],
     out_attrs: tuple[str, ...],
     n: int,
-) -> tuple[Callable, bool]:
+) -> tuple[Callable, Callable, Callable, _SparseMeta]:
     """The raw (un-jitted) single-contraction body shared by the scalar plan
-    (jit directly) and the batched plan (pad + stack + vmap, then jit)."""
+    (jit directly) and the batched plan (pad + stack + vmap, then jit),
+    split as (fn, rowwise, finalize, meta) so the level-fused plan can run
+    the rowwise stage per message and hand ALL segment reductions of a level
+    to one multi-segment kernel launch between rowwise and finalize."""
     rel_set = set(rel_attrs)
     local_out = tuple(a for a in out_attrs if a in rel_set)
     total = int(np.prod([doms[a] for a in local_out])) if local_out else 1
@@ -194,7 +245,7 @@ def _sparse_plan_fn(
 
     op = ring.kernel_segment_op
     vcols = int(np.prod(carried_dims)) if carried_dims else 1
-    cost = n * max(total, 1) * vcols
+    cost = n * max(total, 1) * vcols * len(ring.trailing)
     use_kernel = (
         op is not None
         and ring.dtype == jnp.float32
@@ -205,7 +256,7 @@ def _sparse_plan_fn(
     interpret = not _on_tpu()
     out_shape = tuple(doms[a] for a in local_out)
 
-    def fn(vals, in_fields, in_idx, pred_masks, pred_codes, seg_idx):
+    def rowwise(vals, in_fields, in_idx, pred_masks, pred_codes):
         for (m_attrs, shared, extra, have, want), field, idx in zip(
             steps, in_fields, in_idx
         ):
@@ -241,23 +292,52 @@ def _sparse_plan_fn(
                 m = rowm.reshape((n,) + (1,) * (leaf.ndim - 1))
                 out.append(jnp.where(m, leaf, z))
             vals = jax.tree_util.tree_unflatten(treedef, out)
-        if use_kernel:
-            leaves, treedef = jax.tree_util.tree_flatten(vals)
-            red = []
-            for leaf in leaves:
-                agg = seg_ops.aggregate_op(
-                    seg_idx, leaf.reshape((n, -1)), total, op=op, interpret=interpret
-                )
-                red.append(agg.reshape((total,) + leaf.shape[1:]))
-            field = jax.tree_util.tree_unflatten(treedef, red)
-        else:
-            field = ring.segment_reduce(vals, seg_idx, total)
+        return vals
+
+    def finalize(field):
         field = jax.tree_util.tree_map(
             lambda l: l.reshape(out_shape + l.shape[1:]), field
         )
         return Factor(local_out + carried, field, ring).project_to(out_attrs)
 
-    return fn, use_kernel
+    def fn(vals, in_fields, in_idx, pred_masks, pred_codes, seg_idx):
+        vals = rowwise(vals, in_fields, in_idx, pred_masks, pred_codes)
+        if use_kernel:
+            # compound rings (MOMENTS) stack their equal-shape leaves as
+            # extra value columns, so count/sum/sumsq share ONE segment pass
+            leaves, treedef = jax.tree_util.tree_flatten(vals)
+            slab = jnp.concatenate([l.reshape((n, -1)) for l in leaves], axis=1)
+            agg = seg_ops.aggregate_op(
+                seg_idx, slab, total, op=op, interpret=interpret
+            )
+            parts = jnp.split(agg, len(leaves), axis=1) if len(leaves) > 1 else [agg]
+            red = [
+                p.reshape((total,) + l.shape[1:]) for p, l in zip(parts, leaves)
+            ]
+            field = jax.tree_util.tree_unflatten(treedef, red)
+        else:
+            field = ring.segment_reduce(vals, seg_idx, total)
+        return finalize(field)
+
+    meta = _SparseMeta(
+        total=total, carried_dims=carried_dims, use_kernel=use_kernel, cost=cost
+    )
+    return fn, rowwise, finalize, meta
+
+
+def _sparse_plan_fn(
+    ring: sr.Semiring,
+    rel_attrs: tuple[str, ...],
+    doms: dict[str, int],
+    in_attrs_list: tuple[tuple[str, ...], ...],
+    pred_attrs: tuple[str, ...],
+    out_attrs: tuple[str, ...],
+    n: int,
+) -> tuple[Callable, bool]:
+    fn, _, _, meta = _sparse_plan_parts(
+        ring, rel_attrs, doms, in_attrs_list, pred_attrs, out_attrs, n
+    )
+    return fn, meta.use_kernel
 
 
 def _build_sparse_plan(
@@ -294,6 +374,22 @@ class AbsorbItem:
     incoming: tuple[Factor, ...]
     preds: tuple[Predicate, ...]
     out_attrs: tuple[str, ...]
+
+
+@dataclasses.dataclass
+class _GroupSpec:
+    """One canonicalized batch group: members in canonical order plus all
+    the statics the batched / level-fused plan builders consume."""
+
+    items: list
+    stats: list | None
+    in_canon: tuple
+    out_canon: tuple
+    member_dims: tuple
+    doms: dict
+    pred_attrs: tuple
+    inverse: dict          # canonical position → caller position
+    key: tuple             # version-free trace key
 
 
 def _canon_absorption(item: AbsorbItem) -> tuple[tuple, tuple, dict[str, str]]:
@@ -346,29 +442,16 @@ def _pad_value(zero_leaf) -> float | bool:
     return flat[0].item() if flat.size else 0.0
 
 
-def _build_batched_sparse_plan(
+def _make_batch_stager(
     ring: sr.Semiring,
-    rel_attrs: tuple[str, ...],
+    rel_set: set[str],
     doms: dict[str, int],
     in_attrs_list: tuple[tuple[str, ...], ...],
     pred_attrs: tuple[str, ...],
-    out_attrs: tuple[str, ...],
-    n: int,
-    member_dims: tuple[dict[str, int], ...],
-) -> _Plan:
-    """Compile B structurally-identical absorptions as ONE jitted call.
-
-    ``in_attrs_list``/``out_attrs`` use canonical placeholder names; ``doms``
-    maps placeholders to the *padded* (group-max) sizes; ``member_dims[i]``
-    maps placeholders to member i's actual sizes.  Padding, stacking and the
-    per-member output slicing all live inside the traced function, so the
-    host dispatches exactly one executable per batch — the whole point.
-    """
-    fn, use_kernel = _sparse_plan_fn(
-        ring, rel_attrs, doms, in_attrs_list, pred_attrs, out_attrs, n
-    )
-    nmembers = len(member_dims)
-    rel_set = set(rel_attrs)
+) -> Callable:
+    """Traced-side stacking of B members' inputs: γ-carried message dims pad
+    to the group max with the ⊕-identity (0̄ is ⊗-absorbing, so padding can
+    never leak into valid slots), then everything stacks on a new lead axis."""
     pad_vals = [_pad_value(z) for z in jax.tree_util.tree_leaves(ring.zeros(()))]
 
     def _stack(fields):
@@ -387,7 +470,7 @@ def _build_batched_sparse_plan(
                        if any(p[1] for p in pads) else leaf)
         return jax.tree_util.tree_unflatten(treedef, out)
 
-    def bfn(vals_list, in_fields_list, in_idx, pred_masks_list, pred_codes, seg_idx):
+    def stage(vals_list, in_fields_list, pred_masks_list):
         vals = _stack(vals_list)
         in_fields = tuple(
             _stack([_pad_message(j, member[j]) for member in in_fields_list])
@@ -397,28 +480,213 @@ def _build_batched_sparse_plan(
             jnp.stack([pm[k] for pm in pred_masks_list])
             for k in range(len(pred_attrs))
         )
+        return vals, in_fields, pred_masks
+
+    return stage
+
+
+def _slice_member(
+    ring: sr.Semiring,
+    fact: Factor,
+    dims: dict[str, int],
+    doms: dict[str, int],
+    lead: int | None = None,
+) -> Factor:
+    """Slice one member's valid region out of a padded (optionally stacked)
+    factor: placeholder dims shrink back to the member's actual sizes."""
+    leaves, treedef = jax.tree_util.tree_flatten(fact.field)
+    sliced = []
+    for leaf, t in zip(leaves, ring.trailing):
+        idx = tuple(
+            ([] if lead is None else [lead])
+            + [slice(0, dims.get(a, doms[a])) for a in fact.attrs]
+            + [slice(None)] * t
+        )
+        sliced.append(leaf[idx])
+    return Factor(fact.attrs, jax.tree_util.tree_unflatten(treedef, sliced), ring)
+
+
+def _batched_sparse_fn(
+    ring: sr.Semiring,
+    rel_attrs: tuple[str, ...],
+    doms: dict[str, int],
+    in_attrs_list: tuple[tuple[str, ...], ...],
+    pred_attrs: tuple[str, ...],
+    out_attrs: tuple[str, ...],
+    n: int,
+    member_dims: tuple[dict[str, int], ...],
+) -> tuple[Callable, bool]:
+    """The raw (un-jitted) B-member batch body: pad + stack + vmap the
+    single-contraction fn, then slice members back out."""
+    fn, use_kernel = _sparse_plan_fn(
+        ring, rel_attrs, doms, in_attrs_list, pred_attrs, out_attrs, n
+    )
+    nmembers = len(member_dims)
+    stage = _make_batch_stager(ring, set(rel_attrs), doms, in_attrs_list, pred_attrs)
+
+    def bfn(vals_list, in_fields_list, in_idx, pred_masks_list, pred_codes, seg_idx):
+        vals, in_fields, pred_masks = stage(vals_list, in_fields_list, pred_masks_list)
         batched = jax.vmap(fn, in_axes=(0, 0, None, 0, None, None))(
             vals, in_fields, in_idx, pred_masks, pred_codes, seg_idx
         )
         # slice each member's valid region back out of the padded stack
-        outs = []
-        leaves, treedef = jax.tree_util.tree_flatten(batched.field)
-        for i in range(nmembers):
-            sliced = []
-            for leaf, t in zip(leaves, ring.trailing):
-                idx = tuple(
-                    [i]
-                    + [slice(0, member_dims[i].get(a, doms[a]))
-                       for a in batched.attrs]
-                    + [slice(None)] * t
-                )
-                sliced.append(leaf[idx])
-            outs.append(Factor(
-                batched.attrs, jax.tree_util.tree_unflatten(treedef, sliced), ring
-            ))
-        return tuple(outs)
+        return tuple(
+            _slice_member(ring, batched, member_dims[i], doms, lead=i)
+            for i in range(nmembers)
+        )
 
+    return bfn, use_kernel
+
+
+def _build_batched_sparse_plan(
+    ring: sr.Semiring,
+    rel_attrs: tuple[str, ...],
+    doms: dict[str, int],
+    in_attrs_list: tuple[tuple[str, ...], ...],
+    pred_attrs: tuple[str, ...],
+    out_attrs: tuple[str, ...],
+    n: int,
+    member_dims: tuple[dict[str, int], ...],
+) -> _Plan:
+    """Compile B structurally-identical absorptions as ONE jitted call.
+
+    ``in_attrs_list``/``out_attrs`` use canonical placeholder names; ``doms``
+    maps placeholders to the *padded* (group-max) sizes; ``member_dims[i]``
+    maps placeholders to member i's actual sizes.  Padding, stacking and the
+    per-member output slicing all live inside the traced function, so the
+    host dispatches exactly one executable per batch — the whole point.
+    """
+    bfn, use_kernel = _batched_sparse_fn(
+        ring, rel_attrs, doms, in_attrs_list, pred_attrs, out_attrs, n, member_dims
+    )
     return _Plan(fn=jax.jit(bfn), uses_kernel=use_kernel)
+
+
+# ---------------------------------------------------------------------------
+# level-fused plan: EVERY group of a calibration level in one jitted call,
+# kernel-eligible groups sharing a single multi-segment Pallas launch
+# ---------------------------------------------------------------------------
+
+def _build_level_plan(ring: sr.Semiring, group_statics: tuple) -> _Plan:
+    """Compile one calibration level — all its batch groups — as ONE call.
+
+    ``group_statics[g]`` is ``(rel_attrs, doms, in_canon, pred_attrs,
+    out_canon, n, member_dims)`` exactly as :func:`_build_batched_sparse_plan`
+    takes them (canonical placeholders, padded doms).  Per group the rowwise
+    stage (gather ⊗ σ) runs as before — vmapped when the group has several
+    members — but instead of one ``aggregate_op`` per member, every
+    kernel-eligible member across ALL groups contributes its
+    ``(seg_idx, value slab, num_segments)`` descriptor to a single
+    ``level_aggregate`` launch; groups that fail the kernel gate ⊕-reduce on
+    the lax path *inside the same trace*.  Either way the host dispatches one
+    executable per level, which is the whole point: offline calibration goes
+    from one dispatch per batch group to ≤ tree-depth launches.
+    """
+    parts = []
+    for (rel_attrs, doms, in_canon, pred_attrs, out_canon, n, member_dims) in (
+        group_statics
+    ):
+        fn, rowwise, finalize, meta = _sparse_plan_parts(
+            ring, rel_attrs, doms, in_canon, pred_attrs, out_canon, n
+        )
+        nmembers = len(member_dims)
+        stage = (
+            _make_batch_stager(ring, set(rel_attrs), doms, in_canon, pred_attrs)
+            if nmembers > 1 else None
+        )
+        bfn = None
+        if nmembers > 1 and not meta.use_kernel:
+            bfn, _ = _batched_sparse_fn(
+                ring, rel_attrs, doms, in_canon, pred_attrs, out_canon, n,
+                member_dims,
+            )
+        parts.append({
+            "fn": fn, "rowwise": rowwise, "finalize": finalize, "meta": meta,
+            "stage": stage, "bfn": bfn, "doms": doms,
+            "member_dims": member_dims, "n": n,
+        })
+    group_kernel = tuple(p["meta"].use_kernel for p in parts)
+    fused_messages = sum(
+        len(p["member_dims"]) for p in parts if p["meta"].use_kernel
+    )
+    op = ring.kernel_segment_op
+    interpret = not _on_tpu()
+    nleaves = len(ring.trailing)
+
+    def lfn(groups_args):
+        fused_items: list = []
+        fused_slots: list = []
+        treedefs: dict = {}
+        results: list = [None] * len(parts)
+        for g, (part, args) in enumerate(zip(parts, groups_args)):
+            vals_list, in_fields_list, in_idx, pred_masks_list, pred_codes, seg_idx = args
+            nmembers = len(part["member_dims"])
+            if not part["meta"].use_kernel:
+                if nmembers == 1:
+                    results[g] = (part["fn"](
+                        vals_list[0], in_fields_list[0], in_idx,
+                        pred_masks_list[0], pred_codes, seg_idx,
+                    ),)
+                else:
+                    results[g] = part["bfn"](
+                        vals_list, in_fields_list, in_idx, pred_masks_list,
+                        pred_codes, seg_idx,
+                    )
+                continue
+            if nmembers == 1:
+                member_rvs = [part["rowwise"](
+                    vals_list[0], in_fields_list[0], in_idx,
+                    pred_masks_list[0], pred_codes,
+                )]
+            else:
+                vals, in_fields, pred_masks = part["stage"](
+                    vals_list, in_fields_list, pred_masks_list
+                )
+                rvb = jax.vmap(part["rowwise"], in_axes=(0, 0, None, 0, None))(
+                    vals, in_fields, in_idx, pred_masks, pred_codes
+                )
+                member_rvs = [
+                    jax.tree_util.tree_map(lambda l, b=b: l[b], rvb)
+                    for b in range(nmembers)
+                ]
+            n = part["n"]
+            for b, rv in enumerate(member_rvs):
+                leaves, treedef = jax.tree_util.tree_flatten(rv)
+                treedefs[g] = treedef
+                slab = jnp.concatenate(
+                    [l.reshape((n, -1)) for l in leaves], axis=1
+                )
+                fused_items.append((seg_idx, slab, part["meta"].total))
+                fused_slots.append((g, b))
+        if fused_items:
+            fused_outs = seg_ops.level_aggregate(
+                fused_items, op=op, interpret=interpret
+            )
+            fused_facts: dict = {}
+            for (g, b), agg in zip(fused_slots, fused_outs):
+                part = parts[g]
+                total = part["meta"].total
+                carried_dims = part["meta"].carried_dims
+                leaf_parts = (
+                    jnp.split(agg, nleaves, axis=1) if nleaves > 1 else [agg]
+                )
+                red = [p.reshape((total,) + carried_dims) for p in leaf_parts]
+                field = jax.tree_util.tree_unflatten(treedefs[g], red)
+                fact = part["finalize"](field)
+                fact = _slice_member(
+                    ring, fact, part["member_dims"][b], part["doms"]
+                )
+                fused_facts.setdefault(g, []).append(fact)
+            for g, facts in fused_facts.items():
+                results[g] = tuple(facts)
+        return tuple(results)
+
+    return _Plan(
+        fn=jax.jit(lfn),
+        uses_kernel=any(group_kernel),
+        group_kernel=group_kernel,
+        fused_messages=fused_messages,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -453,8 +721,11 @@ def _build_dense_plan(
     avail = {a for attrs, _ in structs for a in attrs}
     out = tuple(a for a in out_attrs if a in avail)
     split = None
+    # tropical MIN/MAX shares the matmul decomposition: its ⊗ is +, so the
+    # (free1, shared) × (shared, free2) split maps 1:1 onto tropical_contract
+    tropical = ring.kernel_segment_op in ("min", "max")
     if (
-        ring.is_arithmetic
+        (ring.is_arithmetic or tropical)
         and len(ring.trailing) == 1
         and ring.dtype == jnp.float32
         and len(structs) == 2
@@ -475,12 +746,20 @@ def _build_dense_plan(
             f1sz = int(np.prod([doms[a] for a in free1])) if free1 else 1
             f2sz = int(np.prod([doms[a] for a in free2])) if free2 else 1
             csz = int(np.prod([doms[a] for a in shared]))
-            o = sc_ops.contract_op(
-                g1.field.reshape((f1sz, csz)),
-                g2.field.reshape((csz, f2sz)),
-                None,
-                interpret=interpret,
-            )
+            if tropical:
+                o = tc_ops.contract_op(
+                    g1.field.reshape((f1sz, csz)),
+                    g2.field.reshape((csz, f2sz)),
+                    is_min=ring.kernel_segment_op == "min",
+                    interpret=interpret,
+                )
+            else:
+                o = sc_ops.contract_op(
+                    g1.field.reshape((f1sz, csz)),
+                    g2.field.reshape((csz, f2sz)),
+                    None,
+                    interpret=interpret,
+                )
             field = o.reshape(
                 tuple(doms[a] for a in free1) + tuple(doms[a] for a in free2)
             )
@@ -643,14 +922,102 @@ class PlanCache:
         """
         return self._run_batch(catalog, items, stats_list, calibration=True)
 
-    def _run_batch(
+    def run_level(
         self,
         catalog,
+        item_groups: Sequence[Sequence[AbsorbItem]],
+        stats_groups: Sequence[Sequence] | None = None,
+    ) -> list[list[Factor]]:
+        """Execute ALL of one calibration level's batch groups as ONE call.
+
+        ``item_groups`` are the :func:`absorb_batch_key` groups of a level —
+        already independent by construction (PAPER.md §4: same-level messages
+        never read each other).  The compiled level plan runs every group's
+        rowwise stage, fuses all kernel-eligible segment reductions into a
+        single multi-segment Pallas launch (``level_aggregate``) and reduces
+        the rest on the lax path inside the same trace, so the host issues
+        exactly one dispatch per level instead of one per group.  Returns the
+        per-group factor lists in the caller's group and member order.
+        """
+        specs = [
+            self._group_spec(items, stats_groups[i] if stats_groups else None)
+            for i, items in enumerate(item_groups)
+        ]
+        # canonical group order: a level's groups arrive in edge-iteration
+        # order, which σ-variants can permute without changing structure —
+        # sort by trace key so every permutation re-hits the same plan
+        order = sorted(range(len(specs)), key=lambda i: repr(specs[i].key))
+        key = ("level", self.ring.name, tuple(specs[i].key for i in order))
+        entry = self._plans.get(key)
+        traced = entry is None
+        if traced:
+            statics = tuple(
+                (
+                    specs[i].items[0].rel.attrs, specs[i].doms,
+                    specs[i].in_canon, specs[i].pred_attrs, specs[i].out_canon,
+                    specs[i].items[0].rel.row_bucket, specs[i].member_dims,
+                )
+                for i in order
+            )
+            entry = _build_level_plan(self.ring, statics)
+            self._plans.put(key, entry)
+        outs = entry.fn(
+            tuple(self._group_args(catalog, specs[i]) for i in order)
+        )
+        if entry.uses_kernel:
+            self.stats.fused_level_launches += 1
+            self.stats.fused_level_messages += entry.fused_messages
+        results: list[list[Factor] | None] = [None] * len(specs)
+        for pos, i in enumerate(order):
+            spec = specs[i]
+            width = len(spec.items)
+            group_uses_kernel = entry.group_kernel[pos]
+            if width > 1:
+                # a vmapped group inside the fused launch is still a level
+                # batch — keep the level_batched_* counters meaningful
+                self.stats.level_batched_execs += 1
+                self.stats.level_batched_messages += width
+                self.stats.level_batch_width = max(
+                    self.stats.level_batch_width, width
+                )
+            group_results = []
+            for it, f, stats in zip(
+                spec.items, outs[pos], spec.stats or [None] * width
+            ):
+                # rename canonical placeholders back to the member's attrs
+                group_results.append(Factor(it.out_attrs, f.field, self.ring))
+                if traced:
+                    self.stats.plans_built += 1
+                else:
+                    self.stats.plan_hits += 1
+                if group_uses_kernel:
+                    self.stats.kernel_execs += 1
+                else:
+                    self.stats.fallback_execs += 1
+                if stats is not None:
+                    stats.plan_traces += int(traced)
+                    stats.plan_hits += int(not traced)
+                    stats.kernel_execs += int(group_uses_kernel)
+                    if width > 1:
+                        stats.level_batched_execs += 1
+                        stats.level_batch_width = max(
+                            stats.level_batch_width, width
+                        )
+                traced = False  # one trace per level call, not per member
+            # undo the member sort: caller expects its own member order
+            results[i] = [
+                group_results[spec.inverse[o]] for o in range(width)
+            ]
+        return results  # type: ignore[return-value]
+
+    def _group_spec(
+        self,
         items: Sequence[AbsorbItem],
         stats_list: Sequence | None,
-        calibration: bool,
-    ) -> list[Factor]:
-        assert len(items) >= 2, "batch of one: use run_sparse"
+    ) -> "_GroupSpec":
+        """Canonicalize one batch group: sorted member order, placeholder
+        dims padded to the group max, and the version-free trace key shared
+        by the batched and level-fused plans."""
         rel = items[0].rel
         canons = [_canon_absorption(it) for it in items]
         in_canon, out_canon, _ = canons[0]
@@ -688,14 +1055,18 @@ class PlanCache:
             in_canon, pred_attrs, out_canon, _field_struct(items[0].vals),
             tuple(tuple(sorted(md.items())) for md in member_dims),
         )
-        entry = self._plans.get(key)
-        traced = entry is None
-        if traced:
-            entry = _build_batched_sparse_plan(
-                self.ring, rel.attrs, doms, in_canon, pred_attrs, out_canon,
-                rel.row_bucket, member_dims,
-            )
-            self._plans.put(key, entry)
+        return _GroupSpec(
+            items=items, stats=stats_list, in_canon=in_canon,
+            out_canon=out_canon, member_dims=member_dims, doms=doms,
+            pred_attrs=pred_attrs, inverse=inverse, key=key,
+        )
+
+    def _group_args(self, catalog, spec: "_GroupSpec") -> tuple:
+        """Device-resident runtime inputs for one group, in the (vals_list,
+        in_fields_list, in_idx, pred_masks_list, pred_codes, seg_idx) layout
+        both the batched and the level-fused plan bodies take."""
+        items = spec.items
+        rel = items[0].rel
         rel_set = set(rel.attrs)
         in_idx = tuple(
             catalog.dev_flat_codes(rel, tuple(a for a in m.attrs if a in rel_set))[0]
@@ -707,7 +1078,7 @@ class PlanCache:
         )
         local_out = tuple(a for a in items[0].out_attrs if a in rel_set)
         seg_idx, _ = catalog.dev_flat_codes(rel, local_out)
-        outs = entry.fn(
+        return (
             tuple(it.vals for it in items),
             tuple(tuple(m.field for m in it.incoming) for it in items),
             in_idx,
@@ -715,6 +1086,27 @@ class PlanCache:
             pred_codes,
             seg_idx,
         )
+
+    def _run_batch(
+        self,
+        catalog,
+        items: Sequence[AbsorbItem],
+        stats_list: Sequence | None,
+        calibration: bool,
+    ) -> list[Factor]:
+        assert len(items) >= 2, "batch of one: use run_sparse"
+        spec = self._group_spec(items, stats_list)
+        items, stats_list, inverse = spec.items, spec.stats, spec.inverse
+        rel = items[0].rel
+        entry = self._plans.get(spec.key)
+        traced = entry is None
+        if traced:
+            entry = _build_batched_sparse_plan(
+                self.ring, rel.attrs, spec.doms, spec.in_canon, spec.pred_attrs,
+                spec.out_canon, rel.row_bucket, spec.member_dims,
+            )
+            self._plans.put(spec.key, entry)
+        outs = entry.fn(*self._group_args(catalog, spec))
         width = len(items)
         if calibration:
             self.stats.level_batched_execs += 1

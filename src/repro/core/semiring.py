@@ -230,6 +230,9 @@ MOMENTS = Semiring(
     trailing=(0, 0, 0),
     is_arithmetic=False,
     has_add_inverse=True,
+    # ⊕ is leafwise +, so the plan layer stacks (c, s, q) as three f32 value
+    # columns and routes all of them through ONE "sum" segment pass
+    kernel_segment_op="sum",
 )
 
 

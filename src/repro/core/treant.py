@@ -49,6 +49,7 @@ from .plans import (
     PlanStats,
     batch_calibration_default,
     batch_fanout_default,
+    fuse_level_default,
     use_plans_default,
 )
 from .dashboard import (
@@ -132,19 +133,24 @@ class Treant:
         use_plans: bool | None = None,
         batch_fanout: bool | None = None,
         batch_calibration: bool | None = None,
+        fuse_level_kernel: bool | None = None,
         compaction_threshold: float | None = None,
     ):
         # None → env defaults: REPRO_USE_PLANS gates compiled plans (the CI
         # matrix runs both legs), REPRO_BATCH_FANOUT gates the vmapped
         # sibling-absorption batching (benchmarks A/B against per-viz
         # dispatch), REPRO_BATCH_CALIBRATION gates level-batched calibration
-        # passes (inert without plans — degrades to the per-edge loop)
+        # passes (inert without plans — degrades to the per-edge loop),
+        # REPRO_FUSE_LEVEL_KERNEL gates level-fused kernel launches (one
+        # dispatch + one Pallas launch per calibration level)
         if use_plans is None:
             use_plans = use_plans_default()
         if batch_fanout is None:
             batch_fanout = batch_fanout_default()
         if batch_calibration is None:
             batch_calibration = batch_calibration_default()
+        if fuse_level_kernel is None:
+            fuse_level_kernel = fuse_level_default()
         self.catalog = catalog
         self.jt = jt or jt_from_catalog(catalog)
         self.store = MessageStore(max_bytes=max_cache_bytes)
@@ -153,10 +159,12 @@ class Treant:
         self._use_plans = use_plans
         self.batch_fanout = batch_fanout
         self.batch_calibration = batch_calibration
+        self.fuse_level_kernel = fuse_level_kernel
         self.engine = CJTEngine(
             self.jt, catalog, ring, lifts=self._lifts, store=self.store,
             dense_rows_threshold=dense_rows_threshold, use_plans=use_plans,
             batch_calibration=batch_calibration,
+            fuse_level_kernel=fuse_level_kernel,
         )
         # ring name -> engine; siblings share the store (per-ring plan caches)
         self._engines: dict[str, CJTEngine] = {ring.name: self.engine}
@@ -193,6 +201,7 @@ class Treant:
                 self.jt, self.catalog, sr.get(ring_name), lifts=self._lifts,
                 store=self.store, dense_rows_threshold=self._dense_rows_threshold,
                 use_plans=self._use_plans, batch_calibration=self.batch_calibration,
+                fuse_level_kernel=self.fuse_level_kernel,
             )
             self._engines[ring_name] = eng
         return eng
@@ -523,8 +532,10 @@ class Treant:
             "ingest": dataclasses.asdict(self.ingest),
         }
         # aggregate plan counters over the primary AND sibling-ring engines
-        # (multi-ring dashboards execute on several PlanCaches); the
-        # *_width counters are maxima, everything else sums
+        # (multi-ring dashboards execute on several PlanCaches); which
+        # counters are high-water marks vs sums is declared by PlanStats
+        # itself (MAX_FIELDS) so kernel/fusion counters added later cannot
+        # silently fall in the wrong bucket
         caches = [e.plans for e in self._engines.values() if e.plans is not None]
         if caches:
             agg = PlanStats()
@@ -533,7 +544,7 @@ class Treant:
                     setattr(
                         agg, k,
                         max(getattr(agg, k), v)
-                        if k in ("batch_width", "level_batch_width")
+                        if k in PlanStats.MAX_FIELDS
                         else getattr(agg, k) + v,
                     )
             out["plans"] = agg.as_dict()

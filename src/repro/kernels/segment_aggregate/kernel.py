@@ -11,6 +11,11 @@ value slab — turning data-dependent scatter into dense matmul.
 
 Grid: (G/TG, N/TN) with rows innermost (accumulation), so each output tile
 stays resident in VMEM across the row stream.
+
+``level_segment_aggregate`` extends this to a *multi-segment* launch: all
+independent messages of one calibration level share a single block-diagonal
+grid (per-message ``(offset, num_segments)`` descriptors become a static
+work-tile table), so a whole level costs one kernel dispatch.
 """
 
 from __future__ import annotations
@@ -20,6 +25,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_TN = 512
 DEFAULT_TG = 128
@@ -79,3 +85,83 @@ def segment_aggregate(
         out_shape=jax.ShapeDtypeStruct((g, v), jnp.float32),
         interpret=interpret,
     )(codes, values)
+
+
+# ---------------------------------------------------------------------------
+# level kernel: many independent segment aggregations in ONE launch
+# ---------------------------------------------------------------------------
+
+def _level_kernel(row_ref, seg_ref, start_ref, first_ref, codes_ref, vals_ref,
+                  o_ref, *, op: str, tg: int):
+    del row_ref, seg_ref  # consumed by the index maps only
+    if op == "sum":
+        init = 0.0
+    elif op == "min":
+        init = jnp.inf
+    else:
+        init = -jnp.inf
+    i = pl.program_id(0)
+
+    @pl.when(first_ref[i] == 1)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, init)
+
+    codes = codes_ref[...]                       # (TN,) global segment ids
+    vals = vals_ref[...].astype(jnp.float32)     # (TN, V)
+    g0 = start_ref[i]                            # first global id of this tile
+    gids = g0 + jax.lax.broadcasted_iota(jnp.int32, (codes.shape[0], tg), 1)
+    onehot = (codes[:, None] == gids)            # (TN, TG) bool; pad rows (-1)
+    if op == "sum":                              # match nothing → identity
+        o_ref[...] += jnp.dot(
+            onehot.astype(jnp.float32).T, vals, preferred_element_type=jnp.float32
+        )
+    else:
+        big = jnp.where(onehot[:, :, None], vals[:, None, :], init)
+        red = jnp.min(big, axis=0) if op == "min" else jnp.max(big, axis=0)
+        cur = o_ref[...]
+        o_ref[...] = jnp.minimum(cur, red) if op == "min" else jnp.maximum(cur, red)
+
+
+def level_segment_aggregate(
+    codes: jax.Array,              # (ΣN_j,) int32 GLOBAL segment ids; pad rows -1
+    values: jax.Array,             # (ΣN_j, V) row slabs, col-padded to common V
+    row_blocks: jax.Array,         # (T,) int32 per-tile input row-block index
+    seg_blocks: jax.Array,         # (T,) int32 per-tile output segment block
+    tile_start: jax.Array,         # (T,) int32: first global id of each tile
+    tile_first: jax.Array,         # (T,) int32: 1 → first row tile for its block
+    total_segments: int,           # ΣG_j (tile-aligned)
+    op: str = "sum",
+    tn: int = DEFAULT_TN,
+    tg: int = DEFAULT_TG,
+    interpret: bool = True,
+) -> jax.Array:
+    """One grid over the block-diagonal union of several segment reductions.
+
+    The fused 'level kernel' behind one-launch-per-calibration-level: each
+    same-level message j contributes a (rows_j, segs_j) aggregation whose row
+    and segment ranges are tile-aligned and disjoint in the concatenated
+    operands.  A 1-D grid walks a work-tile table held in scalar-prefetch
+    memory (index maps pick each tile's row/segment block from it) — for
+    every message, rows innermost per output tile so each (TG, V) block stays
+    resident across its row stream — and no (row tile, segment tile) pair
+    from *different* messages ever meets, so total work stays Σ_j N_j·G_j·V
+    instead of (ΣN)(ΣG)V.
+    """
+    n, v = values.shape
+    t = row_blocks.shape[0]
+    assert seg_blocks.shape[0] == t and n % tn == 0 and total_segments % tg == 0
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((tn,), lambda i, row, seg, st, ft: (row[i],)),
+            pl.BlockSpec((tn, v), lambda i, row, seg, st, ft: (row[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((tg, v), lambda i, row, seg, st, ft: (seg[i], 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_level_kernel, op=op, tg=tg),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((total_segments, v), jnp.float32),
+        interpret=interpret,
+    )(row_blocks, seg_blocks, tile_start, tile_first, codes, values)

@@ -7,7 +7,12 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import segment_aggregate, DEFAULT_TG, DEFAULT_TN
+from .kernel import (
+    segment_aggregate,
+    level_segment_aggregate,
+    DEFAULT_TG,
+    DEFAULT_TN,
+)
 from .ref import segment_aggregate_ref
 
 
@@ -31,6 +36,74 @@ def aggregate_op(codes, values, num_segments: int, op: str = "sum", interpret: b
         codes, values, num_segments + pad_g, op=op, tn=tn, tg=tg, interpret=interpret
     )[:num_segments]
     return out[:, 0] if squeeze else out
+
+
+def level_aggregate(items, op: str = "sum", interpret: bool = True):
+    """Fuse several independent ``(codes, values, num_segments)`` segment
+    reductions into ONE ``level_segment_aggregate`` launch.
+
+    Each item j is one same-level message: ``codes`` (n_j,) int32 local
+    segment ids in [0, g_j), ``values`` (n_j, v_j) row slab.  Rows are padded
+    to the tile multiple with code -1 (matches no segment), columns to the
+    common width and segments to the tile multiple with the ⊕-identity; local
+    ids shift by the running segment offset so the concatenated launch is
+    block-diagonal.  Returns the per-item (g_j, v_j) dense outputs.
+
+    Traced helper — call it inside a jitted plan (shapes are static there);
+    eager calls work too via pallas interpret mode.
+    """
+    assert items, "level_aggregate of zero messages"
+    ident = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf}[op]
+    v_max = max(v.shape[1] for _, v, _ in items)
+    tn = min(DEFAULT_TN, max(8, max(c.shape[0] for c, _, _ in items)))
+    tg = min(DEFAULT_TG, max(8, max(g for _, _, g in items)))
+    all_codes, all_vals = [], []
+    row_blocks, seg_blocks, tile_start, tile_first = [], [], [], []
+    row_off = seg_off = 0
+    spans = []
+    for codes, values, g in items:
+        n = codes.shape[0]
+        pad_n = (-n) % tn
+        pad_g = (-g) % tg
+        codes = codes.astype(jnp.int32) + seg_off
+        if pad_n:
+            codes = jnp.concatenate([codes, jnp.full((pad_n,), -1, jnp.int32)])
+        if values.shape[1] < v_max or pad_n:
+            values = jnp.pad(
+                values,
+                ((0, pad_n), (0, v_max - values.shape[1])),
+                constant_values=ident,
+            )
+        all_codes.append(codes)
+        all_vals.append(values.astype(jnp.float32))
+        n_blocks = (n + pad_n) // tn
+        g_blocks = (g + pad_g) // tg
+        for s in range(g_blocks):
+            for r in range(n_blocks):
+                row_blocks.append(row_off // tn + r)
+                seg_blocks.append(seg_off // tg + s)
+                tile_start.append(seg_off + s * tg)
+                tile_first.append(1 if r == 0 else 0)
+        spans.append((seg_off, g))
+        row_off += n + pad_n
+        seg_off += g + pad_g
+    out = level_segment_aggregate(
+        jnp.concatenate(all_codes),
+        jnp.concatenate(all_vals),
+        jnp.asarray(row_blocks, jnp.int32),
+        jnp.asarray(seg_blocks, jnp.int32),
+        jnp.asarray(tile_start, jnp.int32),
+        jnp.asarray(tile_first, jnp.int32),
+        seg_off,
+        op=op,
+        tn=tn,
+        tg=tg,
+        interpret=interpret,
+    )
+    return [
+        out[off : off + g, : v.shape[1]]
+        for (off, g), (_, v, _) in zip(spans, items)
+    ]
 
 
 def aggregate(codes, values, num_segments, op="sum", use_kernel=True):

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
-from repro.kernels.segment_aggregate.ops import aggregate_op
+from repro.kernels.segment_aggregate.ops import aggregate_op, level_aggregate
 from repro.kernels.segment_aggregate.ref import segment_aggregate_ref
 from repro.kernels.semiring_contract.ops import contract_op
 from repro.kernels.semiring_contract.ref import semiring_contract_ref
@@ -79,3 +79,63 @@ def test_segment_aggregate_1d_squeeze():
     vals = jnp.asarray([1.0, 2.0, 3.0, 4.0])
     got = aggregate_op(codes, vals, 3, op="sum")
     np.testing.assert_allclose(np.asarray(got), [1.0, 5.0, 4.0])
+
+
+# -- multi-segment level launch: several messages, ONE kernel call ----------
+
+def _level_items(specs, seed):
+    rng = np.random.default_rng(seed)
+    items = []
+    for n, g, v in specs:
+        codes = jnp.asarray(rng.integers(0, g, n).astype(np.int32))
+        vals = jnp.asarray(rng.standard_normal((n, v)).astype(np.float32))
+        items.append((codes, vals, g))
+    return items
+
+
+@pytest.mark.parametrize("specs", [
+    [(64, 8, 1)],                                  # degenerate: one message
+    [(64, 8, 2), (100, 13, 2), (256, 64, 2)],      # equal widths
+    [(30, 5, 1), (1000, 64, 4), (77, 13, 3)],      # ragged N/G/V
+    [(7, 3, 1), (9, 300, 2)],                      # tiny rows, wide segments
+])
+@pytest.mark.parametrize("op", ["sum", "min", "max"])
+def test_level_aggregate_matches_per_message(specs, op):
+    """The fused block-diagonal launch must agree with running each message
+    through the reference oracle independently."""
+    items = _level_items(specs, seed=sum(n for n, _, _ in specs))
+    outs = level_aggregate(items, op=op)
+    assert len(outs) == len(items)
+    for (codes, vals, g), got in zip(items, outs):
+        want = segment_aggregate_ref(codes, vals, g, op)
+        assert got.shape == (g, vals.shape[1])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500), k=st.integers(1, 5))
+def test_level_aggregate_property(seed, k):
+    rng = np.random.default_rng(seed)
+    widths = [(int(rng.integers(1, 201)), int(rng.integers(1, 41)),
+               int(rng.integers(1, 5))) for _ in range(k)]
+    items = _level_items(widths, seed=seed)
+    outs = level_aggregate(items, op="sum")
+    for (codes, vals, g), got in zip(items, outs):
+        want = segment_aggregate_ref(codes, vals, g, "sum")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_level_aggregate_empty_segments_get_identity():
+    """Segments no row maps to must hold the ⊕-identity, per op."""
+    items = [(jnp.asarray([0, 0], jnp.int32),
+              jnp.asarray([[1.0], [2.0]], jnp.float32), 4)]
+    np.testing.assert_allclose(
+        np.asarray(level_aggregate(items, op="sum")[0][:, 0]), [3.0, 0, 0, 0])
+    np.testing.assert_array_equal(
+        np.asarray(level_aggregate(items, op="min")[0][1:, 0]),
+        np.full(3, np.inf))
+    np.testing.assert_array_equal(
+        np.asarray(level_aggregate(items, op="max")[0][1:, 0]),
+        np.full(3, -np.inf))

@@ -91,8 +91,9 @@ def test_sparse_parity_minmax_kernel_ops(ring, name):
 
 
 def test_sparse_parity_moments_trailing_dims():
-    """MOMENTS (compound (c,s,q) element) takes the lax fallback path but
-    must still flow through the compiled plan with its tuple field intact."""
+    """MOMENTS (compound (c,s,q) element) rides the segment kernel as three
+    stacked f32 columns — one segment pass for count/sum/sumsq — and must
+    flow through the compiled plan with its tuple field intact."""
     cat = star_catalog(seed=5)
     ref, pln = engines(cat, sr.MOMENTS)
     q = Query.make(cat, ring="moments", measure=("F", "m"), group_by=("c",))
@@ -100,7 +101,7 @@ def test_sparse_parity_moments_trailing_dims():
     f2, s2 = pln.execute(q)
     assert len(jax.tree_util.tree_leaves(f2.field)) == 3
     assert_factors_equal(f1, f2, exact=True)
-    assert s2.plan_traces > 0 and s2.kernel_execs == 0  # compound ring → fallback
+    assert s2.plan_traces > 0 and s2.kernel_execs > 0  # stacked-leaf kernel
 
 
 def test_sparse_parity_predicate_masks():
@@ -125,6 +126,21 @@ def test_dense_two_factor_semiring_contract_route():
     f2, s2 = pln.execute(q)
     assert_factors_equal(f1, f2, exact=True)
     assert s2.kernel_execs > 0
+
+
+@pytest.mark.parametrize("ring,name", [(sr.TROPICAL_MIN, "tropical_min"),
+                                       (sr.TROPICAL_MAX, "tropical_max")])
+def test_dense_two_factor_tropical_contract_route(ring, name):
+    """The dense 2-factor tropical case (⊗ = +, ⊕ = min/max is exactly the
+    tropical matmul) routes through the tropical_contract kernel under the
+    same measured cost gate, bit-identical to the legacy reduce path."""
+    cat = star_catalog(seed=11)
+    ref, pln = engines(cat, ring, dense_rows_threshold=10**9)
+    q = Query.make(cat, ring=name, measure=("F", "m"), group_by=("c",))
+    f1, _ = ref.execute(q)
+    f2, s2 = pln.execute(q)
+    assert_factors_equal(f1, f2, exact=True)
+    assert s2.kernel_execs > 0, "tropical dense route must hit the kernel"
 
 
 # ---------------------------------------------------------------------------
