@@ -1,0 +1,333 @@
+"""Multi-tenant serving tier: cross-session batched fan-out vs serial apply.
+
+Three scenarios over the Flight schema, all through :class:`TreantServer`:
+
+1. **Shared-spec drag storm (1/16/64 sessions)** — N sessions over ONE
+   dashboard spec each drag a brush through ``DRAG`` positions per round,
+   clustered on a few hot σ windows (the shared-dashboard regime: many
+   users brushing the same interesting ranges).  The server's event queue
+   coalesces the superseded drag positions, digest-dedup shares one
+   execution across sessions on the same window, and the remaining unique
+   absorptions ride one vmapped ``execute_many`` dispatch spanning sibling
+   sessions.  The serial baseline has none of those mechanisms — it must
+   apply every submitted event one ``Session.apply`` at a time on a twin
+   Treant.  Measures sustained events/sec (submitted events over wall
+   time) and the p99 applied-event latency at each session count — the
+   tentpole's acceptance bar is ≥4x events/sec at 64 sessions and
+   ``REPRO_BENCH_SCALE≥0.1`` with ``cross_session_batch_width > 1`` and
+   **bit-identical** per-session results.
+
+2. **Distinct-spec storm (64 sessions)** — sessions cycle over four spec
+   variants (different viz subsets): digest dedupe never fires across
+   variants, so the win must come from coalescing + vmapped batching alone.
+
+3. **Global byte budget** — the same storm under a store budget of 50% of
+   the measured unbudgeted footprint: the store must stay under budget
+   (above the pinned floor), evict only unpinned/quiescent entries, and
+   every read must stay bit-identical to the unbudgeted run.
+
+Count measures (``measure=None``) keep every aggregate integer-valued, so
+"bit-identical" is a plain ``array_equal`` even across vmapped padding.
+Ratio metrics are emitted as ratio/1e6 (the JSON value IS the ratio);
+``events_per_sec`` follows the ``ingest/rows_per_sec`` convention
+(value = events/sec); counter metrics emit count/1e6 (value = count).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import gc
+import os
+import time
+
+import numpy as np
+
+from repro.core import (
+    DashboardSpec, Drill, SetFilter, Treant, VizSpec, jt_from_catalog,
+)
+from repro.core import semiring as sr
+from repro.relational import schema
+from repro.serve import ServeStats, TreantServer
+
+from .common import emit
+
+FLIGHT_SEED = 1
+ROUNDS = 4     # timed rounds; two warm rounds precede them
+DRAG = 3       # brush positions per drag: 2 superseded + 1 final
+WARM = -1      # warm marker: ONE σ window shared by all sessions
+WARM2 = -2     # warm marker: hot-window layout (compiles the vmap widths)
+
+# non-source dimensions each brush fans out to (6 vizzes per event)
+FAN_DIMS = ("month", "carrier_group", "airport_size", "dow",
+            "delay_bucket", "distance_bucket")
+
+
+def serve_spec(dims=FAN_DIMS) -> DashboardSpec:
+    vizzes = [VizSpec("by_state", measure=None, ring="sum",
+                      group_by=("airport_state",))]
+    vizzes += [VizSpec(f"by_{d}", measure=None, ring="sum", group_by=(d,))
+               for d in dims]
+    return DashboardSpec(vizzes=tuple(vizzes))
+
+
+def spec_variants() -> list[DashboardSpec]:
+    """Four distinct specs sharing only the brush source (no digest ever
+    dedupes across variants with different viz sets)."""
+    return [serve_spec(dims=FAN_DIMS[i:i + 3]) for i in range(4)]
+
+
+HOT_WINDOWS = 8  # distinct σ windows per round, shared by 64/8 sessions each
+
+
+def brush(i: int, rnd: int, step: int = DRAG - 1) -> SetFilter:
+    """Session ``i``'s ``step``-th drag position of round ``rnd`` on
+    ``airport_state`` (domain 52).
+
+    Sessions cluster on ``HOT_WINDOWS`` hot windows per round; each session
+    drags its brush toward its window through ``DRAG`` positions one unit
+    apart, the last being the hot window itself.  Each round uses a
+    distinct window *width* (2+rnd), so no window repeats across rounds —
+    every timed round does real absorptions instead of pure cache hits.
+    The warm rounds use width 6 (outside the timed range): ``WARM`` is ONE
+    fixed window shared by all sessions; ``WARM2`` replays the hot-window
+    layout so the vmapped batch widths compile before timing starts.
+    """
+    if rnd == WARM:
+        return SetFilter(attr="airport_state", lo=20, hi=26, source="by_state")
+    if rnd == WARM2:
+        lo = (5 * (i % HOT_WINDOWS) + 3) % 49
+        return SetFilter(attr="airport_state", lo=lo, hi=lo + 6,
+                         source="by_state")
+    lo = max((5 * (i % HOT_WINDOWS) + 11 * rnd) % 49 - (DRAG - 1 - step), 0)
+    return SetFilter(attr="airport_state", lo=lo, hi=lo + 2 + rnd,
+                     source="by_state")
+
+
+@contextlib.contextmanager
+def _no_gc():
+    on = gc.isenabled()
+    gc.collect()
+    gc.disable()
+    try:
+        yield
+    finally:
+        if on:
+            gc.enable()
+        gc.collect()
+
+
+def _build(cat, jt):
+    return Treant(cat, ring=sr.SUM, jt=jt)
+
+
+def _drag_of(rnd: int) -> int:
+    return 1 if rnd in (WARM, WARM2) else DRAG
+
+
+def _serial_pass(sessions, rounds) -> tuple[list[float], float]:
+    """Apply every submitted event one ``Session.apply`` at a time (no
+    queue: every drag position executes); returns (per-event latencies,
+    total wall seconds)."""
+    lat = []
+    with _no_gc():
+        t0 = time.perf_counter()
+        for rnd in rounds:
+            for step in range(_drag_of(rnd)):
+                for i, sess in enumerate(sessions):
+                    t1 = time.perf_counter()
+                    sess.apply(brush(i, rnd, step))
+                    lat.append(time.perf_counter() - t1)
+        total = time.perf_counter() - t0
+    return lat, total
+
+
+def _server_pass(server, handles, rounds) -> tuple[list[float], float]:
+    """Submit each round's full drag stream, then drain batch-by-batch
+    (superseded positions coalesce in the queue); the per-event latency is
+    the batch wall time amortized over the events it applied."""
+    lat = []
+    with _no_gc():
+        t0 = time.perf_counter()
+        for rnd in rounds:
+            for step in range(_drag_of(rnd)):
+                for i, h in enumerate(handles):
+                    h.submit(brush(i, rnd, step))
+            while server.queue_depth:
+                t1 = time.perf_counter()
+                n = server.step()
+                per = (time.perf_counter() - t1) / max(n, 1)
+                lat.extend([per] * n)
+        total = time.perf_counter() - t0
+    return lat, total
+
+
+def _assert_bit_identical(server_handles, serial_sessions):
+    for h, sess in zip(server_handles, serial_sessions):
+        for viz in sess.vizzes:
+            got = np.asarray(h.read(viz).factor.field)
+            want = np.asarray(sess.read(viz).factor.field)
+            assert np.array_equal(got, want), (
+                f"server session {h.id} viz {viz} diverged from serial apply"
+            )
+
+
+def run_fanout(scale: float = 1.0):
+    cat = schema.flight(n_flights=max(2_000, int(50_000 * scale)),
+                        seed=FLIGHT_SEED)
+    jt = jt_from_catalog(cat)
+    timed_rounds = list(range(ROUNDS))
+    eps_by_n: dict[int, float] = {}
+    serial_eps_by_n: dict[int, float] = {}
+
+    for n_sessions in (1, 16, 64):
+        spec = serve_spec()
+        t_serial = _build(cat, jt)
+        sessions = [t_serial.open_session(spec, name=f"s{i}")
+                    for i in range(n_sessions)]
+        t_srv = _build(cat, jt)
+        server = TreantServer(t_srv, max_queue=4 * n_sessions)
+        handles = [server.open_session(spec, name=f"s{i}")
+                   for i in range(n_sessions)]
+
+        # warm rounds (jit compiles, incl. the vmapped batch widths) on BOTH
+        # sides, untimed; stats restart so counters reflect only timed rounds
+        _serial_pass(sessions, [WARM, WARM2])
+        _server_pass(server, handles, [WARM, WARM2])
+        server.stats_ = ServeStats()
+
+        lat_serial, wall_serial = _serial_pass(sessions, timed_rounds)
+        lat_srv, wall_srv = _server_pass(server, handles, timed_rounds)
+        n_events = n_sessions * ROUNDS * DRAG   # submitted (drag stream)
+        n_applied = n_sessions * ROUNDS         # after coalescing
+        serial_eps = n_events / max(wall_serial, 1e-9)
+        eps = n_events / max(wall_srv, 1e-9)
+        serial_eps_by_n[n_sessions] = serial_eps
+        eps_by_n[n_sessions] = eps
+        st = server.stats_
+
+        emit(f"serve/events_per_sec_shared{n_sessions}", eps / 1e6,
+             f"submitted={n_events} applied={st.events_processed} "
+             f"batches={st.batches} serial={serial_eps:.0f}/s")
+        emit(f"serve/p99_event_shared{n_sessions}",
+             float(np.percentile(lat_srv, 99)),
+             f"serial_p99={np.percentile(lat_serial, 99) * 1e6:.0f}us")
+        if n_sessions > 1:
+            # the whole point of the serving tier: sibling sessions ride one
+            # dispatch — width must exceed 1 at ANY scale
+            assert st.cross_session_batch_width > 1, (
+                f"{n_sessions} sessions never shared a dispatch: {st}"
+            )
+        # superseded drag positions never execute
+        assert st.coalesced_events == n_sessions * ROUNDS * (DRAG - 1), st
+        assert st.events_processed == n_applied, st
+        _assert_bit_identical(handles, sessions)
+        if n_sessions == 64:
+            emit("serve/cross_session_width",
+                 st.cross_session_batch_width / 1e6,
+                 f"max sessions in one dispatch (64 submitted)")
+
+    speedup = eps_by_n[64] / max(serial_eps_by_n[64], 1e-9)
+    emit("serve/speedup_shared64", speedup / 1e6,
+         f"batched serving vs serial apply = {speedup:.2f}x")
+    if scale >= 0.1:
+        # the acceptance bar: one shared spec, 64 sessions, ≥4x sustained
+        # events/sec over serial apply (bit-identity asserted above)
+        assert speedup >= 4.0, (
+            f"64-session batched serving only {speedup:.2f}x serial (< 4x)"
+        )
+
+    # -- distinct-spec leg: no digest dedupe across variants, the win is
+    #    vmapped batching alone
+    variants = spec_variants()
+    t_serial = _build(cat, jt)
+    sessions = [t_serial.open_session(variants[i % 4], name=f"d{i}")
+                for i in range(64)]
+    t_srv = _build(cat, jt)
+    server = TreantServer(t_srv, max_queue=256)
+    handles = [server.open_session(variants[i % 4], name=f"d{i}")
+               for i in range(64)]
+    _serial_pass(sessions, [WARM, WARM2])
+    _server_pass(server, handles, [WARM, WARM2])
+    server.stats_ = ServeStats()
+    lat_serial, wall_serial = _serial_pass(sessions, timed_rounds)
+    lat_srv, wall_srv = _server_pass(server, handles, timed_rounds)
+    n_events = 64 * ROUNDS * DRAG
+    eps = n_events / max(wall_srv, 1e-9)
+    d_speedup = (n_events / max(wall_serial, 1e-9))
+    d_speedup = eps / max(d_speedup, 1e-9)
+    emit("serve/events_per_sec_distinct64", eps / 1e6,
+         f"4 spec variants, p99={np.percentile(lat_srv, 99) * 1e6:.0f}us")
+    emit("serve/speedup_distinct64", d_speedup / 1e6,
+         f"distinct specs vs serial apply = {d_speedup:.2f}x")
+    assert server.stats_.cross_session_batch_width > 1
+    _assert_bit_identical(handles, sessions)
+
+
+def _budget_storm(cat, jt, max_store_bytes):
+    t = _build(cat, jt)
+    server = TreantServer(t, max_store_bytes=max_store_bytes, max_queue=64)
+    handles = [server.open_session(serve_spec(), name=f"b{i}")
+               for i in range(16)]
+    # each session drills one viz down one extra attr (16 distinct combos):
+    # the drilled 2-attr contracts need γ-carry messages that base
+    # calibration never pinned, so the storm carries evictable store state
+    # on BOTH plan legs (with plans off, a plain brush is pure root
+    # absorption over pinned messages — nothing a budget could evict)
+    k = len(FAN_DIMS)
+    for i, h in enumerate(handles):
+        viz = FAN_DIMS[i % k]
+        attr = FAN_DIMS[(i + 1 + i // k) % k]
+        h.submit(Drill(viz=f"by_{viz}", attr=attr))
+    while server.queue_depth:
+        server.step()
+    _server_pass(server, handles, [WARM, WARM2])
+    _, wall = _server_pass(server, handles, list(range(ROUNDS)))
+    return t, server, handles, wall
+
+
+def run_budget(scale: float = 1.0):
+    cat = schema.flight(n_flights=max(2_000, int(50_000 * scale)),
+                        seed=FLIGHT_SEED)
+    jt = jt_from_catalog(cat)
+    t_free, _, free_handles, wall_free = _budget_storm(cat, jt, None)
+    footprint = t_free.store.nbytes
+    pinned = t_free.store.pinned_nbytes
+    refs = {(i, viz): np.asarray(h.read(viz).factor.field)
+            for i, h in enumerate(free_handles) for viz in h.session.vizzes}
+
+    # the pinned base-calibration messages are the floor no budget may cross
+    # (the store never evicts them), so "50% of the footprint" means 50% of
+    # the *evictable* footprint on top of that floor — a budget below the
+    # floor would be unsatisfiable by definition
+    budget = pinned + (footprint - pinned) // 2
+    t, server, handles, wall = _budget_storm(cat, jt, budget)
+    store = t.store
+    assert store.evictions > 0, "a 50% budget must evict"
+    assert store.nbytes <= store.max_bytes, (
+        f"store over budget at rest: {store.nbytes}B vs {store.max_bytes}B"
+    )
+    for sig in store._pinned:
+        assert sig in store._data, f"pinned entry {sig} was evicted"
+    # evicted entries recompute on demand, bit-identically
+    for i, h in enumerate(handles):
+        for viz in h.session.vizzes:
+            got = np.asarray(h.read(viz).factor.field)
+            assert np.array_equal(got, refs[(i, viz)]), (
+                f"budgeted read diverged on session {i} viz {viz}"
+            )
+    emit("serve/budget_evictions", store.evictions / 1e6,
+         f"budget={budget}B of {footprint}B footprint "
+         f"({store.pinned_nbytes}B pinned floor + 50% evictable)")
+    ratio = wall / max(wall_free, 1e-9)
+    emit("serve/budget_wall_ratio", ratio / 1e6,
+         f"budgeted vs unbudgeted storm wall = {ratio:.2f}x")
+
+
+def main():
+    scale = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+    run_fanout(scale=scale)
+    run_budget(scale=scale)
+
+
+if __name__ == "__main__":
+    main()

@@ -79,6 +79,17 @@ GATED: dict[str, Metric] = {
     "ingest/p99_ratio": Metric(
         lower_is_better=True, tolerance=0.20, min_scale=1.0
     ),
+    # serving tier: sustained throughput is wall-clock (30% band like
+    # rows_per_sec); the cross-session width is structural (sessions per
+    # dispatch — any drop means batching broke); the 64-session speedup
+    # ratio is host-robust but only separates from noise at full scale
+    "serve/events_per_sec_shared64": Metric(
+        lower_is_better=False, tolerance=0.30
+    ),
+    "serve/cross_session_width": Metric(lower_is_better=False, tolerance=0.20),
+    "serve/speedup_shared64": Metric(
+        lower_is_better=False, tolerance=0.25, min_scale=1.0
+    ),
 }
 
 # metric-name prefix -> producing suite (the BENCH_<suite>.json file)
@@ -86,6 +97,7 @@ PREFIX_SUITE = {
     "crossfilter": "dashboard",
     "salesforce": "dashboard",
     "ingest": "ingest",
+    "serve": "serve",
 }
 
 
@@ -185,6 +197,9 @@ def self_test(fresh: dict | None, baseline: dict | None) -> int:
             "crossfilter/offline_dispatches": 4.0,
             "ingest/rows_per_sec": 300_000.0,
             "ingest/p99_ratio": 1.1,
+            "serve/events_per_sec_shared64": 2_000.0,
+            "serve/cross_session_width": 64.0,
+            "serve/speedup_shared64": 6.0,
         }
     if not fresh or any(k.startswith("__missing__") for k in fresh):
         fresh = dict(baseline)

@@ -81,6 +81,7 @@ from .plans import (
     calibration_union_budget,
     expand_rows_field,
     fuse_level_default,
+    sparse_batch_elems,
 )
 from .query import Query
 
@@ -113,6 +114,21 @@ class MessageStore:
         self.tag: str | None = None
         self._producer: dict[str, str] = {}
         self.cross_tag_hits = 0
+        # sig -> consumer session ids that have HIT the entry while tagged:
+        # close() must not drop an entry a sibling live session still reads
+        # (the server refcounts producer-tagged entries through this)
+        self._users: dict[str, set[str]] = {}
+        # per-entry byte sizes (overwrite-safe nbytes accounting) and
+        # recompute-cost hints (``CJTEngine`` passes its ``estimate_edge_cost``
+        # miss cost at put time) driving priority eviction
+        self._sizes: dict[str, int] = {}
+        self._cost: dict[str, float] = {}
+        # in-flight protection: while an engine dispatch is open, every sig
+        # it touches (get-hit or put) is exempt from eviction — a byte budget
+        # must never pull a message out from under the dispatch using it
+        self._inflight_depth = 0
+        self._inflight: set[str] = set()
+        self.evictions = 0
         # (edge, base_sig) -> {γ tuple -> full sig}: Σ-compensation index
         self._widen: dict[str, dict[tuple[str, ...], str]] = {}
         # derived probe index: per base_sig, entries sorted by |γ| (smallest
@@ -136,6 +152,27 @@ class MessageStore:
     def full_sig(base_sig: str, gamma: tuple[str, ...]) -> str:
         return f"{base_sig}|g={','.join(gamma)}"
 
+    @contextlib.contextmanager
+    def inflight(self):
+        """Mark every sig touched inside the block as eviction-exempt.
+
+        Re-entrant (engine entry points nest: execute → message → widen-put);
+        the exemption set clears when the outermost dispatch closes."""
+        self._inflight_depth += 1
+        try:
+            yield
+        finally:
+            self._inflight_depth -= 1
+            if self._inflight_depth == 0:
+                self._inflight.clear()
+                # a dispatch may legitimately overshoot the budget (its own
+                # working set is exempt); trim back down now that it closed
+                self._evict()
+
+    def _touch(self, sig: str) -> None:
+        if self._inflight_depth > 0:
+            self._inflight.add(sig)
+
     def get(self, base_sig: str, gamma: tuple[str, ...]) -> Factor | None:
         sig = self.full_sig(base_sig, gamma)
         f = self._data.get(sig)
@@ -143,6 +180,7 @@ class MessageStore:
             self._data.move_to_end(sig)
             self.hits += 1
             self._note_cross_hit(sig)
+            self._touch(sig)
             return f
         # Σ compensation: narrow a cached wider-γ message by marginalization.
         # Indexed by |γ|: strict supersets are larger, so the scan starts past
@@ -159,7 +197,8 @@ class MessageStore:
                     wide = self._data[sig2]
                     narrowed = wide.marginalize(set(g2) - gset)
                     self._note_cross_hit(sig2)
-                    self.put(base_sig, gamma, narrowed)
+                    self._touch(sig2)
+                    self.put(base_sig, gamma, narrowed, cost=self._cost.get(sig2))
                     self.widen_hits += 1
                     return narrowed
         self.misses += 1
@@ -169,6 +208,12 @@ class MessageStore:
         owner = self._producer.get(sig)
         if self.tag is not None and owner is not None and owner != self.tag:
             self.cross_tag_hits += 1
+        # consumer refcount: remember which session read this entry (tags are
+        # "{session}:{viz}"), so drop_producer can keep shared entries alive
+        if self.tag is not None and owner is not None:
+            sid = self.tag.split(":", 1)[0]
+            if not owner.startswith(f"{sid}:"):
+                self._users.setdefault(sig, set()).add(sid)
 
     def contains(self, base_sig: str, gamma: tuple[str, ...]) -> bool:
         if self.full_sig(base_sig, gamma) in self._data:
@@ -178,10 +223,15 @@ class MessageStore:
             return False
         return any(set(gamma) <= set(g2) for g2 in self._widen.get(base_sig, {}))
 
-    def put(self, base_sig: str, gamma: tuple[str, ...], f: Factor, pin: bool = False):
+    def put(self, base_sig: str, gamma: tuple[str, ...], f: Factor,
+            pin: bool = False, cost: float | None = None):
         sig = self.full_sig(base_sig, gamma)
-        if sig not in self._data:
-            self.nbytes += factor_nbytes(f)
+        nb = factor_nbytes(f)
+        self.nbytes += nb - self._sizes.get(sig, 0)
+        self._sizes[sig] = nb
+        if cost is not None:
+            self._cost[sig] = cost
+        self._touch(sig)
         if self.tag is not None:
             self._producer.setdefault(sig, self.tag)
         self._data[sig] = f
@@ -287,44 +337,88 @@ class MessageStore:
         if moved:
             new_sig = self.full_sig(new_base, gamma)
             self._pinned[new_sig] = self._pinned.get(new_sig, 0) + moved
-        self.put(new_base, gamma, new)
+        self.put(new_base, gamma, new,
+                 cost=self._cost.get(self.full_sig(old_base, gamma)))
         return new
+
+    @property
+    def pinned_nbytes(self) -> int:
+        """Bytes held by pinned entries — the floor no budget can go below."""
+        return sum(self._sizes.get(s, 0) for s in self._pinned)
 
     def unpin_all(self):
         self._pinned.clear()
+
+    def _remove(self, sig: str) -> bool:
+        """Drop one entry and all its bookkeeping; False when absent."""
+        f = self._data.pop(sig, None)
+        if f is None:
+            return False
+        self.nbytes -= self._sizes.pop(sig, factor_nbytes(f))
+        self._producer.pop(sig, None)
+        self._cost.pop(sig, None)
+        self._users.pop(sig, None)
+        self._drop_widen(sig)
+        return True
 
     def drop_producer(self, prefix: str) -> int:
         """Session GC: drop unpinned entries whose producer tag starts with
         ``prefix`` (tags are ``"{session}:{viz}"``, so a session passes
         ``f"{sid}:"``).  Entries another consumer still pins survive; untagged
         entries (offline base calibration) are shared and never dropped here.
+        An entry another LIVE session has read (consumer refcount, recorded
+        on tagged cross-producer hits) is not dropped either — ownership is
+        reassigned to a surviving reader so a later close can still GC it.
         Purely an eviction policy — the store is a cache, so correctness is
         unaffected and a later query simply recomputes."""
+        sid = prefix.split(":", 1)[0]
+        # this session stops being a consumer of anything it read
+        for users in self._users.values():
+            users.discard(sid)
         sigs = [s for s, owner in self._producer.items() if owner.startswith(prefix)]
         n = 0
         for sig in sigs:
+            survivors = self._users.get(sig)
+            if survivors:
+                # a sibling live session still references this entry: hand
+                # ownership to the (deterministically) first surviving reader
+                heir = sorted(survivors)[0]
+                survivors.discard(heir)
+                self._producer[sig] = f"{heir}:*"
+                if not survivors:
+                    self._users.pop(sig, None)
+                continue
             if sig in self._pinned:
                 continue
-            self._producer.pop(sig, None)
-            f = self._data.pop(sig, None)
-            if f is not None:
-                self.nbytes -= factor_nbytes(f)
-                self._drop_widen(sig)
+            if self._remove(sig):
                 n += 1
         return n
 
     def _evict(self):
-        if self.max_bytes is None:
+        """Byte-budget eviction: pin-state → recency → recompute cost.
+
+        Pinned and in-flight entries are exempt outright.  Among the rest,
+        candidates are taken from the cold (LRU) end in windows: evicting the
+        cheapest-to-recompute entry of the oldest window realizes the
+        recency-then-cost ordering without a full-store scan per eviction.
+        If every entry is exempt the store stays over budget — correctness
+        beats the budget."""
+        if self.max_bytes is None or self.nbytes <= self.max_bytes:
             return
-        for sig in list(self._data):
-            if self.nbytes <= self.max_bytes:
-                break
-            if sig in self._pinned:
-                continue
-            f = self._data.pop(sig)
-            self.nbytes -= factor_nbytes(f)
-            self._producer.pop(sig, None)
-            self._drop_widen(sig)
+        WINDOW = 8
+        while self.nbytes > self.max_bytes:
+            window: list[tuple[float, int, str]] = []
+            for order, sig in enumerate(self._data):
+                if sig in self._pinned or sig in self._inflight:
+                    continue
+                window.append((self._cost.get(sig, 0.0), order, sig))
+                if len(window) >= WINDOW:
+                    break
+            if not window:
+                return  # everything left is pinned or in-flight
+            _, _, victim = min(window)
+            self._remove(victim)
+            self.evictions += 1
 
     def __len__(self):
         return len(self._data)
@@ -348,6 +442,8 @@ class MessageStore:
             dict(self._pinned), self.nbytes,
             (self.hits, self.misses, self.widen_hits),
             (dict(self._producer), self.cross_tag_hits),
+            (dict(self._sizes), dict(self._cost),
+             {k: set(v) for k, v in self._users.items()}, self.evictions),
         )
 
     def restore(self, snap):
@@ -357,6 +453,10 @@ class MessageStore:
         )
         self.hits, self.misses, self.widen_hits = stats
         self._producer, self.cross_tag_hits = dict(snap[5][0]), snap[5][1]
+        self._sizes = dict(snap[6][0])
+        self._cost = dict(snap[6][1])
+        self._users = {k: set(v) for k, v in snap[6][2].items()}
+        self.evictions = snap[6][3]
         self._widen_bysize = {
             b: sorted((len(g), g, s) for g, s in d.items())
             for b, d in self._widen.items()
@@ -391,9 +491,12 @@ class ExecStats:
     plan_hits: int = 0
     kernel_execs: int = 0
     # batched absorption (execute_many): 1 when this query's absorption rode
-    # a vmapped sibling batch; batch_width is that batch's total width
+    # a vmapped sibling batch; batch_width is that batch's total width, and
+    # batch_sessions counts the distinct sessions that batch served (>1 only
+    # under the server's cross-session fan-out)
     batched_absorptions: int = 0
     batch_width: int = 0
+    batch_sessions: int = 0
     # result served from the session's speculative-prefetch cache: nothing
     # executed at all (no store probes, no plan dispatch)
     prefetch_hits: int = 0
@@ -604,11 +707,20 @@ class CJTEngine:
         sep = self.jt.separator(u, v)
         out_attrs = tuple(dict.fromkeys(sep + gamma))
         f = self._bag_contract(q, u, incoming, out_attrs, placement, stats)
-        self.store.put(base, gamma, f)
+        self.store.put(base, gamma, f, cost=self._edge_cost_hint(q, u, out_attrs))
         if stats:
             stats.messages_computed += 1
             stats.recomputed_edges.append((u, v))
         return f
+
+    def _edge_cost_hint(self, q: Query, u: str, out_attrs: tuple[str, ...]) -> float:
+        """Recompute-cost hint for a freshly materialized message (same model
+        as ``estimate_edge_cost``'s miss cost: source rows + output size) —
+        drives the store's priority eviction under a byte budget."""
+        out_size = 1.0
+        for a in out_attrs:
+            out_size *= self.jt.domains.get(a, 1)
+        return self._bag_rows(q, u) + out_size
 
     def absorb(self, q: Query, root: str, placement=None, stats=None, keep=None) -> Factor:
         """Absorption at root (§3.3.1) then projection to γ (or ``keep``)."""
@@ -887,7 +999,8 @@ class CJTEngine:
         stats = ExecStats()
         placement = self.place_predicates(q)
         root = root or self.choose_root(q, placement)
-        f = self.absorb(q, root, placement, stats)
+        with self.store.inflight():
+            f = self.absorb(q, root, placement, stats)
         out = f.project_to(q.group_by)
         # the cache misses ARE the Steiner tree (§3.4.2): report its realized
         # size directly instead of planning it a second time (Treant used to)
@@ -920,6 +1033,15 @@ class CJTEngine:
         (``tests/test_batched_plans.py``).  Dense/densified bags and
         ``use_plans=False`` engines simply fall back to per-query absorption.
         """
+        with self.store.inflight():
+            return self._execute_many_inflight(queries, sync, tags)
+
+    def _execute_many_inflight(
+        self,
+        queries: Sequence[Query],
+        sync: bool = True,
+        tags: Sequence[str | None] | None = None,
+    ) -> list[tuple[Factor, ExecStats]]:
         results: list[Factor | None] = [None] * len(queries)
         all_stats: list[ExecStats] = []
         roots: list[str] = []
@@ -965,20 +1087,38 @@ class CJTEngine:
         groups: dict[tuple, list[tuple[int, AbsorbItem]]] = {}
         for i, item in deferred:
             groups.setdefault(absorb_batch_key(self.ring, item), []).append((i, item))
-        for members in groups.values():
-            if len(members) == 1:
-                i, item = members[0]
-                results[i] = self.plans.run_sparse(
-                    self.catalog, item.rel, item.vals, list(item.incoming),
-                    list(item.preds), item.out_attrs, all_stats[i],
-                )
-            else:
+        for group in groups.values():
+            for members in self._absorb_chunks(group):
+                if len(members) == 1:
+                    i, item = members[0]
+                    results[i] = self.plans.run_sparse(
+                        self.catalog, item.rel, item.vals, list(item.incoming),
+                        list(item.preds), item.out_attrs, all_stats[i],
+                    )
+                    continue
                 fs = self.plans.run_sparse_batch(
                     self.catalog, [item for _, item in members],
                     [all_stats[i] for i, _ in members],
                 )
                 for (i, _), f in zip(members, fs):
                     results[i] = f
+                # cross-session batching accounting: how many distinct
+                # sessions this ONE vmapped dispatch served (tags are
+                # "{session}:{viz}"; the server's fan-out is the only caller
+                # that mixes sessions in one execute_many)
+                if tags is not None:
+                    owners = {
+                        tags[i].split(":", 1)[0]
+                        for i, _ in members if tags[i] is not None
+                    }
+                    for i, _ in members:
+                        all_stats[i].batch_sessions = len(owners)
+                    if self.plans is not None and len(owners) > 1:
+                        ps = self.plans.stats
+                        ps.cross_session_execs += 1
+                        ps.cross_session_width = max(
+                            ps.cross_session_width, len(owners)
+                        )
         outs: list[tuple[Factor, ExecStats]] = []
         for i, q in enumerate(queries):
             out = results[i].project_to(q.group_by)
@@ -989,6 +1129,22 @@ class CJTEngine:
         if sync:
             jax.block_until_ready([f.field for f, _ in outs])
         return outs
+
+    def _absorb_chunks(
+        self, members: list[tuple[int, "AbsorbItem"]]
+    ) -> list[list[tuple[int, "AbsorbItem"]]]:
+        """Split one ``absorb_batch_key`` group into bounded-volume chunks.
+
+        One vmapped dispatch per group stops paying off once rows·width
+        grows past the backend's profitable regime (see
+        :func:`sparse_batch_elems`); chunks keep a floor of 2 members so
+        sibling sessions still share a dispatch at any fact-table size."""
+        budget = sparse_batch_elems()
+        if budget <= 0 or len(members) <= 2:
+            return [members]
+        rows = max(members[0][1].rel.num_rows, 1)
+        cap = max(2, budget // rows)
+        return [members[j:j + cap] for j in range(0, len(members), cap)]
 
     def calibrate(
         self, q: Query, root: str | None = None, pin: bool = False,
@@ -1071,21 +1227,22 @@ class CJTEngine:
         """
         n = 0
         stats = stats if stats is not None else ExecStats()
-        while not plan.done and (max_edges is None or n < max_edges):
-            u, v = plan.levels[plan.pos][plan.offset]
-            if plan.pin:
-                base = self.edge_sig(plan.query, u, v, plan.placement)
-                self.store.pin(base, self.gamma_carry(plan.query, u, v))
-            before = stats.messages_computed
-            self.message(plan.query, u, v, plan.placement, stats)
-            self._count_dispatches(stats, stats.messages_computed - before)
-            plan.offset += 1
-            n += 1
-            if plan.offset >= len(plan.levels[plan.pos]):
-                plan.pos += 1
-                plan.offset = 0
-            if deadline is not None and time.perf_counter() >= deadline:
-                break
+        with self.store.inflight():
+            while not plan.done and (max_edges is None or n < max_edges):
+                u, v = plan.levels[plan.pos][plan.offset]
+                if plan.pin:
+                    base = self.edge_sig(plan.query, u, v, plan.placement)
+                    self.store.pin(base, self.gamma_carry(plan.query, u, v))
+                before = stats.messages_computed
+                self.message(plan.query, u, v, plan.placement, stats)
+                self._count_dispatches(stats, stats.messages_computed - before)
+                plan.offset += 1
+                n += 1
+                if plan.offset >= len(plan.levels[plan.pos]):
+                    plan.pos += 1
+                    plan.offset = 0
+                if deadline is not None and time.perf_counter() >= deadline:
+                    break
         return n
 
     @contextlib.contextmanager
@@ -1151,6 +1308,15 @@ class CJTEngine:
         number of edges advanced; a partially-stepped level (``plan.offset``)
         is finished first.
         """
+        with self.store.inflight():
+            return self._run_level_inflight(plans, stats_list, tags)
+
+    def _run_level_inflight(
+        self,
+        plans: Sequence[CalibrationPlan],
+        stats_list: Sequence[ExecStats] | None = None,
+        tags: Sequence[str | None] | None = None,
+    ) -> int:
         live = [i for i, p in enumerate(plans) if not p.done]
         if not live:
             return 0
@@ -1205,11 +1371,14 @@ class CJTEngine:
         group_list = list(groups.values())
 
         def _store_group(members, fs):
-            for (i, u, v, base, gamma, _), f in zip(members, fs):
+            for (i, u, v, base, gamma, item), f in zip(members, fs):
                 st = stats_list[i]
                 tag = tags[i] if tags is not None else None
+                cost = item.rel.num_rows + float(
+                    np.prod([self.jt.domains.get(a, 1) for a in item.out_attrs])
+                )
                 with self._tagged(tag):
-                    self.store.put(base, gamma, f)
+                    self.store.put(base, gamma, f, cost=cost)
                 st.messages_computed += 1
                 st.recomputed_edges.append((u, v))
 
@@ -1415,24 +1584,25 @@ class CJTEngine:
         # value-identical under the new version — re-key, contract nothing
         empty = delta.num_rows == 0
         dmsgs: dict[tuple[str, str], Factor] = {}
-        for (c, p) in reversed(upward):  # edges nearest u₀ first
-            u, v = p, c  # the changed direction points away from u₀
-            d = None
-            if not empty:
-                via = None if u == u0 else toward_u0[u]
-                d = self.delta_message(
-                    q_new, q_delta, u, v, placement_new,
-                    via=via, delta_in=None if via is None else dmsgs[(via, u)],
-                )
-                dmsgs[(u, v)] = d
-                stats.delta_messages += 1
-            old_base = self.edge_sig(q, u, v, placement_old)
-            new_base = self.edge_sig(q_new, u, v, placement_new)
-            gamma = self.gamma_carry(q_new, u, v)
-            if self.store.apply_delta(old_base, new_base, gamma, d) is not None:
-                stats.edges_maintained += 1
-            else:
-                stats.edges_skipped += 1
+        with self.store.inflight():
+            for (c, p) in reversed(upward):  # edges nearest u₀ first
+                u, v = p, c  # the changed direction points away from u₀
+                d = None
+                if not empty:
+                    via = None if u == u0 else toward_u0[u]
+                    d = self.delta_message(
+                        q_new, q_delta, u, v, placement_new,
+                        via=via, delta_in=None if via is None else dmsgs[(via, u)],
+                    )
+                    dmsgs[(u, v)] = d
+                    stats.delta_messages += 1
+                old_base = self.edge_sig(q, u, v, placement_old)
+                new_base = self.edge_sig(q_new, u, v, placement_new)
+                gamma = self.gamma_carry(q_new, u, v)
+                if self.store.apply_delta(old_base, new_base, gamma, d) is not None:
+                    stats.edges_maintained += 1
+                else:
+                    stats.edges_skipped += 1
         return q_new, stats
 
     def is_calibrated(self, q: Query) -> bool:

@@ -714,19 +714,37 @@ class Session:
         re-executed viz's pending background calibration is preempted and
         re-scheduled for the new query (no other viz's progress is touched).
         """
+        if not self._record(event):
+            return ApplyResult(event, (), {}, dict(self._current), 0.0)
+        return self._fan_out(event)
+
+    def _record(self, event) -> bool:
+        """Validate + apply one event to the declarative state WITHOUT
+        executing anything; returns False when nothing changed (empty-stack
+        Undo).  The server's micro-batch loop records every session's event
+        first, then runs ONE shared cross-session fan-out."""
         if not isinstance(event, Event):
             raise TypeError(f"not a dashboard event: {event!r}")
         snapshot = self._snapshot()
         if isinstance(event, Undo):
             if not self._undo:
-                return ApplyResult(event, (), {}, dict(self._current), 0.0)
+                return False
             self._restore(self._undo.pop())
         else:
             self._mutate(event)
             self._undo.append(snapshot)
             del self._undo[: -self.undo_depth]
         self.events_applied += 1
-        return self._fan_out(event)
+        return True
+
+    def _derived_affected(self) -> tuple[dict[str, Query], tuple[str, ...]]:
+        """Re-derive every viz and name the ones whose digest changed."""
+        derived = {name: self.derive(name) for name in sorted(self._views)}
+        affected = tuple(
+            name for name, q in derived.items()
+            if q.digest != self._current[name].digest
+        )
+        return derived, affected
 
     def _mutate(self, event) -> None:
         if isinstance(event, SetFilter):
@@ -760,11 +778,7 @@ class Session:
                 v.toggled = v.toggled ^ {event.relation}
 
     def _fan_out(self, event) -> ApplyResult:
-        derived = {name: self.derive(name) for name in sorted(self._views)}
-        affected = tuple(
-            name for name, q in derived.items()
-            if q.digest != self._current[name].digest
-        )
+        derived, affected = self._derived_affected()
         results: dict[str, InteractionResult] = {}
         pending: list[tuple[str, object]] = []
         t0 = time.perf_counter()

@@ -116,6 +116,22 @@ def calibration_union_budget() -> int:
     return derived if derived is not None else 512
 
 
+def sparse_batch_elems() -> int:
+    """Max rows·width element volume one vmapped sparse-absorption dispatch
+    may carry (``REPRO_SPARSE_BATCH_ELEMS``; 0 = unbounded).
+
+    The vmapped absorption's cost grows superlinearly with member count on
+    the CPU backend (measured: break-even near width 4 at 5k fact rows,
+    3-5x sequential by width 32), so one-dispatch-per-group is only
+    profitable while the dispatch volume stays small.  Wider groups split
+    into chunks of at least 2 members, keeping cross-session sharing intact
+    while the per-dispatch cost stays near the sequential line."""
+    env = os.environ.get("REPRO_SPARSE_BATCH_ELEMS")
+    if env is not None:
+        return int(env)
+    return 1 << 18
+
+
 def fuse_level_default() -> bool:
     """Env-gated default for level-fused kernel launches
     (REPRO_FUSE_LEVEL_KERNEL; CI runs a 0/1 axis).  When on — and plans plus
@@ -177,10 +193,14 @@ class PlanStats:
     # calibration level ⊕-reduced by ONE multi-segment Pallas launch
     fused_level_launches: int = 0    # fused level launches dispatched
     fused_level_messages: int = 0    # messages served by those launches
+    # cross-session batched fan-out (TreantServer): vmapped dispatches whose
+    # members span >1 session, and the widest distinct-session count observed
+    cross_session_execs: int = 0
+    cross_session_width: int = 0
 
     # counters that are high-water marks, not sums: cross-engine aggregation
     # (Treant.cache_stats) takes max for these and Σ for everything else
-    MAX_FIELDS = ("batch_width", "level_batch_width")
+    MAX_FIELDS = ("batch_width", "level_batch_width", "cross_session_width")
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)

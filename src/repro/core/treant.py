@@ -42,7 +42,7 @@ from typing import Callable, Mapping
 import jax
 
 from repro.relational.relation import Catalog, Delta, Relation
-from repro.relational.stream import StreamBuffer
+from repro.relational.stream import CompactionPolicy, StreamBuffer
 from . import semiring as sr
 from .calibration import CJTEngine, DeltaStats, ExecStats, MessageStore
 from .plans import (
@@ -179,7 +179,12 @@ class Treant:
             compaction_threshold if compaction_threshold is not None
             else compaction_threshold_default()
         )
+        # per-relation compaction thresholds learned from the observed delete
+        # mix (EWMA) around the configured base; the base stays the knob
+        self.compaction_policy = CompactionPolicy()
         self.ingest = IngestStats()
+        # attached TreantServer (repro.serve), surfaced in cache_stats
+        self._server = None
 
     # -- engines ---------------------------------------------------------------
     def engine_for(self, ring_name: str, measure=None) -> CJTEngine:
@@ -386,6 +391,8 @@ class Treant:
         # current queries: a changed digest preempts exactly the stale parked
         # calibration, an unchanged one keeps its position and progress.
         changed = [d.relation for d in deltas]
+        if self._server is not None:
+            self._server._on_commit(changed)
         for sess in self._sessions.values():
             sess._prefetched = {
                 k: e for k, e in sess._prefetched.items()
@@ -453,25 +460,34 @@ class Treant:
             buf = self._streams[name]
             before = dataclasses.replace(buf.stats)
             new_rel, delta = buf.coalesce()
-            self.ingest.rows_appended += buf.stats.rows_appended - before.rows_appended
-            self.ingest.rows_deleted += buf.stats.rows_deleted - before.rows_deleted
+            n_app = buf.stats.rows_appended - before.rows_appended
+            n_del = buf.stats.rows_deleted - before.rows_deleted
+            self.ingest.rows_appended += n_app
+            self.ingest.rows_deleted += n_del
             self.ingest.rows_cancelled += (
                 buf.stats.rows_cancelled - before.rows_cancelled
             )
             if delta is not None:
+                self.compaction_policy.observe(name, n_app, n_del)
                 self.catalog.put(new_rel, make_latest=False)  # stage
                 deltas.append(delta)
         updates = self._ingest(deltas) if deltas else []
         if deltas:
             self.ingest.ticks += 1
         # ---- compaction (tombstone ledger) --------------------------------
+        # per-relation thresholds: the learned delete-mix EWMA tightens the
+        # configured base for delete-heavy relations and relaxes it for
+        # append-mostly ones (base <= 0 still disables compaction globally)
         compactions: list[UpdateResult] = []
         if self.compaction_threshold > 0:
             cdeltas: list[Delta] = []
             rebased: list[tuple[StreamBuffer, Relation]] = []
             for name in sorted(self._streams):
                 buf = self._streams[name]
-                if buf.tombstone_fraction() < self.compaction_threshold:
+                thr = self.compaction_policy.threshold(
+                    name, self.compaction_threshold
+                )
+                if buf.tombstone_fraction() < thr:
                     continue
                 new_rel, cdelta = buf.base.compact()
                 if cdelta is None:
@@ -531,6 +547,8 @@ class Treant:
             "watermark": self.catalog.watermark,
             "ingest": dataclasses.asdict(self.ingest),
         }
+        if self._server is not None:
+            out["serve"] = self._server.stats()
         # aggregate plan counters over the primary AND sibling-ring engines
         # (multi-ring dashboards execute on several PlanCaches); which
         # counters are high-water marks vs sums is declared by PlanStats

@@ -36,6 +36,7 @@ import dataclasses
 import functools
 import hashlib
 from collections import OrderedDict, deque
+from contextlib import contextmanager
 from typing import Callable, Mapping, Sequence
 
 import jax
@@ -443,15 +444,23 @@ class Catalog:
     relation's latest pointer in one step, bumping the monotonic
     :attr:`watermark`.  A reader snapshotting versions (``Query.make``)
     therefore sees either all of a multi-relation tick or none of it — never
-    a torn update.  ``commit_log`` keeps the recent committed snapshots for
-    introspection (tests assert reads only ever match a logged snapshot).
+    a torn update.  ``commit_log`` keeps committed snapshots for
+    introspection (tests assert reads only ever match a logged snapshot),
+    bounded by :attr:`commit_retention` — but a reader can
+    :meth:`pin_watermark` to hold its snapshot (and every later one) open
+    across ticks: trimming only ever drops entries older than the oldest
+    pinned watermark, so a long-running server session never loses the
+    snapshot it is reading (the old fixed-128 deque silently dropped it).
     """
 
     def __init__(self, relations: Sequence[Relation] = ()):
         self._store: dict[tuple[str, str], Relation] = {}
         self._latest: dict[str, str] = {}
         self._watermark = 0
-        self.commit_log: deque[tuple[int, dict[str, str]]] = deque(maxlen=128)
+        self.commit_retention = 128
+        self.commit_log: deque[tuple[int, dict[str, str]]] = deque()
+        # watermark -> pin refcount (several sessions may read one snapshot)
+        self._wm_pins: dict[int, int] = {}
         # device-resident flat-code cache keyed by (relation, version, attrs):
         # hoists the per-call np.ravel_multi_index + host→device transfer out
         # of the message hot path (compiled plans gather through these).
@@ -514,6 +523,44 @@ class Catalog:
     def _advance_watermark(self) -> None:
         self._watermark += 1
         self.commit_log.append((self._watermark, dict(self._latest)))
+        self._trim_commit_log()
+
+    # -- snapshot-read pinning ------------------------------------------------
+    def pin_watermark(self, wm: int | None = None) -> int:
+        """Hold watermark ``wm`` (default: current) open: it and every later
+        snapshot survive commit-log trimming until released.  Refcounted —
+        pin/release pairs nest across sessions.  Returns the pinned mark."""
+        wm = self._watermark if wm is None else wm
+        self._wm_pins[wm] = self._wm_pins.get(wm, 0) + 1
+        return wm
+
+    def release_watermark(self, wm: int) -> None:
+        c = self._wm_pins.get(wm, 0) - 1
+        if c > 0:
+            self._wm_pins[wm] = c
+        else:
+            self._wm_pins.pop(wm, None)
+        self._trim_commit_log()
+
+    @contextmanager
+    def snapshot_read(self):
+        """Scope a read against a pinned snapshot: yields the ``(watermark,
+        versions)`` pair, guaranteed un-trimmed for the duration."""
+        wm = self.pin_watermark()
+        try:
+            yield (wm, dict(self._latest))
+        finally:
+            self.release_watermark(wm)
+
+    def _trim_commit_log(self) -> None:
+        """Drop oldest snapshots beyond retention — but never a pinned one
+        (or anything after it: a pinned reader may chase forward deltas)."""
+        floor = min(self._wm_pins) if self._wm_pins else None
+        while len(self.commit_log) > self.commit_retention:
+            wm0, _ = self.commit_log[0]
+            if floor is not None and wm0 >= floor:
+                break
+            self.commit_log.popleft()
 
     def get(self, name: str, version: str | None = None) -> Relation:
         v = version or self._latest[name]

@@ -48,6 +48,53 @@ class StreamStats:
     compactions: int = 0      # tombstone reclaims
 
 
+class CompactionPolicy:
+    """Per-relation compaction threshold learned from the observed delete mix.
+
+    One global ``REPRO_COMPACTION_THRESHOLD`` mis-serves mixed workloads: an
+    append-mostly relation should tolerate a deep tombstone ledger (compaction
+    recalibrates idempotent rings — expensive, so defer), while a
+    delete-heavy relation should reclaim early (its ledger grows every tick
+    and each tombstone inflates every message contraction over the ring).
+
+    The policy keeps an EWMA of each relation's per-tick delete fraction
+    ``n_del / (n_del + n_app)`` and maps it to a threshold around the
+    configured base: delete fraction 0 → ``1.5 × base`` (defer), delete
+    fraction 1 → ``0.5 × base`` (eager), linear in between, clamped to
+    ``[0.5 × base, min(0.9, 1.5 × base)]``.  A relation with no observations
+    keeps the base threshold, and ``base <= 0`` still means "compact on any
+    tombstone" regardless of the mix — existing tests and benches that pin
+    the global knob keep their semantics.
+    """
+
+    def __init__(self, alpha: float = 0.25):
+        self.alpha = alpha
+        self._ewma: dict[str, float] = {}
+
+    def observe(self, relation: str, n_app: int, n_del: int) -> None:
+        """Fold one tick's delete mix into the relation's EWMA."""
+        total = n_app + n_del
+        if total <= 0:
+            return
+        frac = n_del / total
+        prev = self._ewma.get(relation)
+        self._ewma[relation] = (
+            frac if prev is None else (1 - self.alpha) * prev + self.alpha * frac
+        )
+
+    def delete_mix(self, relation: str) -> float | None:
+        """The learned EWMA delete fraction, or None before any observation."""
+        return self._ewma.get(relation)
+
+    def threshold(self, relation: str, base: float) -> float:
+        if base <= 0:
+            return base
+        mix = self._ewma.get(relation)
+        if mix is None:
+            return base
+        return min(0.9, base * (1.5 - mix))
+
+
 class StreamBuffer:
     """Accumulates one relation's pending micro-batches between ticks."""
 

@@ -1,0 +1,5 @@
+"""Multi-tenant serving tier: one Treant, N concurrent sessions (ISSUE 8)."""
+
+from .server import QueueFull, ServeStats, ServerSession, TreantServer
+
+__all__ = ["QueueFull", "ServeStats", "ServerSession", "TreantServer"]
