@@ -198,6 +198,15 @@ def run_sustained(scale: float = 1.0):
             f"sustained ingestion degraded warm p99 {ratio:.2f}x (> 1.3x)"
         )
 
+    # learned compaction posture must surface through cache_stats: the fact
+    # relation saw a mixed append/delete stream, so its EWMA + effective
+    # threshold are part of the ingest dict (nightly artifacts trend them)
+    comp = t.cache_stats()["ingest"]["compaction"]
+    assert "Flights" in comp, comp
+    assert 0.0 <= comp["Flights"]["ewma"] <= 1.0, comp
+    emit("ingest/compaction_ewma_flights", comp["Flights"]["ewma"] / 1e6,
+         f"threshold={comp['Flights']['threshold']:.3f} (base=0.0)")
+
     # stream-then-flush ≡ rebuild on every viz (float data: allclose; the
     # bit-identity contract on integer data is tests/test_stream_ingest.py's)
     cold = CJTEngine(jt, cat, sr.SUM, store=MessageStore(),
@@ -256,6 +265,13 @@ def run_min_compaction(scale: float = 1.0):
         assert t.cache_stats()["plans"]["calibration_dispatches"] > disp0
     emit("ingest/min_compaction_recalibrate", t_recal,
          f"one deprioritized recalibration after {ticks} absorbed ticks")
+    # delete-only stream: EWMA → 1.0, so the learned threshold undercuts the
+    # 0.25 base (eager reclaim) — assert the export reflects that posture
+    comp = t.cache_stats()["ingest"]["compaction"]
+    assert comp["Flights"]["threshold"] < 0.25, comp
+    emit("ingest/min_compaction_learned_threshold",
+         comp["Flights"]["threshold"] / 1e6,
+         f"ewma={comp['Flights']['ewma']:.3f} base=0.25")
     cold = CJTEngine(t.jt, cat, sr.TROPICAL_MIN, store=MessageStore(),
                      use_plans=False)
     for viz in sess.vizzes:

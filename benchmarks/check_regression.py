@@ -90,6 +90,12 @@ GATED: dict[str, Metric] = {
     "serve/speedup_shared64": Metric(
         lower_is_better=False, tolerance=0.25, min_scale=1.0
     ),
+    # sharded execution: throughput is wall-clock on shared runners (30%
+    # band); the 1→8-device scale-up ratio is paired on the same host so it
+    # gets a tighter band — any structural loss of shard parallelism (a
+    # relation falling back to unsharded dispatch) collapses it well past 25%
+    "sharded/rows_per_sec_8dev": Metric(lower_is_better=False, tolerance=0.30),
+    "sharded/scaleup_8dev": Metric(lower_is_better=False, tolerance=0.25),
 }
 
 # metric-name prefix -> producing suite (the BENCH_<suite>.json file)
@@ -98,6 +104,7 @@ PREFIX_SUITE = {
     "salesforce": "dashboard",
     "ingest": "ingest",
     "serve": "serve",
+    "sharded": "sharded",
 }
 
 
@@ -200,6 +207,8 @@ def self_test(fresh: dict | None, baseline: dict | None) -> int:
             "serve/events_per_sec_shared64": 2_000.0,
             "serve/cross_session_width": 64.0,
             "serve/speedup_shared64": 6.0,
+            "sharded/rows_per_sec_8dev": 5_000_000.0,
+            "sharded/scaleup_8dev": 2.5,
         }
     if not fresh or any(k.startswith("__missing__") for k in fresh):
         fresh = dict(baseline)

@@ -70,6 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.relational.relation import LRU, Catalog, Delta, Predicate, Relation, lift_rows
+from . import distributed as dist
 from . import semiring as sr
 from .factor import Factor, contract, ones_factor
 from .hypertree import JTree
@@ -567,6 +568,7 @@ class CJTEngine:
         plan_cache: PlanCache | None = None,
         batch_calibration: bool | None = None,
         fuse_level_kernel: bool | None = None,
+        mesh=None,
     ):
         self.jt = jt
         self.catalog = catalog
@@ -576,13 +578,17 @@ class CJTEngine:
         # relations with ≤ threshold rows are densified (dense contraction
         # path); bigger ones use the sparse segment path
         self.dense_rows_threshold = dense_rows_threshold
+        # row-sharded execution over a device mesh: plans shard their bodies
+        # with shard_map and ⊕-all-reduce γ-indexed partials; a shared
+        # plan_cache keeps its own mesh (caller wires consistency)
+        self.mesh = mesh
         # compiled message plans: jitted bag contractions keyed structurally
         # (use_plans=False keeps the legacy un-jitted reference path)
         if plan_cache is not None and plan_cache.ring.name != ring.name:
             raise ValueError(
                 f"plan_cache ring {plan_cache.ring.name!r} != engine ring {ring.name!r}"
             )
-        self.plans = (plan_cache or PlanCache(ring)) if use_plans else None
+        self.plans = (plan_cache or PlanCache(ring, mesh=mesh)) if use_plans else None
         # level-batched calibration passes (None → REPRO_BATCH_CALIBRATION);
         # without compiled plans the flag is inert and calibration degrades to
         # the per-edge loop
@@ -772,12 +778,16 @@ class CJTEngine:
         exact ``num_rows`` arrays.
         """
         pad = rel.row_bucket - rel.num_rows
-        if pad <= 0:
-            return vals
-        zeros = self.ring.zeros((pad,))
-        return jax.tree_util.tree_map(
-            lambda a, z: jnp.concatenate([a, z], axis=0), vals, zeros
-        )
+        if pad > 0:
+            zeros = self.ring.zeros((pad,))
+            vals = jax.tree_util.tree_map(
+                lambda a, z: jnp.concatenate([a, z], axis=0), vals, zeros
+            )
+        if self.plans is not None and self.plans._shard_arity(rel) > 1:
+            # commit the cached lift to the row-shard placement so sharded
+            # plans consume it without a per-dispatch reshard copy
+            vals = dist.place_rows(vals, self.plans.mesh, self.plans.mesh_axis)
+        return vals
 
     def _lift_impl(self, q: Query, rel: Relation) -> sr.Field:
         if rel.name in self.lifts:

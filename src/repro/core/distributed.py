@@ -1,33 +1,157 @@
-"""Distributed CJT message passing with shard_map (multi-pod posture).
+"""Engine-facing sharding layer for CJT execution over a device mesh.
 
-The paper runs message passing as SQL against a DBMS cluster; on a TPU pod
-the natural mapping is domain sharding: each factor/message is sharded along
-one attribute's domain, and
+Row sharding (the engine path)
+------------------------------
+Semiring ⊕ is associative, so a bag contraction row-shards cleanly: split
+the fact relation's rows across a 1-D mesh axis (dimension relations and
+incoming γ-indexed messages stay replicated), run the rowwise lift →
+σ-mask → ``segment_aggregate`` pipeline per shard, and ⊕-all-reduce the
+γ-indexed partials — ``psum`` for rings with leafwise + (SUM/COUNT/
+MOMENTS), ``pmin``/``pmax`` for the tropical rings.  Every cross-shard
+message is a tiny ``(|γ|, V)`` collective; nothing ever materializes a
+join.  :mod:`repro.core.plans` builds the sharded plans; this module owns
+mesh acquisition, the ring → collective mapping, and the row placement
+helpers.
 
-  - **forward** (upward) messages marginalize the *sharded* attribute →
-    local partial contraction + ``psum_scatter`` (a reduce-scatter per edge);
-  - **backward** (downward/calibration) messages marginalize the *replicated*
-    attribute → ``all_gather`` + local contraction.
+All acquisition is lazy: importing this module must never touch devices
+(CI hosts without a mesh import it fine), and ``shard_map`` is resolved on
+first use to absorb the jax API drift (moved out of ``experimental``
+around 0.6; ``check_rep`` renamed to ``check_vma``).
 
-So a full calibration pass over a chain of r factors costs exactly r-1
-reduce-scatters + r-1 all-gathers over the mesh axis — the collective
-schedule reported in EXPERIMENTS.md §Dry-run for the ``treant_dashboard``
-config.  Messages stay sharded end-to-end; nothing materializes the join.
+Domain sharding (chain demo)
+----------------------------
+The original seed demo below shards factors along one attribute's *domain*
+instead: forward messages marginalize the sharded attribute (local partial
+contraction + ``psum_scatter``), backward messages marginalize the
+replicated one (``all_gather`` + local contraction) — r-1 reduce-scatters
++ r-1 all-gathers per calibration pass over a chain of r factors.  It is
+kept as a collective-schedule reference; the engine uses row sharding.
 """
 
 from __future__ import annotations
 
-from functools import partial
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-# jax moved shard_map out of experimental around 0.6; support both
-_shard_map = getattr(jax, "shard_map", None)
-if _shard_map is None:
-    from jax.experimental.shard_map import shard_map as _shard_map
+# Name of the 1-D mesh axis the engine row-shards over.
+SHARD_AXIS = "shard"
+
+# Lazily-resolved shard_map entry point (jax moved it out of experimental
+# around 0.6; resolving at import time would pin the API before user code
+# can configure the platform).
+_shard_map_fn = None
+
+
+def _resolve_shard_map():
+    global _shard_map_fn
+    if _shard_map_fn is None:
+        fn = getattr(jax, "shard_map", None)
+        if fn is None:
+            from jax.experimental.shard_map import shard_map as fn
+        _shard_map_fn = fn
+    return _shard_map_fn
+
+
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, across jax versions.
+
+    The engine's local bodies run interpret-mode Pallas kernels, for which
+    jax has no replication rule — ``check_rep=False`` (``check_vma`` on
+    newer jax) is required, and is sound here because every output is
+    ⊕-all-reduced before it leaves the local body.
+    """
+    sm = _resolve_shard_map()
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+    except TypeError:  # jax ≥ 0.6 renamed the kwarg
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+
+
+def shard_devices() -> int:
+    """Mesh width requested via ``REPRO_SHARD_DEVICES`` (0/1/unset → off)."""
+    try:
+        n = int(os.environ.get("REPRO_SHARD_DEVICES", "0"))
+    except ValueError:
+        return 0
+    return n if n > 1 else 0
+
+
+def make_engine_mesh(devices: int | None = None) -> Mesh | None:
+    """Lazily build the engine's 1-D row-shard mesh, or ``None`` when off.
+
+    ``devices=None`` reads ``REPRO_SHARD_DEVICES``.  Returns ``None`` (run
+    unsharded) rather than raising when the host cannot provide the
+    devices — CI supplies them via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    n = shard_devices() if devices is None else int(devices)
+    if n <= 1:
+        return None
+    try:
+        if jax.device_count() < n:
+            return None
+    except RuntimeError:  # backend init failed — run unsharded
+        return None
+    from repro.runtime.compat import make_mesh
+
+    return make_mesh((n,), (SHARD_AXIS,))
+
+
+def ring_collective(ring):
+    """⊕-all-reduce for a ring's γ-indexed partials, or ``None``.
+
+    ``None`` means the ring's ⊕ has no mesh collective here (BOOL: ⊕ = ∨)
+    and callers must fall back to the unsharded plan.
+    """
+    op = getattr(ring, "kernel_segment_op", None)
+    if op == "min":
+        return jax.lax.pmin
+    if op == "max":
+        return jax.lax.pmax
+    if op == "sum" or getattr(ring, "has_add_inverse", False):
+        return jax.lax.psum
+    return None
+
+
+def allreduce_field(field, collective, axis: str = SHARD_AXIS):
+    """⊕-all-reduce every leaf of a field/Factor pytree over ``axis``."""
+    return jax.tree_util.tree_map(lambda leaf: collective(leaf, axis), field)
+
+
+def row_placement(mesh: Mesh, axis: str = SHARD_AXIS) -> NamedSharding:
+    """Sharding that splits leading-axis rows across the mesh (rest replicated)."""
+    return NamedSharding(mesh, P(axis))
+
+
+def place_rows(field, mesh: Mesh, axis: str = SHARD_AXIS):
+    """Commit every leaf of a row-major pytree to the row-shard placement.
+
+    Pre-placing cached row arrays (flat codes, padded lifts) means jit'd
+    sharded plans consume them without a per-dispatch reshard copy.
+    """
+    sh = row_placement(mesh, axis)
+    return jax.tree_util.tree_map(lambda leaf: jax.device_put(leaf, sh), field)
+
+
+def shard_imbalance(num_rows: int, bucket: int, nshards: int) -> float:
+    """Max valid rows per shard / ideal per-shard rows (≥ 1.0 when nonempty).
+
+    Rows are packed low (pad rows carry the ⊕-identity at the top of the
+    bucket), so the fullest shard is the first block.
+    """
+    if nshards <= 1 or num_rows <= 0:
+        return 1.0 if num_rows > 0 else 0.0
+    block = bucket // nshards
+    return min(block, num_rows) * nshards / num_rows
+
+
+# --------------------------------------------------------------------------
+# Domain-sharded chain demo (seed reference; see module docstring)
+# --------------------------------------------------------------------------
 
 
 def calibrate_chain_reference(factors: list[jax.Array]) -> tuple[list, list]:
@@ -99,9 +223,9 @@ def make_chain_calibrate(mesh: Mesh, axis: str, r: int, d: int, dtype=jnp.float3
         total = jax.lax.psum(total_local, axis)
         return fwd, bwd, total
 
-    shard = shard_spec = P(axis, None)
+    shard_spec = P(axis, None)
     msg_spec = P(axis)
-    fn = _shard_map(
+    fn = _resolve_shard_map()(
         _local,
         mesh=mesh,
         in_specs=([shard_spec] * r,),
@@ -146,7 +270,7 @@ def make_chain_calibrate_multi(mesh: Mesh, axis: str, r: int, d: int,
         return fwd, bwd, totals
 
     msg_spec = P(axis, None)
-    fn = _shard_map(
+    fn = _resolve_shard_map()(
         _local,
         mesh=mesh,
         in_specs=([P(axis, None)] * r, P(axis, None)),

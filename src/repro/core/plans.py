@@ -53,6 +53,7 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels import costs as kernel_costs
 from repro.kernels.segment_aggregate import ops as seg_ops
@@ -60,6 +61,7 @@ from repro.kernels.semiring_contract import ops as sc_ops
 from repro.kernels.tropical_contract import ops as tc_ops
 from repro.relational.relation import LRU, Predicate
 
+from . import distributed as dist
 from . import semiring as sr
 from .factor import Factor, contract
 
@@ -197,10 +199,20 @@ class PlanStats:
     # members span >1 session, and the widest distinct-session count observed
     cross_session_execs: int = 0
     cross_session_width: int = 0
+    # mesh-sharded execution (PlanCache(mesh=...)): dispatches that ran under
+    # shard_map, the bytes their ⊕-all-reduce collectives carried (static per
+    # plan: Σ output-factor payloads), and the worst row imbalance observed
+    # (max valid rows per shard / ideal per-shard rows)
+    shard_execs: int = 0
+    allreduce_bytes: int = 0
+    shard_imbalance: float = 0.0
 
     # counters that are high-water marks, not sums: cross-engine aggregation
     # (Treant.cache_stats) takes max for these and Σ for everything else
-    MAX_FIELDS = ("batch_width", "level_batch_width", "cross_session_width")
+    MAX_FIELDS = (
+        "batch_width", "level_batch_width", "cross_session_width",
+        "shard_imbalance",
+    )
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -213,6 +225,11 @@ class _Plan:
     # level plans only: per-group kernel routing + Σ width of fused groups
     group_kernel: tuple = ()
     fused_messages: int = 0
+    # mesh-sharded plans only: the body runs under shard_map and every output
+    # factor is ⊕-all-reduced; allreduce_bytes is the static Σ of those
+    # collective payloads (one per output factor per dispatch)
+    sharded: bool = False
+    allreduce_bytes: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -373,6 +390,108 @@ def _build_sparse_plan(
         ring, rel_attrs, doms, in_attrs_list, pred_attrs, out_attrs, n
     )
     return _Plan(fn=jax.jit(fn), uses_kernel=use_kernel)
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded plans: shard_map the body over row blocks, ⊕-all-reduce γ
+# ---------------------------------------------------------------------------
+
+def _sparse_shard_specs(axis: str) -> tuple:
+    """shard_map in_specs (pytree prefixes) for the (vals, in_fields, in_idx,
+    pred_masks, pred_codes, seg_idx) layout every sparse plan body takes:
+    row-major arrays (lifts, gather indices, σ row codes, segment ids) shard
+    on the mesh axis; γ-indexed message fields and σ domain masks replicate.
+    The same prefixes cover the batched (tuple-of-members) layout."""
+    return (P(axis), P(), P(axis), P(), P(axis), P(axis))
+
+
+def _out_factor_bytes(ring: sr.Semiring, doms: dict[str, int],
+                      out_attrs: tuple[str, ...]) -> int:
+    """Static payload of one ⊕-all-reduced output factor — the (|γ|, V)
+    collective size (scalar-leaf approximation for compound rings)."""
+    cells = int(np.prod([doms[a] for a in out_attrs])) if out_attrs else 1
+    return cells * len(ring.trailing) * np.dtype(ring.dtype).itemsize
+
+
+def _build_sharded_sparse_plan(
+    ring: sr.Semiring,
+    rel_attrs: tuple[str, ...],
+    doms: dict[str, int],
+    in_attrs_list: tuple[tuple[str, ...], ...],
+    pred_attrs: tuple[str, ...],
+    out_attrs: tuple[str, ...],
+    n: int,
+    mesh,
+    axis: str,
+) -> _Plan:
+    """Row-sharded single contraction over a 1-D device mesh.
+
+    The local body is the *unchanged* rowwise → σ → segment-⊕ pipeline built
+    for a 1/nshards row block (pad rows carry the ⊕-identity, so any block
+    split of the padded bucket is exact); the resulting γ-indexed partial
+    factor is ⊕-all-reduced before it leaves shard_map.  Every cross-shard
+    message is therefore a tiny (|γ|, V) collective — never a join.
+    """
+    nshards = int(mesh.shape[axis])
+    assert n % nshards == 0, f"row bucket {n} not divisible by mesh {nshards}"
+    fn_local, _, _, meta = _sparse_plan_parts(
+        ring, rel_attrs, doms, in_attrs_list, pred_attrs, out_attrs,
+        n // nshards,
+    )
+    collective = dist.ring_collective(ring)
+    assert collective is not None, "caller gates on ring_collective"
+
+    def local(vals, in_fields, in_idx, pred_masks, pred_codes, seg_idx):
+        fact = fn_local(vals, in_fields, in_idx, pred_masks, pred_codes, seg_idx)
+        return dist.allreduce_field(fact, collective, axis)
+
+    sm = dist.shard_map_compat(
+        local, mesh, in_specs=_sparse_shard_specs(axis), out_specs=P()
+    )
+    return _Plan(
+        fn=jax.jit(sm), uses_kernel=meta.use_kernel, sharded=True,
+        allreduce_bytes=_out_factor_bytes(ring, doms, out_attrs),
+    )
+
+
+def _build_sharded_batched_sparse_plan(
+    ring: sr.Semiring,
+    rel_attrs: tuple[str, ...],
+    doms: dict[str, int],
+    in_attrs_list: tuple[tuple[str, ...], ...],
+    pred_attrs: tuple[str, ...],
+    out_attrs: tuple[str, ...],
+    n: int,
+    member_dims: tuple[dict[str, int], ...],
+    mesh,
+    axis: str,
+) -> _Plan:
+    """Row-sharded variant of the vmapped batch plan: B members' rowwise
+    stages run per shard (the vmap sits *inside* the local body), then each
+    member's sliced output factor is ⊕-all-reduced."""
+    nshards = int(mesh.shape[axis])
+    assert n % nshards == 0
+    bfn, use_kernel = _batched_sparse_fn(
+        ring, rel_attrs, doms, in_attrs_list, pred_attrs, out_attrs,
+        n // nshards, member_dims,
+    )
+    collective = dist.ring_collective(ring)
+
+    def local(vals_list, in_fields_list, in_idx, pred_masks_list, pred_codes,
+              seg_idx):
+        facts = bfn(vals_list, in_fields_list, in_idx, pred_masks_list,
+                    pred_codes, seg_idx)
+        return dist.allreduce_field(facts, collective, axis)
+
+    sm = dist.shard_map_compat(
+        local, mesh, in_specs=_sparse_shard_specs(axis), out_specs=P()
+    )
+    bytes_ = sum(
+        _out_factor_bytes(ring, {**doms, **md}, out_attrs)
+        for md in member_dims
+    )
+    return _Plan(fn=jax.jit(sm), uses_kernel=use_kernel, sharded=True,
+                 allreduce_bytes=bytes_)
 
 
 # ---------------------------------------------------------------------------
@@ -587,8 +706,10 @@ def _build_batched_sparse_plan(
 # kernel-eligible groups sharing a single multi-segment Pallas launch
 # ---------------------------------------------------------------------------
 
-def _build_level_plan(ring: sr.Semiring, group_statics: tuple) -> _Plan:
-    """Compile one calibration level — all its batch groups — as ONE call.
+def _level_plan_parts(ring: sr.Semiring, group_statics: tuple) -> tuple:
+    """The raw (un-jitted) level body as ``(lfn, group_kernel,
+    fused_messages)`` — split from :func:`_build_level_plan` so the sharded
+    variant can wrap ``lfn`` in shard_map before jitting.
 
     ``group_statics[g]`` is ``(rel_attrs, doms, in_canon, pred_attrs,
     out_canon, n, member_dims)`` exactly as :func:`_build_batched_sparse_plan`
@@ -701,11 +822,63 @@ def _build_level_plan(ring: sr.Semiring, group_statics: tuple) -> _Plan:
                 results[g] = tuple(facts)
         return tuple(results)
 
+    return lfn, group_kernel, fused_messages
+
+
+def _build_level_plan(ring: sr.Semiring, group_statics: tuple) -> _Plan:
+    lfn, group_kernel, fused_messages = _level_plan_parts(ring, group_statics)
     return _Plan(
         fn=jax.jit(lfn),
         uses_kernel=any(group_kernel),
         group_kernel=group_kernel,
         fused_messages=fused_messages,
+    )
+
+
+def _build_sharded_level_plan(
+    ring: sr.Semiring, group_statics: tuple, mesh, axis: str,
+) -> _Plan:
+    """One fused level dispatch per mesh — the level stays the unit of
+    collective scheduling.
+
+    The whole level body (every group's rowwise stage plus the shared
+    multi-segment kernel launch) runs per shard on local row blocks; then
+    every member factor of every group is ⊕-all-reduced in one pass, so a
+    level costs one shard_map dispatch and one collective round regardless
+    of how many messages it carries.
+    """
+    nshards = int(mesh.shape[axis])
+    local_statics = tuple(
+        (rel_attrs, doms, in_canon, pred_attrs, out_canon, n // nshards,
+         member_dims)
+        for (rel_attrs, doms, in_canon, pred_attrs, out_canon, n, member_dims)
+        in group_statics
+    )
+    lfn, group_kernel, fused_messages = _level_plan_parts(ring, local_statics)
+    collective = dist.ring_collective(ring)
+    assert collective is not None, "caller gates on ring_collective"
+
+    def local(groups_args):
+        return dist.allreduce_field(lfn(groups_args), collective, axis)
+
+    per_group = _sparse_shard_specs(axis)
+    sm = dist.shard_map_compat(
+        local, mesh,
+        in_specs=(tuple(per_group for _ in group_statics),),
+        out_specs=P(),
+    )
+    bytes_ = sum(
+        _out_factor_bytes(ring, {**doms, **md}, out_canon)
+        for (_ra, doms, _ic, _pa, out_canon, _n, member_dims) in group_statics
+        for md in member_dims
+    )
+    return _Plan(
+        fn=jax.jit(sm),
+        uses_kernel=any(group_kernel),
+        group_kernel=group_kernel,
+        fused_messages=fused_messages,
+        sharded=True,
+        allreduce_bytes=bytes_,
     )
 
 
@@ -810,6 +983,8 @@ class PlanCache:
         lift_capacity: int = 128,
         factor_capacity: int = 128,
         mask_capacity: int = 512,
+        mesh=None,
+        mesh_axis: str = dist.SHARD_AXIS,
     ):
         self.ring = ring
         self._plans = LRU(plan_capacity)
@@ -817,6 +992,18 @@ class PlanCache:
         self._factors = LRU(factor_capacity)
         self._masks = LRU(mask_capacity)
         self.stats = PlanStats()
+        # mesh-sharded execution: with a mesh attached and a ⊕-collective for
+        # the ring, sparse/batched/level plans row-shard their bodies under
+        # shard_map and ⊕-all-reduce the γ-indexed partials.  Rings without a
+        # collective (BOOL: ⊕ = ∨) and relations whose row bucket does not
+        # divide the mesh silently keep the unsharded plans — sharding is an
+        # execution strategy, never a correctness requirement.
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.shards = int(mesh.shape[mesh_axis]) if mesh is not None else 1
+        self._collective = (
+            dist.ring_collective(ring) if self.shards > 1 else None
+        )
 
     # -- device-resident input caches ---------------------------------------
     def mask_dev(self, pred: Predicate) -> jax.Array:
@@ -855,6 +1042,21 @@ class PlanCache:
             stats.plan_hits += int(not traced)
             stats.kernel_execs += int(entry.uses_kernel)
 
+    def _shard_arity(self, rel) -> int:
+        """Mesh width this relation's plans shard over (1 = unsharded)."""
+        if self._collective is None or rel.row_bucket % self.shards != 0:
+            return 1
+        return self.shards
+
+    def _account_sharded(self, entry: _Plan, rels) -> None:
+        self.stats.shard_execs += 1
+        self.stats.allreduce_bytes += entry.allreduce_bytes
+        for rel in rels:
+            self.stats.shard_imbalance = max(
+                self.stats.shard_imbalance,
+                dist.shard_imbalance(rel.num_rows, rel.row_bucket, self.shards),
+            )
+
     def sparse_key(
         self, rel, vals: sr.Field, incoming: Sequence[Factor],
         preds: Sequence[Predicate], out_attrs: Sequence[str],
@@ -881,16 +1083,23 @@ class PlanCache:
         out_attrs: tuple[str, ...],
         stats=None,
     ) -> Factor:
+        shards = self._shard_arity(rel)
         key = self.sparse_key(rel, vals, incoming, preds, out_attrs)
+        if shards > 1:
+            key = key + (("shards", shards),)
         entry = self._plans.get(key)
         traced = entry is None
         if traced:
             doms = dict(rel.domains)
             for m in incoming:
                 doms.update(m.domains)
-            entry = _build_sparse_plan(
+            build_args = (
                 self.ring, rel.attrs, doms, tuple(m.attrs for m in incoming),
                 tuple(p.attr for p in preds), tuple(out_attrs), rel.row_bucket,
+            )
+            entry = (
+                _build_sharded_sparse_plan(*build_args, self.mesh, self.mesh_axis)
+                if shards > 1 else _build_sparse_plan(*build_args)
             )
             self._plans.put(key, entry)
         rel_set = set(rel.attrs)
@@ -907,6 +1116,8 @@ class PlanCache:
             vals, tuple(in_fields), tuple(in_idx), pred_masks, pred_codes, seg_idx
         )
         self._account(entry, traced, stats)
+        if entry.sharded:
+            self._account_sharded(entry, (rel,))
         return out
 
     def run_sparse_batch(
@@ -967,7 +1178,16 @@ class PlanCache:
         # order, which σ-variants can permute without changing structure —
         # sort by trace key so every permutation re-hits the same plan
         order = sorted(range(len(specs)), key=lambda i: repr(specs[i].key))
+        # a level shards only when EVERY group's relation divides the mesh —
+        # one collective schedule per level, no mixed dispatch
+        shards = self.shards if (
+            self._collective is not None
+            and all(self._shard_arity(s.items[0].rel) == self.shards
+                    for s in specs)
+        ) else 1
         key = ("level", self.ring.name, tuple(specs[i].key for i in order))
+        if shards > 1:
+            key = key + (("shards", shards),)
         entry = self._plans.get(key)
         traced = entry is None
         if traced:
@@ -979,7 +1199,12 @@ class PlanCache:
                 )
                 for i in order
             )
-            entry = _build_level_plan(self.ring, statics)
+            entry = (
+                _build_sharded_level_plan(
+                    self.ring, statics, self.mesh, self.mesh_axis
+                )
+                if shards > 1 else _build_level_plan(self.ring, statics)
+            )
             self._plans.put(key, entry)
         outs = entry.fn(
             tuple(self._group_args(catalog, specs[i]) for i in order)
@@ -987,6 +1212,8 @@ class PlanCache:
         if entry.uses_kernel:
             self.stats.fused_level_launches += 1
             self.stats.fused_level_messages += entry.fused_messages
+        if entry.sharded:
+            self._account_sharded(entry, (s.items[0].rel for s in specs))
         results: list[list[Factor] | None] = [None] * len(specs)
         for pos, i in enumerate(order):
             spec = specs[i]
@@ -1118,15 +1345,25 @@ class PlanCache:
         spec = self._group_spec(items, stats_list)
         items, stats_list, inverse = spec.items, spec.stats, spec.inverse
         rel = items[0].rel
-        entry = self._plans.get(spec.key)
+        shards = self._shard_arity(rel)
+        key = spec.key + (("shards", shards),) if shards > 1 else spec.key
+        entry = self._plans.get(key)
         traced = entry is None
         if traced:
-            entry = _build_batched_sparse_plan(
+            build_args = (
                 self.ring, rel.attrs, spec.doms, spec.in_canon, spec.pred_attrs,
                 spec.out_canon, rel.row_bucket, spec.member_dims,
             )
-            self._plans.put(spec.key, entry)
+            entry = (
+                _build_sharded_batched_sparse_plan(
+                    *build_args, self.mesh, self.mesh_axis
+                )
+                if shards > 1 else _build_batched_sparse_plan(*build_args)
+            )
+            self._plans.put(key, entry)
         outs = entry.fn(*self._group_args(catalog, spec))
+        if entry.sharded:
+            self._account_sharded(entry, (rel,))
         width = len(items)
         if calibration:
             self.stats.level_batched_execs += 1

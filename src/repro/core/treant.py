@@ -43,6 +43,7 @@ import jax
 
 from repro.relational.relation import Catalog, Delta, Relation
 from repro.relational.stream import CompactionPolicy, StreamBuffer
+from . import distributed as dist
 from . import semiring as sr
 from .calibration import CJTEngine, DeltaStats, ExecStats, MessageStore
 from .plans import (
@@ -135,6 +136,7 @@ class Treant:
         batch_calibration: bool | None = None,
         fuse_level_kernel: bool | None = None,
         compaction_threshold: float | None = None,
+        mesh=None,
     ):
         # None → env defaults: REPRO_USE_PLANS gates compiled plans (the CI
         # matrix runs both legs), REPRO_BATCH_FANOUT gates the vmapped
@@ -142,7 +144,8 @@ class Treant:
         # dispatch), REPRO_BATCH_CALIBRATION gates level-batched calibration
         # passes (inert without plans — degrades to the per-edge loop),
         # REPRO_FUSE_LEVEL_KERNEL gates level-fused kernel launches (one
-        # dispatch + one Pallas launch per calibration level)
+        # dispatch + one Pallas launch per calibration level),
+        # REPRO_SHARD_DEVICES picks the row-shard mesh width (mesh=None)
         if use_plans is None:
             use_plans = use_plans_default()
         if batch_fanout is None:
@@ -151,6 +154,10 @@ class Treant:
             batch_calibration = batch_calibration_default()
         if fuse_level_kernel is None:
             fuse_level_kernel = fuse_level_default()
+        if mesh is None:
+            mesh = dist.make_engine_mesh()
+        elif mesh is False or mesh == 0:
+            mesh = None  # explicit opt-out: ignore REPRO_SHARD_DEVICES
         self.catalog = catalog
         self.jt = jt or jt_from_catalog(catalog)
         self.store = MessageStore(max_bytes=max_cache_bytes)
@@ -160,11 +167,18 @@ class Treant:
         self.batch_fanout = batch_fanout
         self.batch_calibration = batch_calibration
         self.fuse_level_kernel = fuse_level_kernel
+        # row-sharded execution over a device mesh: every engine's plan cache
+        # shards fact-relation scans with shard_map and ⊕-all-reduces the
+        # γ-indexed partials; cached row codes pre-place on the mesh so the
+        # hot path never reshards
+        self.mesh = mesh
+        if mesh is not None:
+            catalog.set_row_placement(dist.row_placement(mesh))
         self.engine = CJTEngine(
             self.jt, catalog, ring, lifts=self._lifts, store=self.store,
             dense_rows_threshold=dense_rows_threshold, use_plans=use_plans,
             batch_calibration=batch_calibration,
-            fuse_level_kernel=fuse_level_kernel,
+            fuse_level_kernel=fuse_level_kernel, mesh=mesh,
         )
         # ring name -> engine; siblings share the store (per-ring plan caches)
         self._engines: dict[str, CJTEngine] = {ring.name: self.engine}
@@ -206,7 +220,7 @@ class Treant:
                 self.jt, self.catalog, sr.get(ring_name), lifts=self._lifts,
                 store=self.store, dense_rows_threshold=self._dense_rows_threshold,
                 use_plans=self._use_plans, batch_calibration=self.batch_calibration,
-                fuse_level_kernel=self.fuse_level_kernel,
+                fuse_level_kernel=self.fuse_level_kernel, mesh=self.mesh,
             )
             self._engines[ring_name] = eng
         return eng
@@ -533,6 +547,13 @@ class Treant:
 
     # -- introspection ---------------------------------------------------------------
     def cache_stats(self) -> dict:
+        ingest = dataclasses.asdict(self.ingest)
+        # learned CompactionPolicy state rides under the ingest dict so the
+        # nightly bench can trend the per-relation EWMA delete mix and the
+        # *effective* thresholds, not just the static base knob
+        ingest["compaction"] = self.compaction_policy.state(
+            self.compaction_threshold
+        )
         out = {
             "messages": len(self.store),
             "bytes": self.store.nbytes,
@@ -545,7 +566,7 @@ class Treant:
             "scheduler": self.scheduler.stats(),
             "sessions": len(self._sessions),
             "watermark": self.catalog.watermark,
-            "ingest": dataclasses.asdict(self.ingest),
+            "ingest": ingest,
         }
         if self._server is not None:
             out["serve"] = self._server.stats()

@@ -1,4 +1,16 @@
-"""Jit'd wrapper for segment_aggregate with row/group padding."""
+"""Jit'd wrapper for segment_aggregate with row/group padding.
+
+Sharded composition: both :func:`aggregate_op` and :func:`level_aggregate`
+are *shard-local* — inside ``shard_map`` they see the shard's row block
+(codes and value slab sliced on the leading axis; segment ids stay global)
+and produce a full ``(num_segments, v)`` partial that the caller must
+⊕-all-reduce over the mesh axis (``psum``/``pmin``/``pmax``; see
+``repro.core.distributed.ring_collective``).  ⊕-identity row padding makes
+any equal block split of a padded row bucket exact, and the Pallas kernels
+require ``check_rep=False`` on the enclosing ``shard_map`` (jax has no
+replication rule for ``pallas_call`` — ``distributed.shard_map_compat``
+handles this).
+"""
 
 from __future__ import annotations
 

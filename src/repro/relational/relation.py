@@ -465,8 +465,23 @@ class Catalog:
         # hoists the per-call np.ravel_multi_index + host→device transfer out
         # of the message hot path (compiled plans gather through these).
         self._dev_codes: LRU = LRU(capacity=512)
+        # optional device placement for cached code arrays (a NamedSharding
+        # over the engine mesh's row axis) — see set_row_placement
+        self._row_placement = None
         for r in relations:
             self.put(r)
+
+    def set_row_placement(self, placement) -> None:
+        """Install a row placement applied to every cached flat-code array.
+
+        ``Treant(mesh=...)`` passes the mesh's row-shard NamedSharding so
+        sharded plans consume codes without a per-dispatch reshard copy; the
+        cache is cleared so already-cached arrays re-place on next use.
+        Codes are zero-padded to the power-of-two row bucket, so any equal
+        block split of the leading axis is exact.
+        """
+        self._row_placement = placement
+        self._dev_codes = LRU(capacity=512)
 
     def dev_flat_codes(self, rel: Relation, attrs: Sequence[str]) -> tuple[jax.Array, int]:
         """Device-resident ``rel.flat_codes(attrs)``, cached across calls.
@@ -486,7 +501,12 @@ class Catalog:
             pad = rel.row_bucket - idx.size
             if pad > 0:
                 idx = np.concatenate([idx, np.zeros((pad,), idx.dtype)])
-            hit = (jnp.asarray(idx.astype(np.int32)), total)
+            arr = jnp.asarray(idx.astype(np.int32))
+            if self._row_placement is not None and (
+                arr.shape[0] % getattr(self._row_placement.mesh, "size", 1) == 0
+            ):
+                arr = jax.device_put(arr, self._row_placement)
+            hit = (arr, total)
             self._dev_codes.put(key, hit)
         return hit
 

@@ -94,6 +94,15 @@ class CompactionPolicy:
             return base
         return min(0.9, base * (1.5 - mix))
 
+    def state(self, base: float) -> dict[str, dict[str, float]]:
+        """Learned per-relation posture for introspection/benching: the EWMA
+        delete mix and the effective threshold derived from ``base``.  Only
+        relations with at least one observation appear (sorted by name)."""
+        return {
+            name: {"ewma": ewma, "threshold": self.threshold(name, base)}
+            for name, ewma in sorted(self._ewma.items())
+        }
+
 
 class StreamBuffer:
     """Accumulates one relation's pending micro-batches between ticks."""

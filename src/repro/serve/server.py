@@ -85,6 +85,7 @@ class ServeStats:
     cross_session_batch_width: int = 0  # max distinct sessions in one dispatch
     dedup_hits: int = 0               # events served by a sibling's execution
     shared_prefetch_hits: int = 0     # events served from the shared pool
+    pool_evictions: int = 0           # shared-pool entries dropped at capacity
     background_flushes: int = 0       # flush() ticks run off the caller thread
     think_time_messages: int = 0      # calibration edges advanced while idle
     errors: int = 0                   # events whose _record raised
@@ -99,10 +100,16 @@ class _Queued:
 
 @dataclasses.dataclass
 class _Pooled:
-    """One shared-pool speculative result (any session may hit it)."""
+    """One shared-pool speculative result (any session may hit it).
+
+    ``cost`` estimates what re-materializing the entry would take (rows the
+    query's join sees); ``hot`` marks entries hit in the current micro-batch
+    so they are never evicted before the batch's siblings finish reading."""
 
     factor: object
     query: Query
+    cost: float = 0.0
+    hot: bool = False
 
 
 class ServerSession:
@@ -174,7 +181,10 @@ class TreantServer:
         self._seq = 0
         self._sessions: dict[str, ServerSession] = {}
         # shared speculative-prefetch pool: query digest -> parked fan-out
-        # result; insertion-ordered for capacity eviction (oldest first)
+        # result; insertion order IS recency order (hits reinsert at the
+        # end), and capacity eviction takes the cheapest-to-recompute entry
+        # of the coldest window — same policy as the message store's byte
+        # budget, minus pins: recency, then recompute cost
         self._pool: dict[str, _Pooled] = {}
         self.stats_ = ServeStats()
 
@@ -287,6 +297,9 @@ class TreantServer:
         if not batch:
             return 0
         self.stats_.batches += 1
+        # batch boundary: last batch's pool hits lose their eviction shield
+        for pooled in self._pool.values():
+            pooled.hot = False
         participants: list[tuple[ServerSession, object]] = []
         for q in batch:
             handle = self._sessions.get(q.sid)
@@ -337,6 +350,11 @@ class TreantServer:
             pooled = self._pool.get(q.digest)
             if pooled is not None:
                 self.stats_.shared_prefetch_hits += 1
+                # a hit refreshes recency (reinsert at the warm end) and
+                # shields the entry from eviction for the rest of this batch
+                del self._pool[q.digest]
+                self._pool[q.digest] = pooled
+                pooled.hot = True
                 results[(handle.id, viz)] = InteractionResult(
                     pooled.factor, ExecStats(prefetch_hits=1), 0.0, 0
                 )
@@ -466,12 +484,47 @@ class TreantServer:
 
     def _absorb_prefetch(self, sess: Session) -> None:
         """Publish a session's parked speculative results into the shared
-        pool so ANY session hitting the same derived query is served."""
+        pool so ANY session hitting the same derived query is served.
+
+        Capacity eviction mirrors the message store's policy: candidates
+        come from the cold (insertion/recency) end in windows, and the
+        cheapest-to-recompute entry of the window goes first.  Entries hit
+        in the current batch are never evicted — a sibling session may read
+        the same digest later in the same drain.  The previous policy popped
+        strictly in insertion order, which threw away just-hit entries while
+        keeping cold never-read ones.
+        """
         for (_viz, digest), entry in sess._prefetched.items():
             if digest not in self._pool:
-                self._pool[digest] = _Pooled(entry.factor, entry.query)
+                self._pool[digest] = _Pooled(
+                    entry.factor, entry.query, cost=self._recompute_cost(entry.query)
+                )
+        WINDOW = 8
         while len(self._pool) > self.pool_capacity:
-            self._pool.pop(next(iter(self._pool)))
+            window: list[tuple[float, int, str]] = []
+            for order, (digest, pooled) in enumerate(self._pool.items()):
+                if pooled.hot:
+                    continue
+                window.append((pooled.cost, order, digest))
+                if len(window) >= WINDOW:
+                    break
+            if not window:
+                break  # every entry is hot: admit over capacity this round
+            self._pool.pop(min(window)[2])
+            self.stats_.pool_evictions += 1
+
+    def _recompute_cost(self, q: Query) -> float:
+        """Rows the query's join sees — a proxy for what re-materializing
+        the parked fan-out would cost if the entry were evicted."""
+        try:
+            cat = self.treant.catalog
+            return float(sum(
+                cat.get(r, q.version_of(r)).num_rows
+                for r in self.treant.jt.mapping
+                if self.treant._sees(q, r)
+            ))
+        except Exception:
+            return 0.0
 
     # -- invalidation (called by Treant._ingest at each commit) ----------------
     def _on_commit(self, changed: Iterable[str]) -> None:

@@ -497,6 +497,65 @@ def test_idle_drains_think_time_and_shared_pool_serves_sibling_sessions():
     assert_factors_identical(hb.read("by_d").factor, ref.read("by_d").factor)
 
 
+def test_pool_eviction_keeps_just_hit_entry_fifo_would_drop():
+    """Regression: the shared pool evicted in plain insertion order, so the
+    OLDEST entry went first even when it was the one just served to a
+    sibling session.  A hit must refresh recency: after overflowing the
+    pool, the just-hit digest survives while cold never-read entries go."""
+    spec = spec_for("sum")
+    t = Treant(star_catalog(), use_plans=True)
+    server = TreantServer(t, speculate=4, pool_capacity=4)
+    ha = server.open_session(spec, name="a")
+    hb = server.open_session(spec, name="b")
+    ha.submit(brush(3, 6))
+    drain(server)
+    server.idle()  # a's speculations fill the pool (oldest first)
+    assert len(server._pool) > 0
+    oldest = next(iter(server._pool))  # insertion-oldest = FIFO's victim
+    # (6,9) is a's first speculation candidate for brush(3,6) — the oldest
+    # pool entry — and b hits it
+    hb.submit(brush(6, 9))
+    drain(server)
+    assert server.stats_.shared_prefetch_hits > 0
+    hit_digest = [d for d, p in server._pool.items() if p.hot]
+    assert hit_digest == [oldest]  # b hit exactly the FIFO victim
+    # now overflow the pool: more speculation around new brushes
+    ha.submit(brush(0, 3))
+    hb.submit(brush(12, 15))
+    drain(server)
+    server.idle()
+    assert server.stats_.pool_evictions > 0
+    assert oldest in server._pool  # FIFO would have popped it first
+
+
+def test_pool_eviction_orders_by_cost_and_never_drops_hot_entries():
+    """Unit check of the eviction policy itself: cheapest non-hot entry of
+    the cold window goes first; hot (hit-this-batch) entries are exempt even
+    when they are both the oldest and the cheapest; an all-hot pool admits
+    over capacity rather than dropping a shielded entry."""
+    import types
+
+    from repro.serve.server import _Pooled
+
+    spec = spec_for("sum")
+    t = Treant(star_catalog(), use_plans=True)
+    server = TreantServer(t, pool_capacity=3)
+    costs = {"d1": 0.0, "d2": 1.0, "d3": 4.0, "d4": 2.0, "d5": 3.0}
+    for d, c in costs.items():
+        server._pool[d] = _Pooled(None, None, cost=c, hot=(d == "d1"))
+    server._absorb_prefetch(types.SimpleNamespace(_prefetched={}))
+    # d1 is oldest AND cheapest, but hot → kept; d2 (cost 1) and d4 (cost 2)
+    # are the two cheapest cold entries → evicted
+    assert set(server._pool) == {"d1", "d3", "d5"}
+    assert server.stats_.pool_evictions == 2
+    for p in server._pool.values():
+        p.hot = True
+    server._pool["d6"] = _Pooled(None, None, cost=0.0, hot=True)
+    server._absorb_prefetch(types.SimpleNamespace(_prefetched={}))
+    assert len(server._pool) == 4  # over capacity: every entry is shielded
+    assert server.stats_.pool_evictions == 2
+
+
 def test_serve_counters_surface_in_cache_stats():
     spec = spec_for("sum")
     t = Treant(star_catalog(), use_plans=True)

@@ -414,5 +414,9 @@ def test_flush_result_and_ingest_stats_surfaces():
     assert res.relations == ["F"] and res.watermark == t.catalog.watermark
     st = t.cache_stats()
     assert st["watermark"] == t.catalog.watermark
-    assert st["ingest"] == dataclasses.asdict(t.ingest)
+    # the ingest dict is the counters plus the learned compaction posture
+    expected = dataclasses.asdict(t.ingest)
+    expected["compaction"] = t.compaction_policy.state(t.compaction_threshold)
+    assert st["ingest"] == expected
     assert st["ingest"]["version_bumps"] == 1
+    assert st["ingest"]["compaction"] == {"F": {"ewma": 0.0, "threshold": 0.0}}
