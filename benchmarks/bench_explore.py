@@ -1,0 +1,214 @@
+"""Exploratory-BI workload: predictive think-time + bin cubes vs σ-prefetch.
+
+The PR-9 think-time path (``FixedKPrefetch``) pre-materializes the *nearest*
+σ windows of the last brush — great for smooth drags, useless for the jumps
+real exploration is made of: drill into a low bucket, glance at the top
+buckets, backtrack to the unfiltered view, switch dimension.  This suite
+drives exactly that loop over the Flight schema, twice:
+
+- **leg A** — ``Treant(policy=FixedKPrefetch(2))``: the PR-9 σ-prefetch
+  baseline.  The non-adjacent jump misses every parked candidate and pays a
+  full warm fan-out execution.
+- **leg B** — ``Treant(policy=PredictiveThinkTime(...))``: idle time builds a
+  γ∪{brush-dim} **bin cube** per sibling viz, so ANY later σ on that
+  dimension (jump, IN-list, backtrack-to-clear) is served by slicing the
+  cube — 0 plan executions, 0 store probes (asserted below).
+
+Timed passes are interleaved leg-A/leg-B so machine drift stays out of the
+ratio.  Gated metrics: ``explore/brush_cube_hit_rate`` (structural — every
+timed event must be cube-served), ``explore/warm_brush_cube`` (latency) and
+``explore/cube_speedup`` (≥3x at full scale, the ISSUE-10 acceptance bar).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (
+    ClearFilter, DashboardSpec, FixedKPrefetch, PredictiveThinkTime, SetFilter,
+    Treant, VizSpec, jt_from_catalog,
+)
+from repro.core import semiring as sr
+from repro.relational import schema
+
+from .common import emit
+
+FLIGHT_SEED = 1
+ROUNDS = 3
+
+# (brush dimension, source viz); the workload cycles through all three —
+# dimension switching is part of what the trajectory model has to absorb
+BRUSH_DIMS = (
+    ("carrier_group", "by_carrier"),
+    ("delay_bucket", "by_delay"),
+    ("month", "by_month"),
+)
+
+# the exploration happens against a held analysis context — two standing
+# filters on OTHER dimensions (the defining crossfilter regime).  Multi-σ
+# queries are where σ-family calibration stops helping: the jump brush
+# composes three σs, so leg A re-runs real absorption work per sibling,
+# while leg B's cubes were built *under* the context and still slice.
+CONTEXT = (
+    SetFilter("airport_size", values=(1, 2), source="by_size"),
+    SetFilter("dow", lo=0, hi=4, source="by_dow"),
+)
+
+
+def explore_spec() -> DashboardSpec:
+    m = ("Flights", "dep_delay")
+    return DashboardSpec(vizzes=(
+        VizSpec("by_state", measure=m, ring="sum", group_by=("airport_state",)),
+        VizSpec("by_size", measure=m, ring="sum", group_by=("airport_size",)),
+        VizSpec("by_carrier", measure=m, ring="sum", group_by=("carrier_group",)),
+        VizSpec("by_delay", measure=m, ring="sum", group_by=("delay_bucket",)),
+        VizSpec("by_month", measure=m, ring="sum", group_by=("month",)),
+        VizSpec("by_dow", measure=m, ring="sum", group_by=("dow",)),
+        VizSpec("state_by_size", measure=m, ring="sum",
+                group_by=("airport_state", "airport_size")),
+        VizSpec("carrier_by_month", measure=m, ring="sum",
+                group_by=("carrier_group", "month")),
+    ))
+
+
+def _events(doms) -> list[tuple[SetFilter, list]]:
+    """Per dimension: the drill anchor, then the timed exploration events —
+    a non-adjacent jump (3-value IN-list: a different width than any
+    σ-prefetch candidate, parked candidates are span-2 shifts) and the
+    backtrack to unfiltered."""
+    out = []
+    for dim, src in BRUSH_DIMS:
+        d = doms[dim]
+        anchor = SetFilter(dim, values=(0, 1), source=src)
+        jump = SetFilter(dim, values=(d - 3, d - 2, d - 1), source=src)
+        out.append((anchor, [jump, ClearFilter(dim)]))
+    return out
+
+
+def _open(cat, jt, policy):
+    t = Treant(cat, ring=sr.SUM, jt=jt, policy=policy)
+    sess = t.open_session(explore_spec(), name="bench")
+    return t, sess
+
+
+def _warm(t, sess, events):
+    """Untimed pass: sets the standing context, compiles every plan/
+    cube-slice structure, plus one toggle/untoggle drill (the backtrack-
+    heavy exploration pattern) so the visibility-scoped derive path is
+    exercised in both legs."""
+    for ctx in CONTEXT:
+        sess.apply(ctx)
+    sess.idle()
+    for anchor, follows in events:
+        sess.apply(anchor)
+        sess.idle()
+        for ev in follows:
+            sess.apply(ev)
+        sess.idle()
+    from repro.core import ToggleRelation
+
+    sess.apply(ToggleRelation("Carrier", viz="by_month"))
+    sess.apply(events[0][0])                       # brush while toggled
+    sess.apply(ClearFilter(events[0][0].attr))
+    sess.apply(ToggleRelation("Carrier", viz="by_month"))  # backtrack
+    sess.idle()
+
+
+def _timed_pass(t, sess, events):
+    """One drill/jump/backtrack loop; returns (latencies, cube-served flags,
+    plan-exec delta over the timed events)."""
+    lat, served = [], []
+    for anchor, follows in events:
+        sess.apply(anchor)
+        sess.idle()                                # think-time: the leg's policy
+        for ev in follows:
+            t.store.block_until_ready()
+            ex0 = _plan_execs(t)
+            t0 = time.perf_counter()
+            res = sess.apply(ev)
+            jax.block_until_ready([r.factor.field for r in res.results.values()])
+            lat.append(time.perf_counter() - t0)
+            hits = sum(r.stats.bin_cube_hits for r in res.results.values())
+            served.append(
+                (hits == len(res.affected) > 0, _plan_execs(t) - ex0)
+            )
+    return lat, served
+
+
+def _plan_execs(t) -> int:
+    st = t.cache_stats()
+    if "plans" not in st:
+        return 0
+    return st["plans"]["plans_built"] + st["plans"]["plan_hits"]
+
+
+def main():
+    scale = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+    cat = schema.flight(n_flights=max(2_000, int(100_000 * scale)),
+                        seed=FLIGHT_SEED)
+    jt = jt_from_catalog(cat)
+    doms = cat.domains()
+    events = _events(doms)
+
+    t_a, sess_a = _open(cat, jt, FixedKPrefetch(2))
+    t_b, sess_b = _open(
+        cat, jt, PredictiveThinkTime(cube_builds_per_idle=16, prefetch_k=2)
+    )
+    _warm(t_a, sess_a, events)
+    _warm(t_b, sess_b, events)
+
+    lat_a, lat_b, served_b = [], [], []
+    for _ in range(ROUNDS):
+        la, _ = _timed_pass(t_a, sess_a, events)
+        lb, sb = _timed_pass(t_b, sess_b, events)
+        lat_a += la
+        lat_b += lb
+        served_b += sb
+
+    warm_a = float(np.median(lat_a))
+    warm_b = float(np.median(lat_b))
+    hit_rate = sum(1 for ok, _ in served_b if ok) / len(served_b)
+    cube_execs = sum(d for ok, d in served_b if ok)
+
+    emit("explore/warm_brush_prefetch", warm_a,
+         f"σ-prefetch leg: non-adjacent jumps over {len(lat_a)} events")
+    emit("explore/warm_brush_cube", warm_b,
+         f"bin-cube leg: same events, cube-served={hit_rate:.2f}")
+    speedup = warm_a / max(warm_b, 1e-9)
+    emit("explore/cube_speedup", speedup / 1e6,
+         f"bin cubes vs σ-prefetch on jumps = {speedup:.2f}x")
+    emit("explore/brush_cube_hit_rate", hit_rate / 1e6,
+         f"{sum(1 for ok, _ in served_b if ok)}/{len(served_b)} timed events "
+         f"fully cube-served")
+
+    st = sess_b.stats()
+    emit("explore/bin_cube_hits", st["bin_cube_hits"] / 1e6,
+         f"session cube hits = {st['bin_cube_hits']}")
+    emit("explore/bin_cube_bytes", st["bin_cube_bytes"] / 1e12,
+         f"cubes={st['bin_cubes']}")
+    sched = t_b.cache_stats()["scheduler"]
+    emit("explore/policy_decisions", sched["policy_decisions"] / 1e6,
+         f"cube_builds={sched['cube_builds']}")
+
+    # ISSUE-10 acceptance: every timed jump/backtrack is cube-served with
+    # zero plan executions, and cube hits actually occurred
+    assert st["bin_cube_hits"] > 0, "predictive leg never hit a bin cube"
+    assert hit_rate == 1.0, (
+        f"non-adjacent brushes escaped the bin cubes: hit rate {hit_rate:.2f}"
+    )
+    assert cube_execs == 0, (
+        f"cube-served brushes still executed {cube_execs} plans"
+    )
+    if scale >= 1.0:
+        assert speedup >= 3.0, (
+            f"bin cubes only {speedup:.2f}x vs σ-prefetch on exploratory "
+            f"jumps (acceptance bar is 3x)"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -90,6 +90,15 @@ GATED: dict[str, Metric] = {
     "serve/speedup_shared64": Metric(
         lower_is_better=False, tolerance=0.25, min_scale=1.0
     ),
+    # exploratory-BI bin cubes: the hit rate is structural (1.0 means every
+    # timed jump/backtrack was served by slicing a parked cube — any drop
+    # means a σ shape escaped the cube path), gated at every scale; the
+    # cube-vs-σ-prefetch speedup only separates from noise at full scale
+    "explore/brush_cube_hit_rate": Metric(lower_is_better=False, tolerance=0.20),
+    "explore/warm_brush_cube": Metric(lower_is_better=True, tolerance=0.25),
+    "explore/cube_speedup": Metric(
+        lower_is_better=False, tolerance=0.25, min_scale=1.0
+    ),
     # sharded execution: throughput is wall-clock on shared runners (30%
     # band); the 1→8-device scale-up ratio is paired on the same host so it
     # gets a tighter band — any structural loss of shard parallelism (a
@@ -104,6 +113,7 @@ PREFIX_SUITE = {
     "salesforce": "dashboard",
     "ingest": "ingest",
     "serve": "serve",
+    "explore": "explore",
     "sharded": "sharded",
 }
 
@@ -207,6 +217,9 @@ def self_test(fresh: dict | None, baseline: dict | None) -> int:
             "serve/events_per_sec_shared64": 2_000.0,
             "serve/cross_session_width": 64.0,
             "serve/speedup_shared64": 6.0,
+            "explore/brush_cube_hit_rate": 1.0,
+            "explore/warm_brush_cube": 2_000.0,
+            "explore/cube_speedup": 4.0,
             "sharded/rows_per_sec_8dev": 5_000_000.0,
             "sharded/scaleup_8dev": 2.5,
         }

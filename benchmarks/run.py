@@ -32,6 +32,7 @@ SUITES = [
     ("updates", "bench_updates", "Delta calibration: update-then-query vs rebuild"),
     ("ingest", "bench_ingest", "Streaming ingestion: coalesced ticks vs no-ingest baseline"),
     ("serve", "bench_serve", "Multi-tenant serving: cross-session batched fan-out + byte budget"),
+    ("explore", "bench_explore", "Exploratory BI: predictive think-time + bin cubes vs σ-prefetch"),
     ("sharded", "bench_sharded", "Sharded CJT over a device mesh: rows/sec scaling 1-8 devices"),
     ("ml_aug", "bench_ml_augmentation", "Fig 18: factorized-ML augmentation"),
     ("tpch", "bench_tpch", "Fig 19/20: TPC-H dashboard"),

@@ -11,6 +11,11 @@ from .calibration import (  # noqa: F401
     CalibrationPlan, CJTEngine, MessageStore, ExecStats, DeltaStats,
 )
 from .plans import PlanCache, PlanStats  # noqa: F401
+from .predictive import (  # noqa: F401
+    BrushTrajectory, DrainCalibration, FixedKPrefetch, PredictiveThinkTime,
+    ThinkTimeBudget, ThinkTimeConfig, ThinkTimePolicy,
+    reset_deprecation_warnings, reset_think_time_config, think_time_config,
+)
 from .dashboard import (  # noqa: F401
     ApplyResult, ClearFilter, DashboardSpec, Drill, InteractionResult,
     Rollup, Session, SetFilter, SwapMeasure, ThinkTimeScheduler,

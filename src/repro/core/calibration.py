@@ -501,6 +501,10 @@ class ExecStats:
     # result served from the session's speculative-prefetch cache: nothing
     # executed at all (no store probes, no plan dispatch)
     prefetch_hits: int = 0
+    # result sliced out of a parked γ∪{dim} bin cube (select + ⊕-marginalize
+    # over the brush dimension): no store probes, no plan dispatch either,
+    # but unlike a prefetch hit the cube survives to serve the NEXT σ too
+    bin_cube_hits: int = 0
     # realized Steiner tree (§3.4.2): bags touched by recomputed messages
     # plus the absorption root — 1 when everything was served from cache
     steiner_size: int = 0

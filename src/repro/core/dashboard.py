@@ -34,15 +34,19 @@ is the public surface for that workload:
   compiled plan (:mod:`repro.core.plans`) — a warm ``SetFilter`` costs one
   plan dispatch instead of one per linked viz.  ``Treant(batch_fanout=False)``
   (or ``REPRO_BATCH_FANOUT=0``) restores the per-viz dispatch path.
-- **Speculative σ prefetch**: ``Session.idle(speculate=k)`` spends leftover
-  think-time on the *likely next* interaction — :func:`speculate_filters`
-  derives up to ``k`` neighboring σ values of the most recent ``SetFilter``
-  (adjacent brush windows for ranges, shifted sibling value sets for
-  IN-lists, Mosaic-style), and the scheduler pre-executes the would-be
-  fan-out for each, materializing its messages in the shared store and
-  parking the absorbed per-viz results in the session's prefetch cache.  A
-  follow-up brush on a prefetched σ is served entirely from that cache:
-  zero store probes, zero plan executions (``ExecStats.prefetch_hits``).
+- **Think-time policies** (:mod:`repro.core.predictive`): leftover
+  think-time is spent by ONE :class:`~repro.core.predictive.ThinkTimePolicy`
+  — ``Session.idle(policy=FixedKPrefetch(k))`` pre-executes the fan-out for
+  up to ``k`` neighboring σ values of the most recent ``SetFilter``
+  (:func:`speculate_filters`: adjacent brush windows for ranges, shifted
+  sibling value sets for IN-lists, Mosaic-style), parking the absorbed
+  per-viz results in the session's prefetch cache;
+  ``PredictiveThinkTime`` additionally materializes **bin cubes** — the
+  γ∪{brush-dim} aggregate per (viz, likely dim), so ANY later σ on that dim
+  is an O(bins) slice.  A follow-up brush on a prefetched σ or a
+  cube-covered dim is served with zero store probes and zero plan
+  executions (``ExecStats.prefetch_hits`` / ``bin_cube_hits``).  The legacy
+  ``idle(speculate=k)`` deprecation-shims onto ``FixedKPrefetch(k)``.
 - ``Session.sql(viz, text)`` routes the restricted SQL front-end
   (:mod:`repro.relational.sql`) into the same layer.
 
@@ -66,7 +70,17 @@ from typing import TYPE_CHECKING, Mapping
 import jax
 
 from repro.relational.relation import Predicate, mask_in, mask_range
-from .calibration import CalibrationPlan, CJTEngine, ExecStats
+from .calibration import CalibrationPlan, CJTEngine, ExecStats, factor_nbytes
+from .plans import slice_bin_cube, slice_bin_cubes
+from .predictive import (
+    BrushTrajectory,
+    FixedKPrefetch,
+    ThinkTimeBudget,
+    ThinkTimePolicy,
+    _BinCube,
+    think_time_config,
+    warn_deprecated_once,
+)
 from .query import Query
 
 if TYPE_CHECKING:  # pragma: no cover — import cycle guard (treant imports us)
@@ -180,6 +194,9 @@ class Undo:
 
 
 Event = (SetFilter, ClearFilter, Drill, Rollup, SwapMeasure, ToggleRelation, Undo)
+
+
+_UNCACHED = object()  # cube-probe memo sentinel (None is a valid memo value)
 
 
 def _group_by_engine(pairs):
@@ -348,6 +365,8 @@ class ThinkTimeScheduler:
         self.messages = 0             # edges processed across all runs
         self.speculative_queries = 0  # prefetch queries executed during idle
         self.speculative_messages = 0  # messages those queries materialized
+        self.policy_decisions = 0     # work items a ThinkTimePolicy attempted
+        self.cube_builds = 0          # bin cubes materialized during idle
         self._session_preemptions: dict[str, int] = {}
 
     def schedule(
@@ -551,6 +570,8 @@ class ThinkTimeScheduler:
             "messages": self.messages,
             "speculative_queries": self.speculative_queries,
             "speculative_messages": self.speculative_messages,
+            "policy_decisions": self.policy_decisions,
+            "cube_builds": self.cube_builds,
         }
 
 
@@ -607,11 +628,27 @@ class Session:
         self.undo_depth = 64
         self.events_applied = 0
         # speculative σ prefetch: (viz, query digest) -> _Prefetched entry,
-        # filled by idle(speculate=), served (and popped) by _fan_out
+        # filled by think-time policies, served (and popped) by _fan_out
         self._prefetched: dict[tuple[str, str], _Prefetched] = {}
-        self.prefetch_capacity = 128
+        self.prefetch_capacity = think_time_config().prefetch_capacity
         self.prefetch_hits = 0
         self._last_filter: SetFilter | None = None
+        # bin cubes: (viz, cube-query digest) -> _BinCube, plus a per-viz
+        # index of which dims have a parked cube (probe fan-in).  Unlike
+        # _Prefetched entries cubes are NOT popped on hit — one cube serves
+        # every subsequent σ on its dimension until data invalidates it.
+        self._bin_cubes: dict[tuple[str, str], _BinCube] = {}
+        self._cube_dims: dict[str, set[str]] = {}
+        # (viz, dim, q.digest) -> cube-query digest (or None): pure function
+        # of frozen queries, so it never goes stale — digests already fold in
+        # relation versions
+        self._cube_probe_memo: dict[tuple[str, str, str], str | None] = {}
+        self._derive_memo: dict[tuple, dict[str, Query]] = {}
+        self.bin_cube_hits = 0
+        # online brush-trajectory model feeding PredictiveThinkTime
+        self.trajectory = BrushTrajectory()
+        # session-default think-time policy; None falls back to the Treant's
+        self.policy: ThinkTimePolicy | None = None
         # offline-calibration pins, keyed by pin-time digest: with batched
         # calibration the *effective* (union-carry) queries are pinned, not
         # the per-viz bases — close()/update() release exactly these
@@ -686,14 +723,20 @@ class Session:
             rel, col, ring = v.measure
             q = q.with_measure(rel, col, ring=ring)
         q = q.with_group_by(*v.group_by)
-        if v.crossfilter:
-            # the brushing viz keeps its full dimension (source exclusion)
-            q = q.with_filters([
-                pred for _attr, (pred, source) in sorted(self._filters.items())
-                if source != viz
-            ])
+        # toggles BEFORE filters: the final Query state (and digest) is
+        # identical either way, but the visibility check below needs the
+        # viz's effective removal set
         for rel in sorted(v.toggled):
             q = q.with_relation_toggled(rel)
+        if v.crossfilter:
+            # the brushing viz keeps its full dimension (source exclusion);
+            # a σ on a dimension no relation in the viz's join scope carries
+            # (ToggleRelation removed it) is dropped — crossfilter semantics
+            # leave such a viz unfiltered, and the σ is unplaceable anyway
+            q = q.with_filters([
+                pred for _attr, (pred, source) in sorted(self._filters.items())
+                if source != viz and self._treant.sees_attr(q, pred.attr)
+            ])
         return q
 
     def _predicate_of(self, ev: SetFilter) -> Predicate:
@@ -737,26 +780,52 @@ class Session:
         self.events_applied += 1
         return True
 
+    def _derive_token(self) -> tuple:
+        """Content token of everything :meth:`derive` reads — σ state (by
+        predicate digest) plus per-viz declarative state.  ``base.digest``
+        folds in relation versions, so ingestion invalidates by re-keying."""
+        return (
+            tuple((a, p.digest, s) for a, (p, s) in sorted(self._filters.items())),
+            tuple(
+                (n, v.base.digest, v.measure, v.group_by,
+                 tuple(sorted(v.toggled)), v.crossfilter)
+                for n, v in sorted(self._views.items())
+            ),
+        )
+
     def _derived_affected(self) -> tuple[dict[str, Query], tuple[str, ...]]:
-        """Re-derive every viz and name the ones whose digest changed."""
-        derived = {name: self.derive(name) for name in sorted(self._views)}
+        """Re-derive every viz and name the ones whose digest changed.
+
+        Derivation is memoized on the declarative-state token: exploration
+        is full of revisited states (backtracks, jump-and-return, Undo), and
+        a replayed state reuses the frozen Query objects outright instead of
+        re-running the per-viz predicate placement."""
+        token = self._derive_token()
+        derived = self._derive_memo.get(token)
+        if derived is None:
+            derived = {name: self.derive(name) for name in sorted(self._views)}
+            if len(self._derive_memo) > 512:
+                self._derive_memo.clear()
+            self._derive_memo[token] = derived
         affected = tuple(
             name for name, q in derived.items()
             if q.digest != self._current[name].digest
         )
-        return derived, affected
+        return dict(derived), affected
 
     def _mutate(self, event) -> None:
         if isinstance(event, SetFilter):
             if event.source is not None:
                 self._view(event.source)
             self._filters[event.attr] = (self._predicate_of(event), event.source)
-            self._last_filter = event  # speculation anchor (idle(speculate=))
+            self._last_filter = event  # speculation anchor (σ prefetch)
+            self.trajectory.observe(event)
         elif isinstance(event, ClearFilter):
             self._filters.pop(event.attr, None)
             # don't speculate around a dimension the user just abandoned
             if self._last_filter is not None and self._last_filter.attr == event.attr:
                 self._last_filter = None
+            self.trajectory.forget(event.attr)
         elif isinstance(event, Drill):
             v = self._view(event.viz)
             if event.attr not in self.catalog.domains():
@@ -786,6 +855,7 @@ class Session:
         # this σ was already executed during think-time, so the viz costs
         # zero store probes and zero plan executions now
         to_run: list[str] = []
+        cube_hits: list[tuple[str, Query, object, str]] = []
         for name in affected:
             q = derived[name]
             hit = self._prefetched.pop((name, q.digest), None)
@@ -799,8 +869,41 @@ class Session:
                     self.id, name, q,
                     self._treant.engine_for(q.ring_name, q.measure),
                 )
+                continue
+            # then the bin cubes: a brush on a cube-materialized dimension
+            # is an O(bins) slice of the parked γ∪{dim} aggregate — also
+            # zero store probes and zero plan executions, for ANY σ.  Matches
+            # are collected and sliced as ONE batched compiled dispatch below.
+            match = self._match_bin_cube(
+                name, q, hint=getattr(event, "attr", None)
+            )
+            if match is not None:
+                cube_hits.append((name, q, match[0], match[1]))
             else:
                 to_run.append(name)
+        if cube_hits:
+            engine = self._treant.engine_for(
+                cube_hits[0][1].ring_name, cube_hits[0][1].measure
+            )
+            sliced = slice_bin_cubes(
+                [
+                    (e.factor, dim, [p.mask for p in q.predicates_on(dim)],
+                     q.group_by)
+                    for _, q, e, dim in cube_hits
+                ],
+                stats=engine.plans.stats if engine.plans is not None else None,
+            )
+            for (name, q, _, _), f in zip(cube_hits, sliced):
+                self.bin_cube_hits += 1
+                results[name] = InteractionResult(
+                    f, ExecStats(bin_cube_hits=1), 0.0, 0
+                )
+                self._current[name] = q
+                pending.append((name, f))
+                self.scheduler.schedule(
+                    self.id, name, q,
+                    self._treant.engine_for(q.ring_name, q.measure),
+                )
         # group the rest per engine; batch_fanout dispatches each group as
         # ONE execute_many call (sibling absorptions share a vmapped plan),
         # otherwise fall back to the per-viz dispatch path
@@ -910,32 +1013,38 @@ class Session:
         budget_messages: int | None = None,
         budget_seconds: float | None = None,
         speculate: int = 0,
+        policy: ThinkTimePolicy | None = None,
     ) -> int:
-        """Spend user think-time calibrating this session's pending vizzes.
+        """Spend user think-time on this session, driven by ONE policy.
 
-        Most-recently-interacted viz first; preemptible — exhausting the
-        budget keeps iterator positions and all materialized messages.
-        ``speculate=k`` then spends *remaining* think-time pre-materializing
-        the fan-out for up to ``k`` neighboring σ values of the most recent
-        ``SetFilter`` (adjacent brush windows / shifted sibling value sets),
-        so a follow-up brush on one of them is served entirely from the
-        prefetch cache.  Speculation only starts while the budget has slack
-        (calibration comes first); once started, a candidate fan-out runs to
-        completion — it is not edge-preemptible like calibration.  Returns
-        the number of calibration edges processed (speculative work is
-        reported via ``stats()`` instead).
+        The policy (``policy=`` argument, else ``self.policy``, else the
+        Treant's default — ``DrainCalibration`` unless configured) first
+        drains pending calibrations most-recently-interacted first
+        (preemptible: exhausting the budget keeps iterator positions and all
+        materialized messages), then — while the shared budget has slack —
+        runs its speculative extras: ``FixedKPrefetch(k)`` pre-executes the
+        fan-out for the k nearest σ neighbors of the last brush;
+        ``PredictiveThinkTime`` builds trajectory-ranked bin cubes and
+        direction-biased σ prefetch.  Returns the number of calibration
+        edges processed (speculative work is reported via ``stats()``).
+
+        ``speculate=k`` is deprecated: it maps to ``FixedKPrefetch(k)``
+        (bit-identical behavior) and warns once per process.
         """
-        t0 = time.perf_counter()
-        done = self.scheduler.run(
-            budget_messages=budget_messages, budget_seconds=budget_seconds,
-            session=self.id,
+        if speculate:
+            warn_deprecated_once(
+                "Session.idle(speculate=)",
+                "Session.idle(speculate=k) is deprecated; pass "
+                "policy=FixedKPrefetch(k) instead",
+            )
+            if policy is None:
+                policy = FixedKPrefetch(speculate)
+        if policy is None:
+            policy = self.policy or self._treant.think_time_policy
+        return policy.run(
+            self,
+            ThinkTimeBudget(messages=budget_messages, seconds=budget_seconds),
         )
-        budget_left = (
-            budget_seconds is None or time.perf_counter() - t0 < budget_seconds
-        ) and (budget_messages is None or done < budget_messages)
-        if speculate > 0 and budget_left:
-            self._speculate(speculate)
-        return done
 
     def _speculate(self, k: int) -> int:
         """Pre-execute the fan-out for up to ``k`` neighbor σ values of the
@@ -944,13 +1053,18 @@ class Session:
         if ev is None:
             return 0
         doms = self.catalog.domains()
+        return self._speculate_candidates(ev, speculate_filters(ev, doms[ev.attr], k))
+
+    def _speculate_candidates(self, ev: SetFilter, cands: list[SetFilter]) -> int:
+        """Pre-execute the fan-out for explicit candidate σ events on
+        ``ev.attr`` (candidate rank = list position, nearest/likeliest
+        first); park the absorbed results in the prefetch cache."""
         items: list[tuple[str, Query, CJTEngine]] = []
-        # (viz, digest) -> (query, candidate rank): rank 0 is the σ value
-        # closest to the anchor brush (speculate_filters is nearest-first)
+        # (viz, digest) -> (query, candidate rank)
         meta: dict[tuple[str, str], tuple[Query, int]] = {}
         saved = self._filters.get(ev.attr)
         try:
-            for dist, cand in enumerate(speculate_filters(ev, doms[ev.attr], k)):
+            for dist, cand in enumerate(cands):
                 # derive through the real contract with the candidate σ
                 # swapped in, so digests match the eventual real event's
                 self._filters[ev.attr] = (self._predicate_of(cand), cand.source)
@@ -959,6 +1073,11 @@ class Session:
                     if not view.crossfilter or name == cand.source:
                         continue
                     q = self.derive(name)
+                    # a ToggleRelation may have removed every relation that
+                    # carries the brush attr from this viz's join scope —
+                    # executing would crash placing σ on an invisible attr
+                    if not self._treant.sees_attr(q, ev.attr):
+                        continue
                     key = (name, q.digest)
                     if (
                         q.digest == self._current[name].digest
@@ -1001,6 +1120,164 @@ class Session:
             )[1][0]
             del self._prefetched[victim]
 
+    # -- bin cubes --------------------------------------------------------------
+    def _cube_query(self, q: Query, dim: str) -> Query | None:
+        """The cube query serving any σ on ``dim`` for a viz whose derived
+        query is ``q``: drop the σ on ``dim``, group by γ∪{dim}.  Build and
+        probe both derive the key through here, so the digests meet as long
+        as only the σ on ``dim`` differs.  Returns None when the dimension
+        is unknown, invisible to the viz's join scope (ToggleRelation), or
+        the cube would blow the cell budget."""
+        doms = self.catalog.domains()
+        if dim not in doms or not self._treant.sees_attr(q, dim):
+            return None
+        gamma = tuple(dict.fromkeys(q.group_by + (dim,)))
+        cells = 1
+        for a in gamma:
+            cells *= doms[a]
+        if cells > think_time_config().cube_cell_budget:
+            return None
+        return q.without_predicate(dim).with_group_by(*gamma)
+
+    def _build_bin_cube(self, viz: str, dim: str) -> bool:
+        """Materialize the γ∪{dim} cube for one viz during think-time.
+
+        Executes through the shared engine with this session's producer tag
+        (union-carry widening applies: the cube's messages are the wide ones
+        sibling calibrations share), then parks the absorbed factor keyed by
+        the cube query's digest."""
+        q = self.derive(viz)
+        cq = self._cube_query(q, dim)
+        if cq is None:
+            return False
+        key = (viz, cq.digest)
+        if key in self._bin_cubes:
+            # refresh recency: the policy still predicts this cube, so it
+            # must outlive the churn of transient-σ builds (LRU, not FIFO).
+            # Register the dim on the entry regardless — when dim is already
+            # in the viz's γ, several (viz, dim) targets collapse to the SAME
+            # cube query (identical digest), and both the probe and the
+            # eviction bookkeeping need the full covered-dim set.
+            entry = self._bin_cubes.pop(key)
+            entry.dims.add(dim)
+            self._bin_cubes[key] = entry
+            self._cube_dims.setdefault(viz, set()).add(dim)
+            return False
+        engine = self._treant.engine_for(cq.ring_name, cq.measure)
+        self.store.tag = f"{self.id}:{viz}"
+        try:
+            factor, stats = engine.execute(cq)
+        finally:
+            self.store.tag = None
+        if dim not in factor.attrs:  # γ collapsed the dim away: not sliceable
+            return False
+        self._bin_cubes[key] = _BinCube(
+            factor=factor, query=cq, dim=dim, viz=viz,
+            nbytes=factor_nbytes(factor),
+        )
+        self._cube_dims.setdefault(viz, set()).add(dim)
+        self.scheduler.cube_builds += 1
+        self.scheduler.speculative_messages += stats.messages_computed
+        if engine.plans is not None:
+            engine.plans.stats.cube_builds += 1
+        self._evict_bin_cubes()
+        return True
+
+    def _match_bin_cube(self, viz: str, q: Query, hint: str | None = None):
+        """Find a parked cube covering ``q``: for each dim with a cube on
+        this viz, rebuild the cube key from the NEW query (only the σ on
+        that dim may differ) and return ``(entry, dim)`` on a digest match.
+        A σ-less match (the dim was just cleared) works too — the slice is
+        then a pure marginalization, so ClearFilter hits.
+
+        ``hint`` (the triggering event's dimension) is probed first: each
+        probe costs a Query rebuild + digest, and the brushed dim is the one
+        whose cube matches on the first try.  The q.digest → cube-key
+        derivation is memoized: revisited dashboard states (backtracks,
+        repeated jumps) skip the Query rebuild entirely.
+        """
+        dims = self._cube_dims.get(viz)
+        if not dims:
+            return None
+        order = sorted(dims)
+        if hint is not None and hint in dims:
+            order.remove(hint)
+            order.insert(0, hint)
+        for dim in order:
+            memo_key = (viz, dim, q.digest)
+            cd = self._cube_probe_memo.get(memo_key, _UNCACHED)
+            if cd is _UNCACHED:
+                cq = self._cube_query(q, dim)
+                cd = None if cq is None else cq.digest
+                if len(self._cube_probe_memo) > 4096:
+                    self._cube_probe_memo.clear()
+                self._cube_probe_memo[memo_key] = cd
+            if cd is None:
+                continue
+            entry = self._bin_cubes.pop((viz, cd), None)
+            if entry is None:
+                continue
+            self._bin_cubes[(viz, cd)] = entry  # LRU: hit refreshes
+            return entry, dim
+        return None
+
+    def _probe_bin_cube(self, viz: str, q: Query, hint: str | None = None):
+        """Match + slice in one step (the single-viz probe used by the
+        serving tier and tests; ``_fan_out`` batches its slices instead)."""
+        match = self._match_bin_cube(viz, q, hint)
+        if match is None:
+            return None
+        entry, dim = match
+        engine = self._treant.engine_for(q.ring_name, q.measure)
+        sliced = slice_bin_cube(
+            entry.factor, dim,
+            [p.mask for p in q.predicates_on(dim)], q.group_by,
+            stats=engine.plans.stats if engine.plans is not None else None,
+        )
+        self.bin_cube_hits += 1
+        return sliced
+
+    def _evict_bin_cubes(self) -> None:
+        """Capacity eviction, least-recently-used first: probe hits and
+        still-predicted rebuild skips refresh recency, so cubes built under
+        a transient σ (one-shot digests) age out ahead of the hot ones."""
+        cap = think_time_config().cube_capacity
+        while len(self._bin_cubes) > cap:
+            key = next(iter(self._bin_cubes))
+            self._drop_cube(key)
+
+    def _drop_cube(self, key: tuple[str, str]) -> None:
+        entry = self._bin_cubes.pop(key, None)
+        if entry is None:
+            return
+        dims = self._cube_dims.get(entry.viz)
+        if dims is None:
+            return
+        still = set()
+        for e in self._bin_cubes.values():
+            if e.viz == entry.viz:
+                still |= e.dims
+        for d in entry.dims - still:
+            dims.discard(d)
+        if not dims:
+            self._cube_dims.pop(entry.viz, None)
+
+    def invalidate_bin_cubes(self, changed) -> int:
+        """Drop every cube whose query can see one of the ``changed``
+        relations (mirrors the prefetch-cache invalidation on update/flush).
+        Returns the number of cubes dropped."""
+        stale = [
+            k for k, e in self._bin_cubes.items()
+            if any(self._treant._sees(e.query, r) for r in changed)
+        ]
+        for k in stale:
+            self._drop_cube(k)
+        return len(stale)
+
+    @property
+    def bin_cube_bytes(self) -> int:
+        return sum(e.nbytes for e in self._bin_cubes.values())
+
     # -- filters / introspection ----------------------------------------------
     @property
     def filters(self) -> Mapping[str, Predicate]:
@@ -1021,6 +1298,10 @@ class Session:
             "prefetched": len(self._prefetched),
             "prefetch_hits": self.prefetch_hits,
             "speculative_queries_total": self.scheduler.speculative_queries,
+            "bin_cubes": len(self._bin_cubes),
+            "bin_cube_hits": self.bin_cube_hits,
+            "bin_cube_bytes": self.bin_cube_bytes,
+            "trajectory": self.trajectory.state(),
         }
 
     def close(self) -> None:
@@ -1040,4 +1321,6 @@ class Session:
         self._pinned_queries.clear()
         self.store.drop_producer(f"{self.id}:")
         self._prefetched.clear()
+        self._bin_cubes.clear()
+        self._cube_dims.clear()
         self._treant._sessions.pop(self.id, None)

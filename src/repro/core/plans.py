@@ -47,6 +47,7 @@ it at hardware speed:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import os
 from typing import Callable, Sequence
 
@@ -206,6 +207,11 @@ class PlanStats:
     shard_execs: int = 0
     allreduce_bytes: int = 0
     shard_imbalance: float = 0.0
+    # bin cubes (core/predictive.py): think-time γ∪{dim} materializations
+    # built through this engine, and warm brushes served by slicing one
+    # (select + ⊕-marginalize — no plan execution, no store probe)
+    cube_builds: int = 0
+    cube_slices: int = 0
 
     # counters that are high-water marks, not sums: cross-engine aggregation
     # (Treant.cache_stats) takes max for these and Σ for everything else
@@ -216,6 +222,85 @@ class PlanStats:
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+@functools.lru_cache(maxsize=512)
+def _compiled_slice(dim: str, group_by: tuple[str, ...]):
+    """One jitted select∘project per (dim, γ): Factor is a pytree with
+    (attrs, ring) static, so jax.jit specializes per cube structure and the
+    warm brush costs a single compiled dispatch instead of one eager op per
+    σ mask plus the marginalization."""
+
+    def run(cube, masks):
+        f = cube
+        for m in masks:
+            f = f.select(dim, m)
+        return f.project_to(group_by)
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=1024)
+def _device_mask(data: bytes, shape: tuple[int, ...], dtype: str):
+    """Content-addressed device copy of a σ mask: the same predicate fans
+    out to every sibling viz, so without this each viz pays its own
+    host→device transfer of an identical (tiny) mask."""
+    return jnp.asarray(np.frombuffer(data, dtype=dtype).reshape(shape))
+
+
+def _to_device_masks(masks) -> tuple:
+    out = []
+    for m in masks:
+        arr = np.asarray(m)
+        out.append(_device_mask(arr.tobytes(), arr.shape, str(arr.dtype)))
+    return tuple(out)
+
+
+def slice_bin_cube(cube, dim: str, masks, group_by, stats: PlanStats | None = None):
+    """Serve a brush from a parked γ∪{dim} bin cube: σ as ``select`` (0̄ is
+    the ⊕-identity, so zero-annotating non-matching bins is exact for every
+    semiring) then ⊕-marginalize ``dim`` away via ``project_to``.  With no
+    masks this serves ``ClearFilter`` (pure marginalization).  O(bins) array
+    work — no store probes, no plan executions."""
+    fn = _compiled_slice(dim, tuple(group_by))
+    f = fn(cube, _to_device_masks(masks))
+    if stats is not None:
+        stats.cube_slices += 1
+    return f
+
+
+@functools.lru_cache(maxsize=512)
+def _compiled_slice_batch(spec: tuple):
+    """One jitted call covering a whole fan-out of cube slices: ``spec`` is
+    a tuple of (dim, group_by) per viz, the cubes/masks ride in as pytrees.
+    A 7-viz crossfilter brush costs ONE compiled dispatch instead of seven —
+    the cube analog of ``batch_fanout``'s vmapped absorption groups."""
+
+    def run(cubes, masks_list):
+        outs = []
+        for (dim, group_by), cube, masks in zip(spec, cubes, masks_list):
+            f = cube
+            for m in masks:
+                f = f.select(dim, m)
+            outs.append(f.project_to(group_by))
+        return tuple(outs)
+
+    return jax.jit(run)
+
+
+def slice_bin_cubes(items, stats: PlanStats | None = None) -> list:
+    """Batched :func:`slice_bin_cube`: ``items`` is a list of
+    (cube_factor, dim, masks, group_by); returns the sliced factors in
+    order, produced by a single compiled dispatch."""
+    spec = tuple((dim, tuple(gb)) for _, dim, _, gb in items)
+    fn = _compiled_slice_batch(spec)
+    outs = fn(
+        tuple(c for c, _, _, _ in items),
+        tuple(_to_device_masks(m) for _, _, m, _ in items),
+    )
+    if stats is not None:
+        stats.cube_slices += len(items)
+    return list(outs)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -62,6 +62,7 @@ from .dashboard import (
     VizSpec,
 )
 from .hypertree import JTree, jt_from_catalog
+from .predictive import DrainCalibration, ThinkTimeBudget, ThinkTimePolicy
 from .query import Query
 
 __all__ = [
@@ -137,6 +138,7 @@ class Treant:
         fuse_level_kernel: bool | None = None,
         compaction_threshold: float | None = None,
         mesh=None,
+        policy: ThinkTimePolicy | None = None,
     ):
         # None → env defaults: REPRO_USE_PLANS gates compiled plans (the CI
         # matrix runs both legs), REPRO_BATCH_FANOUT gates the vmapped
@@ -183,6 +185,13 @@ class Treant:
         # ring name -> engine; siblings share the store (per-ring plan caches)
         self._engines: dict[str, CJTEngine] = {ring.name: self.engine}
         self.scheduler = ThinkTimeScheduler()
+        # default think-time policy for sessions that don't set their own
+        # (Session.idle(policy=) > Session.policy > this); DrainCalibration
+        # preserves the historical idle() behavior exactly
+        self.think_time_policy: ThinkTimePolicy = (
+            policy if policy is not None else DrainCalibration()
+        )
+        self._sees_attr_memo: dict[tuple[str, tuple[str, ...]], bool] = {}
         self._dashboards: dict[str, Query] = {}
         self._sessions: dict[str, Session] = {}
         self._session_seq = 0  # monotonic: closed sessions never recycle ids
@@ -322,6 +331,35 @@ class Treant:
         """Can ``relation``'s data reach this query's answer?"""
         return relation not in q.removed and relation in self.jt.mapping
 
+    def sees_attr(self, q: Query, attr: str) -> bool:
+        """Does any relation still in this query's join scope carry ``attr``?
+
+        ``ToggleRelation`` can remove the only relation holding a brushed
+        dimension; a σ on that attr is then unplaceable (predicate placement
+        would land on a bag none of whose visible relations has the column).
+        Speculation and cube building skip such (query, attr) pairs.
+
+        Memoized on (attr, removed-set): the answer depends only on the join
+        tree and relation schemas, both fixed for this Treant's lifetime, and
+        ``derive`` asks per filter per viz on every event.
+        """
+        key = (attr, tuple(sorted(q.removed)))
+        hit = self._sees_attr_memo.get(key)
+        if hit is not None:
+            return hit
+        out = False
+        for bag in self.jt.bags_with_attr(attr):
+            for rel in self.jt.relations_of(bag):
+                if rel in q.removed:
+                    continue
+                if attr in self.catalog.get(rel).attrs:
+                    out = True
+                    break
+            if out:
+                break
+        self._sees_attr_memo[key] = out
+        return out
+
     def _ingest(
         self, deltas: list[Delta], deprioritized: bool = False
     ) -> list[UpdateResult]:
@@ -412,6 +450,9 @@ class Treant:
                 k: e for k, e in sess._prefetched.items()
                 if not any(self._sees(e.query, r) for r in changed)
             }
+            # bin cubes invalidate under the same rule: only a cube whose
+            # query can see an updated relation is stale
+            sess.invalidate_bin_cubes(changed)
             for viz, q in sess._current.items():
                 engine = self.engine_for(q.ring_name, q.measure)
                 dep = deprioritized and not engine.is_calibrated(q)
@@ -540,9 +581,11 @@ class Treant:
         sess = self._legacy_viz(session, viz)
         q = sess._current[viz]
         self.scheduler.schedule(session, viz, q, self.engine_for(q.ring_name, q.measure))
-        return self.scheduler.run(
-            budget_messages=budget_messages, budget_seconds=budget_seconds,
-            session=session, viz=viz,
+        return self.think_time_policy.run(
+            sess,
+            ThinkTimeBudget(
+                messages=budget_messages, seconds=budget_seconds, viz=viz,
+            ),
         )
 
     # -- introspection ---------------------------------------------------------------
@@ -567,6 +610,15 @@ class Treant:
             "sessions": len(self._sessions),
             "watermark": self.catalog.watermark,
             "ingest": ingest,
+            # bin cubes parked across all sessions (the per-dimension
+            # think-time materializations of core/predictive.py)
+            "bin_cubes": sum(len(s._bin_cubes) for s in self._sessions.values()),
+            "bin_cube_bytes": sum(
+                s.bin_cube_bytes for s in self._sessions.values()
+            ),
+            "bin_cube_hits": sum(
+                s.bin_cube_hits for s in self._sessions.values()
+            ),
         }
         if self._server is not None:
             out["serve"] = self._server.stats()

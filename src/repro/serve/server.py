@@ -35,9 +35,12 @@ engine into a serving tier:
 
 - **Server-driven think-time.**  ``idle`` uses empty-queue capacity to run
   background ``flush()`` ticks (streaming ingest moves off the caller
-  thread), drain the shared :class:`ThinkTimeScheduler`, and optionally
-  speculate around each session's last brush, parking fan-outs in a
-  *shared* prefetch pool any session may hit.
+  thread), drain the shared :class:`ThinkTimeScheduler`, and run the
+  configured :class:`~repro.core.predictive.ThinkTimePolicy`'s speculative
+  extras per session — σ-prefetch fan-outs and bin cubes both land in a
+  *shared* pool any session may hit (a pooled γ∪{dim} cube serves every σ
+  on its dimension, not just the parked digest).  The legacy
+  ``TreantServer(speculate=k)`` deprecation-shims onto ``FixedKPrefetch(k)``.
 
 Counters surface through ``Treant.cache_stats()['serve']``.
 """
@@ -45,12 +48,20 @@ Counters surface through ``Treant.cache_stats()['serve']``.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Iterable
 
 import jax
 
 from repro.core.calibration import CJTEngine, ExecStats
+from repro.core.plans import slice_bin_cube
+from repro.core.predictive import (
+    FixedKPrefetch,
+    ThinkTimeBudget,
+    ThinkTimePolicy,
+    warn_deprecated_once,
+)
 from repro.core.dashboard import (
     ApplyResult,
     ClearFilter,
@@ -85,6 +96,7 @@ class ServeStats:
     cross_session_batch_width: int = 0  # max distinct sessions in one dispatch
     dedup_hits: int = 0               # events served by a sibling's execution
     shared_prefetch_hits: int = 0     # events served from the shared pool
+    pool_cube_hits: int = 0           # events sliced from a pooled bin cube
     pool_evictions: int = 0           # shared-pool entries dropped at capacity
     background_flushes: int = 0       # flush() ticks run off the caller thread
     think_time_messages: int = 0      # calibration edges advanced while idle
@@ -104,12 +116,15 @@ class _Pooled:
 
     ``cost`` estimates what re-materializing the entry would take (rows the
     query's join sees); ``hot`` marks entries hit in the current micro-batch
-    so they are never evicted before the batch's siblings finish reading."""
+    so they are never evicted before the batch's siblings finish reading.
+    ``dim`` is set on bin-cube entries (the γ∪{dim} aggregate is sliceable
+    for ANY σ on that dimension, not just the exact parked digest)."""
 
     factor: object
     query: Query
     cost: float = 0.0
     hot: bool = False
+    dim: str | None = None
 
 
 class ServerSession:
@@ -165,6 +180,7 @@ class TreantServer:
         think_budget_messages: int = 64,
         speculate: int = 0,
         pool_capacity: int = 256,
+        policy: ThinkTimePolicy | None = None,
     ):
         if backpressure not in ("drain", "reject"):
             raise ValueError(f"unknown backpressure policy {backpressure!r}")
@@ -173,6 +189,16 @@ class TreantServer:
         self.backpressure = backpressure
         self.think_budget_messages = think_budget_messages
         self.speculate = speculate
+        if speculate:
+            warn_deprecated_once(
+                "TreantServer(speculate=)",
+                "TreantServer(speculate=k) is deprecated; pass "
+                "policy=FixedKPrefetch(k) instead",
+            )
+            if policy is None:
+                policy = FixedKPrefetch(speculate)
+        # None falls back to the Treant's default policy at each idle tick
+        self.policy = policy
         self.pool_capacity = pool_capacity
         if max_store_bytes is not None:
             treant.store.max_bytes = max_store_bytes
@@ -336,8 +362,12 @@ class TreantServer:
         results: dict[tuple[str, str], InteractionResult] = {}
         # 1) prefetch: session-local first (exact _fan_out semantics), then
         #    the server's shared pool (any session may hit another's parked
-        #    speculation — digests are session-agnostic)
+        #    speculation — digests are session-agnostic), then bin cubes —
+        #    session-local and pooled — which cover ANY σ on their dimension
         to_exec: list[tuple[ServerSession, str, Query]] = []
+        pool_dims = sorted({
+            e.dim for e in self._pool.values() if e.dim is not None
+        })
         for handle, viz, q in work:
             sess = handle.session
             hit = sess._prefetched.pop((viz, q.digest), None)
@@ -357,6 +387,18 @@ class TreantServer:
                 pooled.hot = True
                 results[(handle.id, viz)] = InteractionResult(
                     pooled.factor, ExecStats(prefetch_hits=1), 0.0, 0
+                )
+                continue
+            sliced = sess._probe_bin_cube(viz, q)
+            if sliced is not None:
+                results[(handle.id, viz)] = InteractionResult(
+                    sliced, ExecStats(bin_cube_hits=1), 0.0, 0
+                )
+                continue
+            sliced = self._probe_pool_cube(sess, q, pool_dims)
+            if sliced is not None:
+                results[(handle.id, viz)] = InteractionResult(
+                    sliced, ExecStats(bin_cube_hits=1), 0.0, 0
                 )
                 continue
             to_exec.append((handle, viz, q))
@@ -451,16 +493,42 @@ class TreantServer:
                   engine: CJTEngine) -> None:
         self.treant.scheduler.schedule(handle.id, viz, q, engine)
 
+    def _probe_pool_cube(self, sess: Session, q: Query, pool_dims):
+        """Serve ``q`` from a pooled bin cube (possibly another session's):
+        for each dimension with a cube in the pool, rebuild the cube digest
+        from the incoming query and slice on a match."""
+        for dim in pool_dims:
+            cq = sess._cube_query(q, dim)
+            if cq is None:
+                continue
+            entry = self._pool.get(cq.digest)
+            if entry is None or entry.dim != dim:
+                continue
+            del self._pool[cq.digest]  # recency refresh + batch shield
+            self._pool[cq.digest] = entry
+            entry.hot = True
+            self.stats_.pool_cube_hits += 1
+            sess.bin_cube_hits += 1
+            engine = self.treant.engine_for(q.ring_name, q.measure)
+            return slice_bin_cube(
+                entry.factor, dim,
+                [p.mask for p in q.predicates_on(dim)], q.group_by,
+                stats=engine.plans.stats if engine.plans is not None else None,
+            )
+        return None
+
     # -- server-driven think-time ----------------------------------------------
     def idle(self, budget_messages: int | None = None) -> int:
         """Spend empty-queue capacity on background work.
 
-        Runs pending ``flush()`` ticks (streaming ingest moves off the
-        caller thread), drains the shared think-time scheduler under
-        ``budget_messages`` (default: the server's configured budget), and
-        — when ``speculate`` is configured — pre-materializes fan-outs
-        around each session's last brush into the shared pool.  Returns the
-        number of calibration edges advanced.
+        Background flush always runs first (queued stream data makes every
+        other think-time item stale), then ONE global scheduler drain under
+        ``budget_messages`` (default: the server's configured budget), then
+        the think-time policy's speculative extras per session
+        (``self.policy``, else the Treant's default) — σ prefetch and/or bin
+        cubes, both published into the shared pool so ANY session hitting
+        the same digest (or any σ on a pooled cube's dimension) is served.
+        Returns the number of calibration edges advanced.
         """
         if self._queue:
             return 0  # queued interactive work always wins
@@ -475,11 +543,13 @@ class TreantServer:
         )
         done = self.treant.scheduler.run(budget_messages=budget)
         self.stats_.think_time_messages += done
-        if self.speculate > 0:
-            for sid in sorted(self._sessions):
-                handle = self._sessions[sid]
-                handle.session._speculate(self.speculate)
-                self._absorb_prefetch(handle.session)
+        policy = self.policy or self.treant.think_time_policy
+        extras_budget = ThinkTimeBudget()
+        for sid in sorted(self._sessions):
+            sess = self._sessions[sid].session
+            policy.extras(sess, extras_budget, time.perf_counter())
+            self._absorb_prefetch(sess)
+            self._absorb_cubes(sess)
         return done
 
     def _absorb_prefetch(self, sess: Session) -> None:
@@ -499,6 +569,24 @@ class TreantServer:
                 self._pool[digest] = _Pooled(
                     entry.factor, entry.query, cost=self._recompute_cost(entry.query)
                 )
+        self._evict_pool()
+
+    def _absorb_cubes(self, sess: Session) -> None:
+        """Publish a session's parked bin cubes into the shared pool.
+
+        A pooled cube serves any session whose derived query matches the
+        cube query modulo the σ on its dimension — the server's fan-out
+        probes pool entries carrying ``dim`` by rebuilding the cube digest
+        from the incoming query (see ``_probe_pool_cube``)."""
+        for (_viz, digest), cube in sess._bin_cubes.items():
+            if digest not in self._pool:
+                self._pool[digest] = _Pooled(
+                    cube.factor, cube.query,
+                    cost=self._recompute_cost(cube.query), dim=cube.dim,
+                )
+        self._evict_pool()
+
+    def _evict_pool(self) -> None:
         WINDOW = 8
         while len(self._pool) > self.pool_capacity:
             window: list[tuple[float, int, str]] = []

@@ -1,0 +1,478 @@
+"""Predictive think-time policy + bin cubes (ISSUE 10 tentpole).
+
+Correctness spine: a brush served by slicing a parked γ∪{dim} bin cube
+(``Factor.select`` per σ mask, then ⊕-marginalize the dim away) must be
+**bit-identical** to cold execution — across rings (SUM/COUNT/MIN/MAX/
+MOMENTS) and tree shapes (chain/star/bushy).  Measures are small integers,
+exactly representable in f32, so every ⊕-order yields the same bits (same
+convention as tests/test_level_calibration.py).
+
+Plus the API-redesign satellites: the unified ``ThinkTimePolicy`` surface
+(``speculate=k`` ≡ ``FixedKPrefetch(k)`` parity, DeprecationWarning exactly
+once), the one-place typed think-time config with env overrides, cube
+invalidation selectivity on update/flush, the trajectory model, and the
+server pool admitting cubes.
+"""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401 — import order (core before relational)
+from repro.core import (
+    BrushTrajectory,
+    ClearFilter,
+    DashboardSpec,
+    DrainCalibration,
+    FixedKPrefetch,
+    PredictiveThinkTime,
+    SetFilter,
+    Treant,
+    VizSpec,
+    reset_deprecation_warnings,
+    reset_think_time_config,
+    think_time_config,
+)
+from repro.core import semiring as sr
+from repro.relational.relation import Catalog, Relation
+
+RINGS = ("count", "sum", "tropical_min", "tropical_max", "moments")
+
+
+def _rel(name, attrs, doms, n, rng, measure=False):
+    codes = {a: rng.integers(0, doms[a], n).astype(np.int32) for a in attrs}
+    measures = (
+        {"m": rng.integers(0, 16, n).astype(np.float32)} if measure else {}
+    )
+    return Relation(name, tuple(attrs), codes, doms, measures=measures)
+
+
+def chain_catalog(seed=0):
+    rng = np.random.default_rng(seed)
+    doms = {"a": 6, "b": 7, "c": 5, "d": 8}
+    return Catalog([
+        _rel("F", ("a", "b"), doms, 500, rng, measure=True),
+        _rel("S", ("b", "c"), doms, 60, rng),
+        _rel("T", ("c", "d"), doms, 40, rng),
+    ]), "d"
+
+
+def star_catalog(seed=0):
+    rng = np.random.default_rng(seed)
+    doms = {"a": 13, "b": 7, "c": 10, "d": 5, "e": 9}
+    return Catalog([
+        _rel("F", ("a", "b"), doms, 600, rng, measure=True),
+        _rel("S", ("b", "c"), doms, 77, rng),
+        _rel("T", ("a", "d"), doms, 29, rng),
+        _rel("U", ("b", "e"), doms, 41, rng),
+    ]), "c"
+
+
+def bushy_catalog(seed=0):
+    rng = np.random.default_rng(seed)
+    doms = {"a": 6, "b": 7, "c": 5, "d": 8, "e": 4, "g": 9}
+    return Catalog([
+        _rel("F", ("a", "b"), doms, 400, rng, measure=True),
+        _rel("S", ("b", "c"), doms, 70, rng),
+        _rel("T", ("c", "d"), doms, 50, rng),
+        _rel("A", ("a", "e"), doms, 30, rng),
+        _rel("D", ("d", "g"), doms, 35, rng),
+    ]), "g"
+
+
+SHAPES = {"chain": chain_catalog, "star": star_catalog, "bushy": bushy_catalog}
+
+
+def two_viz_spec(ring, dim):
+    """"main" grouped by a, plus the brush-source viz on ``dim`` (source
+    exclusion keeps its own dimension unfiltered, crossfilter-style)."""
+    measure = None if ring == "count" else ("F", "m")
+    return DashboardSpec(vizzes=(
+        VizSpec("main", measure=measure, ring=ring, group_by=("a",)),
+        VizSpec("brush_src", measure=measure, ring=ring, group_by=(dim,)),
+    ))
+
+
+def assert_factor_equal(f1, f2):
+    assert f1.attrs == f2.attrs
+    l1 = jax.tree_util.tree_leaves(f1.field)
+    l2 = jax.tree_util.tree_leaves(f2.field)
+    assert len(l1) == len(l2)
+    for a, b in zip(l1, l2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _plan_execs(t):
+    st = t.cache_stats()
+    p = st.get("plans")
+    return (p["plans_built"] + p["plan_hits"]) if p else 0
+
+
+@pytest.fixture(autouse=True)
+def _fresh_config(monkeypatch):
+    reset_think_time_config()
+    yield
+    reset_think_time_config()
+
+
+# ---------------------------------------------------------------------------
+# tentpole: cube slice ≡ cold execution, bit-identical (rings × shapes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ring", RINGS)
+@pytest.mark.parametrize("shape", sorted(SHAPES))
+def test_cube_slice_matches_cold_execution(ring, shape):
+    cat, dim = SHAPES[shape](seed=11)
+    spec = two_viz_spec(ring, dim)
+    primary = sr.SUM if ring in ("count", "sum") else sr.get(ring)
+    t = Treant(cat, ring=primary, use_plans=True)
+    sess = t.open_session(spec, name="s")
+    dom = cat.domains()[dim]
+    sess.apply(SetFilter(dim, lo=0, hi=max(dom // 2, 1), source="brush_src"))
+    assert sess._build_bin_cube("main", dim)
+    # several σ shapes on the cube dimension: range, IN-list, full clear
+    events = [
+        SetFilter(dim, lo=1, hi=dom, source="brush_src"),
+        SetFilter(dim, values=(0, dom - 1), source="brush_src"),
+        ClearFilter(dim),
+    ]
+    cold_t = Treant(SHAPES[shape](seed=11)[0], ring=primary, use_plans=True)
+    cold = cold_t.open_session(spec, name="cold")
+    for ev in events:
+        warm_res = sess.apply(ev)
+        cold_res = cold.apply(ev)
+        assert warm_res.affected == cold_res.affected == ("main",)
+        st = warm_res.results["main"].stats
+        assert st.bin_cube_hits == 1, f"{ev} missed the cube"
+        assert_factor_equal(
+            warm_res.results["main"].factor, cold_res.results["main"].factor
+        )
+    sess.close()
+    cold.close()
+
+
+# ---------------------------------------------------------------------------
+# tentpole acceptance: 0 plan executions, 0 store probes on a warm brush
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_plans", [False, True])
+def test_warm_brush_zero_executions_zero_store_probes(use_plans):
+    cat, dim = star_catalog(seed=23)
+    t = Treant(cat, ring=sr.SUM, use_plans=use_plans)
+    sess = t.open_session(two_viz_spec("sum", dim), name="s")
+    sess.apply(SetFilter(dim, lo=2, hi=5, source="brush_src"))
+    sess.idle(policy=PredictiveThinkTime(prefetch_k=0))
+    assert sess._bin_cubes, "predictive idle built no cube"
+    store = t.store
+    probes0 = (store.hits, store.misses, store.widen_hits)
+    execs0 = _plan_execs(t)
+    res = sess.apply(SetFilter(dim, lo=7, hi=9, source="brush_src"))
+    assert res.affected == ("main",)
+    assert res.results["main"].stats.bin_cube_hits == 1
+    assert sess.bin_cube_hits == 1
+    assert (store.hits, store.misses, store.widen_hits) == probes0, (
+        "cube-served brush probed the message store"
+    )
+    assert _plan_execs(t) == execs0, "cube-served brush executed a plan"
+    sess.close()
+
+
+# ---------------------------------------------------------------------------
+# invalidation selectivity on update / flush
+# ---------------------------------------------------------------------------
+
+def _star_cube_session(seed, **viz_kwargs):
+    cat, dim = star_catalog(seed=seed)
+    t = Treant(cat, ring=sr.SUM, use_plans=True, compaction_threshold=0.0)
+    spec = DashboardSpec(vizzes=(
+        VizSpec("sees_u", measure=("F", "m"), ring="sum", group_by=("a",)),
+        VizSpec("blind_u", measure=("F", "m"), ring="sum", group_by=("d",),
+                removed=("U",)),
+        VizSpec("brush_src", measure=("F", "m"), ring="sum", group_by=(dim,)),
+    ))
+    sess = t.open_session(spec, name="s")
+    sess.apply(SetFilter(dim, lo=2, hi=6, source="brush_src"))
+    assert sess._build_bin_cube("sees_u", dim)
+    assert sess._build_bin_cube("blind_u", dim)
+    return cat, t, sess, dim
+
+
+def test_update_invalidates_only_cubes_that_see_the_relation():
+    cat, t, sess, dim = _star_cube_session(seed=31)
+    rng = np.random.default_rng(0)
+    u = cat.get("U")
+    new_u, delta = u.append_rows(
+        {a: rng.integers(0, u.domains[a], 10).astype(np.int32) for a in u.attrs}
+    )
+    t.update(new_u, delta)
+    vizzes = {viz for viz, _ in sess._bin_cubes}
+    assert vizzes == {"blind_u"}, (
+        f"update kept/dropped the wrong cubes: {vizzes}"
+    )
+    # the survivor still serves, bit-identically to cold post-update state
+    res = sess.apply(SetFilter(dim, lo=0, hi=3, source="brush_src"))
+    assert res.results["blind_u"].stats.bin_cube_hits == 1
+    assert res.results["sees_u"].stats.bin_cube_hits == 0
+    cold = t.open_session(DashboardSpec(vizzes=(
+        VizSpec("blind_u", measure=("F", "m"), ring="sum", group_by=("d",),
+                removed=("U",)),
+        VizSpec("brush_src", measure=("F", "m"), ring="sum", group_by=(dim,)),
+    )), name="cold")
+    cres = cold.apply(SetFilter(dim, lo=0, hi=3, source="brush_src"))
+    assert_factor_equal(
+        res.results["blind_u"].factor, cres.results["blind_u"].factor
+    )
+    sess.close()
+    cold.close()
+
+
+def test_flush_invalidates_only_cubes_that_see_the_relation():
+    cat, t, sess, dim = _star_cube_session(seed=37)
+    rng = np.random.default_rng(1)
+    u = cat.get("U")
+    t.stream("U").append(
+        {a: rng.integers(0, u.domains[a], 6).astype(np.int32) for a in u.attrs}
+    )
+    t.flush()
+    assert {viz for viz, _ in sess._bin_cubes} == {"blind_u"}
+    sess.close()
+
+
+# ---------------------------------------------------------------------------
+# API redesign: deprecation shims + FixedKPrefetch parity
+# ---------------------------------------------------------------------------
+
+def test_speculate_kwarg_equals_fixed_k_policy():
+    """idle(speculate=k) and idle(policy=FixedKPrefetch(k)) must park the
+    exact same (viz, digest) entries."""
+    def parked(policy=None, speculate=0):
+        cat, dim = star_catalog(seed=41)
+        t = Treant(cat, ring=sr.SUM, use_plans=True)
+        sess = t.open_session(two_viz_spec("sum", dim), name="s")
+        sess.apply(SetFilter(dim, lo=3, hi=5, source="brush_src"))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            sess.idle(speculate=speculate, policy=policy)
+        keys = sorted(sess._prefetched)
+        dists = [sess._prefetched[k].dist for k in keys]
+        sess.close()
+        return keys, dists
+
+    assert parked(speculate=3) == parked(policy=FixedKPrefetch(3))
+
+
+def test_deprecated_kwargs_warn_exactly_once():
+    reset_deprecation_warnings()
+    cat, dim = star_catalog(seed=43)
+    t = Treant(cat, ring=sr.SUM, use_plans=False)
+    sess = t.open_session(two_viz_spec("sum", dim), name="s", calibrate=False)
+    sess.apply(SetFilter(dim, lo=1, hi=3, source="brush_src"))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        sess.idle(speculate=1)
+        sess.idle(speculate=2)   # second use: silent
+        sess.idle(speculate=1)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1, f"expected exactly one DeprecationWarning, got {len(dep)}"
+    assert "FixedKPrefetch" in str(dep[0].message)
+    # the server kwarg is a distinct key: warns once too, independently
+    from repro.serve import TreantServer
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        TreantServer(t, speculate=2)
+        TreantServer(t, speculate=3)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    sess.close()
+
+
+def test_default_idle_is_pure_drain():
+    """idle() with no policy stays calibration-only: no speculation, no
+    cubes (behavior of every pre-policy caller)."""
+    cat, dim = star_catalog(seed=47)
+    t = Treant(cat, ring=sr.SUM, use_plans=True)
+    assert isinstance(t.think_time_policy, DrainCalibration)
+    sess = t.open_session(two_viz_spec("sum", dim), name="s")
+    sess.apply(SetFilter(dim, lo=2, hi=4, source="brush_src"))
+    sess.idle()
+    assert not sess._prefetched and not sess._bin_cubes
+    assert t.scheduler.policy_decisions == 0
+    sess.close()
+
+
+def test_treant_level_policy_default_applies_to_sessions():
+    cat, dim = star_catalog(seed=53)
+    t = Treant(cat, ring=sr.SUM, use_plans=True,
+               policy=PredictiveThinkTime(prefetch_k=0))
+    sess = t.open_session(two_viz_spec("sum", dim), name="s")
+    sess.apply(SetFilter(dim, lo=2, hi=4, source="brush_src"))
+    sess.idle()
+    assert sess._bin_cubes, "Treant(policy=) default was not applied by idle()"
+    assert t.scheduler.policy_decisions > 0
+    sess.close()
+
+
+# ---------------------------------------------------------------------------
+# API redesign: one typed config, env overrides win
+# ---------------------------------------------------------------------------
+
+def test_think_time_config_env_overrides(monkeypatch):
+    monkeypatch.setenv("REPRO_PREFETCH_CAPACITY", "7")
+    monkeypatch.setenv("REPRO_PREFETCH_K", "5")
+    monkeypatch.setenv("REPRO_BIN_CUBE", "0")
+    monkeypatch.setenv("REPRO_BIN_CUBE_MAX_DIMS", "2")
+    monkeypatch.setenv("REPRO_BIN_CUBE_CAPACITY", "9")
+    monkeypatch.setenv("REPRO_BIN_CUBE_CELLS", "123")
+    reset_think_time_config()
+    cfg = think_time_config()
+    assert (cfg.prefetch_capacity, cfg.prefetch_k) == (7, 5)
+    assert cfg.bin_cubes is False
+    assert (cfg.cube_builds_per_idle, cfg.cube_capacity) == (2, 9)
+    assert cfg.cube_cell_budget == 123
+    # the resolved config seeds new sessions
+    cat, dim = star_catalog(seed=59)
+    t = Treant(cat, ring=sr.SUM, use_plans=False)
+    sess = t.open_session(two_viz_spec("sum", dim), name="s", calibrate=False)
+    assert sess.prefetch_capacity == 7
+    # REPRO_BIN_CUBE=0 disables builds even under the predictive policy
+    sess.apply(SetFilter(dim, lo=2, hi=4, source="brush_src"))
+    sess.idle(policy=PredictiveThinkTime(prefetch_k=0))
+    assert not sess._bin_cubes
+    sess.close()
+
+
+def test_cube_cell_budget_derives_from_union_budget(monkeypatch):
+    monkeypatch.setenv("REPRO_CALIBRATION_UNION_BUDGET", "100")
+    monkeypatch.delenv("REPRO_BIN_CUBE_CELLS", raising=False)
+    reset_think_time_config()
+    cfg = think_time_config()
+    assert cfg.union_budget == 100
+    assert cfg.cube_cell_budget == 32 * 100
+    # an explicit REPRO_BIN_CUBE_CELLS still wins over the derivation
+    monkeypatch.setenv("REPRO_BIN_CUBE_CELLS", "50")
+    reset_think_time_config()
+    assert think_time_config().cube_cell_budget == 50
+
+
+def test_cube_cell_budget_caps_builds(monkeypatch):
+    monkeypatch.setenv("REPRO_BIN_CUBE_CELLS", "4")  # 13·10 cells ≫ 4
+    reset_think_time_config()
+    cat, dim = star_catalog(seed=61)
+    t = Treant(cat, ring=sr.SUM, use_plans=False)
+    sess = t.open_session(two_viz_spec("sum", dim), name="s", calibrate=False)
+    sess.apply(SetFilter(dim, lo=2, hi=4, source="brush_src"))
+    assert not sess._build_bin_cube("main", dim)
+    assert not sess._bin_cubes
+    sess.close()
+
+
+# ---------------------------------------------------------------------------
+# trajectory model
+# ---------------------------------------------------------------------------
+
+def test_trajectory_direction_biases_candidates():
+    tr = BrushTrajectory()
+    for i, t0 in enumerate(range(3)):
+        tr.observe(SetFilter("x", lo=2 + 2 * i, hi=4 + 2 * i), now=float(t0))
+    assert tr.direction["x"] > 0
+    cands = tr.next_filters(domain=20, k=2)
+    # steady upward drift: both predicted windows continue up-domain
+    assert all(c.lo > 6 for c in cands), [(c.lo, c.hi) for c in cands]
+    # downward drift flips the bias
+    tr2 = BrushTrajectory()
+    for i, t0 in enumerate(range(3)):
+        tr2.observe(SetFilter("x", lo=14 - 2 * i, hi=16 - 2 * i), now=float(t0))
+    assert tr2.direction["x"] < 0
+    cands2 = tr2.next_filters(domain=20, k=2)
+    assert all(c.lo < 10 for c in cands2), [(c.lo, c.hi) for c in cands2]
+
+
+def test_trajectory_switch_probability_and_ranking():
+    tr = BrushTrajectory()
+    # strict alternation x, y, x, y → high switch probability → the
+    # *previous* dimension outranks the latest
+    for i, attr in enumerate(["x", "y", "x", "y"]):
+        tr.observe(SetFilter(attr, lo=0, hi=2, source=f"src_{attr}"), now=float(i))
+    assert tr.switch_prob > 0.5
+    assert tr.ranked_dims()[0] == "x"
+    assert tr.source_of("y") == "src_y"
+    # dwelling on one dimension → low switch probability → it stays first
+    tr2 = BrushTrajectory()
+    for i in range(4):
+        tr2.observe(SetFilter("x", lo=i, hi=i + 2), now=float(i))
+    assert tr2.switch_prob < 0.5
+    assert tr2.ranked_dims()[0] == "x"
+
+
+def test_predictive_policy_skips_brush_source_viz():
+    """The dim's source viz never carries that σ (source exclusion), so no
+    cube for (source viz, dim) is ever built."""
+    cat, dim = star_catalog(seed=67)
+    t = Treant(cat, ring=sr.SUM, use_plans=True)
+    sess = t.open_session(two_viz_spec("sum", dim), name="s")
+    sess.apply(SetFilter(dim, lo=2, hi=5, source="brush_src"))
+    sess.idle(policy=PredictiveThinkTime(prefetch_k=0))
+    assert all(e.viz != "brush_src" for e in sess._bin_cubes.values())
+    sess.close()
+
+
+# ---------------------------------------------------------------------------
+# serving tier: pooled cubes serve ANY session
+# ---------------------------------------------------------------------------
+
+def test_server_pool_cube_serves_sibling_session():
+    from repro.serve import TreantServer
+
+    cat, dim = star_catalog(seed=71)
+    t = Treant(cat, ring=sr.SUM, use_plans=True)
+    server = TreantServer(t, policy=PredictiveThinkTime(prefetch_k=0))
+    spec = two_viz_spec("sum", dim)
+    h1 = server.open_session(spec, name="u1")
+    h2 = server.open_session(spec, name="u2")
+    h1.submit(SetFilter(dim, lo=2, hi=5, source="brush_src"))
+    server.step()
+    server.idle()  # builds u1's cube and publishes it into the pool
+    assert any(e.dim == dim for e in server._pool.values()), (
+        "idle did not pool the bin cube"
+    )
+    # a DIFFERENT session brushes a σ nobody prefetched: pooled-cube slice
+    h2.submit(SetFilter(dim, lo=7, hi=9, source="brush_src"))
+    server.step()
+    res = h2.last_result
+    assert res.affected == ("main",)
+    assert res.results["main"].stats.bin_cube_hits == 1
+    assert server.stats_.pool_cube_hits == 1
+    # bit-identical to a cold session applying the same brush
+    cold_t = Treant(star_catalog(seed=71)[0], ring=sr.SUM, use_plans=True)
+    cold = cold_t.open_session(spec, name="cold")
+    cres = cold.apply(SetFilter(dim, lo=7, hi=9, source="brush_src"))
+    assert_factor_equal(
+        res.results["main"].factor, cres.results["main"].factor
+    )
+    cold.close()
+    server.close_session("u1")
+    server.close_session("u2")
+
+
+def test_session_stats_and_cache_stats_surface_cube_counters():
+    cat, dim = star_catalog(seed=73)
+    t = Treant(cat, ring=sr.SUM, use_plans=True)
+    sess = t.open_session(two_viz_spec("sum", dim), name="s")
+    sess.apply(SetFilter(dim, lo=2, hi=5, source="brush_src"))
+    sess.idle(policy=PredictiveThinkTime(prefetch_k=0))
+    sess.apply(SetFilter(dim, lo=6, hi=8, source="brush_src"))
+    st = sess.stats()
+    assert st["bin_cubes"] >= 1 and st["bin_cube_hits"] == 1
+    assert st["bin_cube_bytes"] > 0
+    assert st["trajectory"]["events"] == 2
+    cs = t.cache_stats()
+    assert cs["bin_cube_hits"] == 1 and cs["bin_cube_bytes"] > 0
+    assert cs["scheduler"]["cube_builds"] >= 1
+    assert cs["scheduler"]["policy_decisions"] > 0
+    assert cs["plans"]["cube_builds"] >= 1
+    assert cs["plans"]["cube_slices"] == 1
+    sess.close()
+    assert not sess._bin_cubes

@@ -237,3 +237,59 @@ def test_speculation_candidates_are_nearest_first():
     cands = speculate_filters(SetFilter("x", lo=4, hi=6), 12, 6)
     dist = [abs(c.lo - 4) for c in cands]
     assert dist == sorted(dist)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10 satellite: speculation (and fan-out) after ToggleRelation removed
+# the relation carrying the anchored brush dimension
+# ---------------------------------------------------------------------------
+
+def test_speculation_skips_viz_that_no_longer_sees_brush_dim():
+    """Attr "c" lives only in relation S.  After ``ToggleRelation("S",
+    viz="by_e")`` the anchored σ(c) is unplaceable for by_e — background
+    speculation used to crash with ``KeyError("σ(c) not available in bag")``
+    and could park poisoned entries.  It must skip by_e (and the fan-out
+    must serve by_e *unfiltered*, per crossfilter semantics)."""
+    from repro.core import ToggleRelation
+
+    cat = star_catalog(seed=89)
+    t = Treant(cat, ring=sr.SUM, use_plans=True)
+    sess = t.open_session(star_spec(), name="s")
+    ev = SetFilter("c", lo=3, hi=6, source="by_c")
+    sess.apply(ev)
+    res = sess.apply(ToggleRelation("S", viz="by_e"))
+    # by_e re-renders without the now-invisible σ(c)
+    assert res.affected == ("by_e",)
+    assert not t.sees_attr(sess.derive("by_e"), "c")
+    # speculation must neither crash nor park entries for by_e
+    sess.idle(speculate=2)
+    assert sess._prefetched, "speculation produced nothing at all"
+    assert all(viz != "by_e" for viz, _ in sess._prefetched), (
+        "speculation parked an entry for a viz that cannot see the brush dim"
+    )
+    # the surviving candidates still serve: nearest re-brush is a pure hit
+    nearest = speculate_filters(ev, 10, 1)[0]
+    res2 = sess.apply(nearest)
+    for viz in ("by_a", "by_d"):
+        assert res2.results[viz].stats.prefetch_hits == 1
+    sess.close()
+
+
+def test_toggle_unfiltered_viz_matches_cold_execution():
+    """The σ-dropped derivation is bit-identical to a fresh session that
+    toggled the relation without ever brushing the dimension."""
+    import jax.numpy as jnp
+    from repro.core import ToggleRelation
+
+    cat = star_catalog(seed=97)
+    t = Treant(cat, ring=sr.SUM, use_plans=True)
+    sess = t.open_session(star_spec(), name="s")
+    sess.apply(SetFilter("c", lo=2, hi=5, source="by_c"))
+    warm = sess.apply(ToggleRelation("S", viz="by_e")).results["by_e"]
+    t2 = Treant(star_catalog(seed=97), ring=sr.SUM, use_plans=True)
+    s2 = t2.open_session(star_spec(), name="s2")
+    cold = s2.apply(ToggleRelation("S", viz="by_e")).results["by_e"]
+    assert warm.factor.attrs == cold.factor.attrs
+    assert jnp.array_equal(warm.factor.field, cold.factor.field)
+    sess.close()
+    s2.close()
